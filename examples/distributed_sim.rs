@@ -1,0 +1,81 @@
+//! Distributed-fabric simulation — §2 consequences 4–5 and footnote 4.
+//!
+//! Sweeps the machine count for a fixed screened workload and reports the
+//! modeled + measured makespan; compares the LPT scheduling policy with a
+//! naive round-robin; and demonstrates the capacity-negotiation loop (a
+//! component larger than p_max ⇒ raise λ to λ_{p_max} and retry).
+//!
+//! Run: `cargo run --release --example distributed_sim`
+
+use covthresh::coordinator::scheduler::{schedule_lpt, schedule_round_robin, CostModel};
+use covthresh::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::synthetic::block_instance_sizes;
+use covthresh::report::Table;
+use covthresh::screen::profile::weighted_edges;
+use covthresh::util::timer::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    // Heterogeneous blocks: makespan scheduling actually matters here.
+    let sizes = vec![60, 50, 40, 30, 20, 15, 12, 10, 8, 8, 6, 5, 4, 4, 3, 2];
+    let inst = block_instance_sizes(&sizes, 99);
+    let p = inst.s.rows();
+    let lambda = 0.9;
+    println!("instance: p={p}, {} planted blocks, λ={lambda}", sizes.len());
+
+    // --- machine-count sweep -------------------------------------------
+    let mut table = Table::new(
+        "machine sweep (measured block times, LPT schedule)",
+        &["machines", "serial", "makespan", "speedup", "efficiency"],
+    );
+    for m in [1usize, 2, 4, 8, 16] {
+        let coord = Coordinator::new(
+            NativeBackend::glasso(),
+            CoordinatorConfig { n_machines: m, ..Default::default() },
+        );
+        let report = coord.solve_screened(&inst.s, lambda)?;
+        let serial = report.global.serial_solve_secs();
+        let makespan = report.global.makespan_secs(m);
+        table.row(vec![
+            m.to_string(),
+            fmt_secs(serial),
+            fmt_secs(makespan),
+            format!("{:.2}x", serial / makespan.max(1e-12)),
+            format!("{:.0}%", 100.0 * serial / (makespan.max(1e-12) * m as f64)),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // --- scheduling-policy comparison (modeled cost) --------------------
+    let cost = CostModel::default();
+    let lpt = schedule_lpt(&sizes, 4, 1000, cost)?;
+    let rr = schedule_round_robin(&sizes, 4, 1000, cost)?;
+    println!(
+        "\npolicy (4 machines, modeled size³ cost): LPT makespan={:.2e} vs round-robin={:.2e} ({:.2}x better)",
+        lpt.makespan(),
+        rr.makespan(),
+        rr.makespan() / lpt.makespan()
+    );
+
+    // --- capacity negotiation -------------------------------------------
+    let p_max = 45usize; // the 60- and 50-blocks do not fit
+    let coord = Coordinator::new(
+        NativeBackend::glasso(),
+        CoordinatorConfig { capacity: p_max, ..Default::default() },
+    );
+    match coord.solve_screened(&inst.s, lambda) {
+        Err(e) => println!("\ncapacity {p_max}: rejected as expected → {e}"),
+        Ok(_) => unreachable!("blocks of 60 must not fit capacity 45"),
+    }
+    let lam_cap =
+        covthresh::screen::lambda_for_capacity(p, weighted_edges(&inst.s, 0.0), p_max);
+    println!("negotiated λ_{{p_max={p_max}}} = {lam_cap:.4}; retrying …");
+    let report = coord.solve_screened(&inst.s, lam_cap)?;
+    println!(
+        "accepted: {} components (max {}), serial {}",
+        report.global.partition.n_components(),
+        report.global.partition.max_component_size(),
+        fmt_secs(report.global.serial_solve_secs())
+    );
+    assert!(report.global.partition.max_component_size() <= p_max);
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! END-TO-END driver: the full three-layer stack serving a real workload.
+//!
+//! All layers compose here, with Python nowhere on the request path:
+//!   L1/L2  AOT JAX/Pallas `glasso_block` artifacts (built by
+//!          `make artifacts`), executed via PJRT;
+//!   L3     the Rust coordinator: screen → partition → LPT schedule →
+//!          bucket-padded dispatch → assembly.
+//!
+//! The workload: a queue of 60 graphical-lasso requests — 20 synthetic
+//! studies × a 3-point λ grid each (the shape of an exploratory
+//! regularization sweep a genomics user would run). Every response is
+//! KKT-certified online; the run reports latency percentiles, throughput,
+//! bucket-utilization, and the screened-vs-unscreened comparison on a
+//! sample, then writes `e2e_serving_report.json`.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_serving`
+
+use covthresh::coordinator::{Coordinator, CoordinatorConfig};
+use covthresh::datasets::synthetic::block_instance_sizes;
+use covthresh::runtime::XlaBackend;
+use covthresh::solvers::kkt::check_kkt;
+use covthresh::util::json::Json;
+use covthresh::util::rng::Xoshiro256;
+use covthresh::util::timer::{fmt_secs, Stopwatch};
+use covthresh::util::{mean, quantile};
+
+struct Request {
+    id: usize,
+    s: covthresh::linalg::Mat,
+    lambda: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    // ---- load the AOT artifacts (the "model load" step) ----------------
+    let backend = XlaBackend::load("artifacts").map_err(|e| {
+        anyhow::anyhow!("{e}\nhint: run `make artifacts` first to build the AOT bundle")
+    })?;
+    let sw = Stopwatch::start();
+    backend.warmup()?;
+    println!(
+        "PJRT backend up: {} (compiled {} buckets in {})",
+        covthresh::coordinator::BlockSolver::name(&backend),
+        backend.buckets().len(),
+        fmt_secs(sw.elapsed_secs())
+    );
+
+    // ---- build the request queue ---------------------------------------
+    let mut rng = Xoshiro256::seed_from_u64(2026);
+    let mut queue: Vec<Request> = Vec::new();
+    let mut id = 0;
+    for study in 0..20 {
+        // blocks sized within the largest bucket (128): realistic post-
+        // screen component spectra
+        let n_blocks = 2 + rng.uniform_usize(4);
+        let sizes: Vec<usize> = (0..n_blocks).map(|_| 2 + rng.uniform_usize(30)).collect();
+        let inst = block_instance_sizes(&sizes, 3000 + study as u64);
+        for lam in [0.95, 0.9, 0.85] {
+            queue.push(Request { id, s: inst.s.clone(), lambda: lam });
+            id += 1;
+        }
+    }
+    println!("queue: {} requests across 20 studies", queue.len());
+
+    // ---- serve -----------------------------------------------------------
+    let coord = Coordinator::new(
+        backend,
+        CoordinatorConfig { n_machines: 4, ..Default::default() },
+    );
+    let mut latencies = Vec::with_capacity(queue.len());
+    let mut certified = 0usize;
+    let total_sw = Stopwatch::start();
+    for req in &queue {
+        let sw = Stopwatch::start();
+        let report = coord.solve_screened(&req.s, req.lambda)?;
+        let latency = sw.elapsed_secs();
+        latencies.push(latency);
+
+        // online verification (Theorem 1 + KKT) on every response
+        let dense = report.global.theta_dense();
+        let kkt = check_kkt(&req.s, &dense, req.lambda, 5e-3);
+        assert!(kkt.satisfied, "request {}: KKT violated: {kkt:?}", req.id);
+        let conc = report.global.concentration_partition(1e-6);
+        assert!(
+            conc.is_refinement_of(&report.global.partition),
+            "request {}: concentration graph escaped the screen partition",
+            req.id
+        );
+        certified += 1;
+    }
+    let wall = total_sw.elapsed_secs();
+
+    // ---- report ----------------------------------------------------------
+    let p50 = quantile(&latencies, 0.5);
+    let p95 = quantile(&latencies, 0.95);
+    let p99 = quantile(&latencies, 0.99);
+    println!("\nserved {certified}/{} requests in {}", queue.len(), fmt_secs(wall));
+    println!(
+        "latency: mean={} p50={} p95={} p99={}   throughput={:.1} req/s",
+        fmt_secs(mean(&latencies)),
+        fmt_secs(p50),
+        fmt_secs(p95),
+        fmt_secs(p99),
+        queue.len() as f64 / wall
+    );
+    println!("bucket executions: {:?}", coord.backend.execution_counts());
+
+    // screened vs unscreened on one sampled request (the paper's headline)
+    let sample = &queue[0];
+    let screened = coord.solve_screened(&sample.s, sample.lambda)?;
+    let (un, un_secs) = coord.solve_unscreened(&sample.s, sample.lambda)?;
+    let diff = screened.global.theta_dense().max_abs_diff(&un.theta);
+    println!(
+        "\nsample request: screened={} unscreened={} (speedup {:.1}x, max|Δθ|={diff:.2e})",
+        fmt_secs(screened.solve_secs_serial()),
+        fmt_secs(un_secs),
+        un_secs / screened.solve_secs_serial().max(1e-12)
+    );
+
+    let mut out = Json::obj();
+    out.set("requests", queue.len().into())
+        .set("certified", certified.into())
+        .set("wall_secs", wall.into())
+        .set("throughput_rps", (queue.len() as f64 / wall).into())
+        .set("latency_mean_s", mean(&latencies).into())
+        .set("latency_p50_s", p50.into())
+        .set("latency_p95_s", p95.into())
+        .set("latency_p99_s", p99.into())
+        .set(
+            "bucket_executions",
+            Json::Arr(
+                coord
+                    .backend
+                    .execution_counts()
+                    .iter()
+                    .map(|&(b, c)| {
+                        let mut o = Json::obj();
+                        o.set("bucket", b.into()).set("count", c.into());
+                        o
+                    })
+                    .collect(),
+            ),
+        )
+        .set("sample_speedup_vs_unscreened", (un_secs / screened.solve_secs_serial().max(1e-12)).into());
+    std::fs::write("e2e_serving_report.json", out.to_string())?;
+    println!("wrote e2e_serving_report.json");
+    Ok(())
+}

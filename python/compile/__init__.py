@@ -1,0 +1,6 @@
+"""covthresh compile path: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Python runs ONCE at build time (`make artifacts`); the Rust coordinator
+loads the emitted HLO-text artifacts via PJRT and never calls back into
+Python on the request path.
+"""

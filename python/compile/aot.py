@@ -1,0 +1,141 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts for the Rust runtime.
+
+Run as `python -m compile.aot --out-dir ../artifacts` (the Makefile's
+`artifacts` target). Emits:
+
+- `glasso_block_{n}.hlo.txt` for each bucket n — the full fixed-iteration
+  GLASSO solve (S: f32[n,n], λ: f32[1]) → (Θ, W);
+- `threshold_mask_{p}.hlo.txt` — the tiled screen (S: f32[p,p], λ: f32[1])
+  → (mask, n_edges);
+- `gram_{n}x{p}.hlo.txt` — covariance construction (X: f32[n,p]) → S;
+- `manifest.json` — shapes/paths the Rust artifact registry consumes.
+
+HLO TEXT, not serialized protos: jax ≥ 0.5 emits 64-bit instruction ids
+that the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DEFAULT_BUCKETS = (16, 32, 64, 128)
+SCREEN_P = 256
+GRAM_SHAPE = (128, 256)  # (n, p)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_glasso_block(n: int) -> str:
+    s = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    lam = jax.ShapeDtypeStruct((1,), jnp.float32)
+    lowered = jax.jit(model.glasso_block).lower(s, lam)
+    return to_hlo_text(lowered)
+
+
+def lower_threshold_mask(p: int) -> str:
+    s = jax.ShapeDtypeStruct((p, p), jnp.float32)
+    lam = jax.ShapeDtypeStruct((1,), jnp.float32)
+    lowered = jax.jit(model.screen_graph).lower(s, lam)
+    return to_hlo_text(lowered)
+
+
+def lower_gram(n: int, p: int) -> str:
+    x = jax.ShapeDtypeStruct((n, p), jnp.float32)
+    lowered = jax.jit(model.covariance_gram).lower(x)
+    return to_hlo_text(lowered)
+
+
+def emit(out_dir: str, buckets=DEFAULT_BUCKETS, screen_p=SCREEN_P, gram_shape=GRAM_SHAPE):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"format": "hlo-text", "artifacts": []}
+
+    for n in buckets:
+        name = f"glasso_block_{n}"
+        path = f"{name}.hlo.txt"
+        text = lower_glasso_block(n)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "kind": "glasso_block",
+                "path": path,
+                "bucket": n,
+                "inputs": [["f32", [n, n]], ["f32", [1]]],
+                "outputs": [["f32", [n, n]], ["f32", [n, n]]],
+                "outer_sweeps": model.OUTER_SWEEPS,
+                "inner_sweeps": model.INNER_SWEEPS,
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    name = f"threshold_mask_{screen_p}"
+    path = f"{name}.hlo.txt"
+    text = lower_threshold_mask(screen_p)
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    manifest["artifacts"].append(
+        {
+            "name": name,
+            "kind": "threshold_mask",
+            "path": path,
+            "bucket": screen_p,
+            "inputs": [["f32", [screen_p, screen_p]], ["f32", [1]]],
+            "outputs": [["f32", [screen_p, screen_p]], ["f32", []]],
+        }
+    )
+    print(f"wrote {path} ({len(text)} chars)")
+
+    gn, gp = gram_shape
+    name = f"gram_{gn}x{gp}"
+    path = f"{name}.hlo.txt"
+    text = lower_gram(gn, gp)
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    manifest["artifacts"].append(
+        {
+            "name": name,
+            "kind": "gram",
+            "path": path,
+            "inputs": [["f32", [gn, gp]]],
+            "outputs": [["f32", [gp, gp]]],
+        }
+    )
+    print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default=",".join(str(b) for b in DEFAULT_BUCKETS),
+        help="comma-separated glasso block bucket sizes",
+    )
+    args = ap.parse_args()
+    buckets = tuple(int(b) for b in args.buckets.split(",") if b)
+    emit(args.out_dir, buckets=buckets)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1 Pallas kernels (build-time only; never imported at runtime).
+
+- `threshold_mask`: the O(p²) covariance screen (paper eq. 4), tiled.
+- `gram`: XᵀX sample-covariance construction, MXU-tiled.
+- `lasso_cd`: the GLASSO row sub-problem (paper eq. 9), VMEM-resident CD.
+- `ref`: pure numpy/jnp oracles for all of the above.
+"""
+
+from . import gram, lasso_cd, ref, threshold_mask  # noqa: F401

@@ -1,0 +1,57 @@
+"""Pallas kernel: tiled Gram matrix XᵀX — the O(n·p²) sample covariance
+construction (paper §3).
+
+TPU mapping (DESIGN.md §5): canonical MXU systolic tiling. Grid is
+(p/bm, p/bn, n/bk); the k axis streams row-blocks of X through VMEM while a
+(bm, bn) accumulator tile stays resident; `pl.when(k == 0)` zeroes it. With
+bm = bn = bk = 128 each step is a 128³ MAC block — the MXU-shaped unit.
+f32 accumulation (bf16 inputs would halve bandwidth on real hardware; the
+interpret path keeps f32 for exactness against the oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _gram_kernel(x_ref, y_ref, o_ref):
+    """o[i,j] += x_kᵀ · y_k for the current k-slice."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].T, y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def gram(
+    x: jax.Array,
+    bm: int = DEFAULT_BLOCK,
+    bn: int = DEFAULT_BLOCK,
+    bk: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """XᵀX for X of shape (n, p); n % bk == 0 and p % bm == p % bn == 0."""
+    n, p = x.shape
+    assert p % bm == 0 and p % bn == 0, f"p={p} not divisible by ({bm},{bn})"
+    assert n % bk == 0, f"n={n} not divisible by bk={bk}"
+    grid = (p // bm, p // bn, n // bk)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((p, p), jnp.float32),
+        interpret=True,
+    )(x, x)

@@ -1,0 +1,118 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package is checked against these references by
+``python/tests/test_kernels.py`` (hypothesis sweeps shapes/seeds). The
+``ref_glasso`` oracle additionally mirrors the Rust native GLASSO solver
+(block coordinate descent on W), giving a three-way consistency check:
+numpy oracle == Pallas/JAX model == Rust native solver.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def soft_threshold(x, t):
+    """Elementwise soft threshold S(x, t) = sign(x)(|x| - t)+."""
+    return np.sign(x) * np.maximum(np.abs(x) - t, 0.0)
+
+
+def ref_threshold_mask(s: np.ndarray, lam: float) -> np.ndarray:
+    """0/1 mask of the thresholded covariance graph (eq. 4): |S_ij| > lam,
+    diagonal forced to 0 (a node is not connected to itself)."""
+    mask = (np.abs(s) > lam).astype(np.float32)
+    np.fill_diagonal(mask, 0.0)
+    return mask
+
+
+def ref_edge_count(s: np.ndarray, lam: float) -> int:
+    """Number of undirected edges in the thresholded graph."""
+    return int(ref_threshold_mask(s, lam).sum()) // 2
+
+
+def ref_gram(x: np.ndarray) -> np.ndarray:
+    """Gram matrix XᵀX (the O(n·p²) covariance construction kernel)."""
+    return (x.T @ x).astype(np.float32)
+
+
+def ref_lasso_cd(
+    w: np.ndarray,
+    b: np.ndarray,
+    beta0: np.ndarray,
+    j: int,
+    lam: float,
+    sweeps: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Cyclic coordinate descent for the GLASSO row problem (paper eq. 9)
+    in canonical form min ½βᵀWβ − bᵀβ + λ‖β‖₁ with coordinate j pinned to 0.
+
+    Mirrors the Pallas `lasso_cd` kernel exactly (same sweep order, same
+    fixed iteration count). Returns (beta, vbeta = W @ beta).
+    """
+    n = b.shape[0]
+    beta = beta0.astype(np.float64).copy()
+    beta[j] = 0.0
+    vbeta = w.astype(np.float64) @ beta
+    for _ in range(sweeps):
+        for k in range(n):
+            if k == j:
+                continue
+            wkk = w[k, k]
+            bk = beta[k]
+            g = b[k] - (vbeta[k] - wkk * bk)
+            nb = float(soft_threshold(g, lam)) / wkk
+            delta = nb - bk
+            if delta != 0.0:
+                vbeta += delta * w[k, :]
+                beta[k] = nb
+    return beta, vbeta
+
+
+def ref_glasso(
+    s: np.ndarray,
+    lam: float,
+    outer_sweeps: int = 40,
+    inner_sweeps: int = 4,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fixed-iteration GLASSO block coordinate descent on W = Θ⁻¹.
+
+    Structured identically to the L2 JAX model (`model.glasso_block`):
+    same init (W = S + λI), same column order, same fixed sweep counts —
+    so the comparison is bit-for-bit in exact arithmetic. Returns (Θ, W).
+    """
+    n = s.shape[0]
+    s = s.astype(np.float64)
+    w = s.copy()
+    np.fill_diagonal(w, np.diag(s) + lam)
+    bmat = np.zeros((n, n))
+    # Early exit mirrors the L2 model: average |ΔW| per sweep below
+    # tol · mean|offdiag(S)| (computed in f32 like the model's threshold).
+    denom = max(n * (n - 1), 1)
+    offdiag_mass = np.abs(s).sum() - np.abs(np.diag(s)).sum()
+    thr = max(np.float32(1e-5) * np.float32(offdiag_mass) / np.float32(denom), 1e-12)
+    for _ in range(outer_sweeps):
+        change = 0.0
+        for j in range(n):
+            beta, vbeta = ref_lasso_cd(w, s[:, j], bmat[:, j], j, lam, inner_sweeps)
+            new_col = vbeta.copy()
+            new_col[j] = w[j, j]
+            change += np.abs(new_col - w[:, j]).sum()
+            w[:, j] = new_col
+            w[j, :] = new_col
+            bmat[:, j] = beta
+        if change / denom <= thr:
+            break
+    # Θ recovery: θ_jj = 1/(w_jj − w₁₂ᵀβ_j), θ_ij = −β_ij θ_jj.
+    w12_beta = np.einsum("ij,ij->j", w, bmat)  # bmat[j,j] = 0
+    t22 = 1.0 / (np.diag(w) - w12_beta)
+    theta = -bmat * t22[None, :]
+    np.fill_diagonal(theta, t22)
+    theta = 0.5 * (theta + theta.T)
+    return theta, w
+
+
+def ref_objective(s: np.ndarray, theta: np.ndarray, lam: float) -> float:
+    """Primal objective of problem (1)."""
+    sign, logdet = np.linalg.slogdet(theta)
+    assert sign > 0, "theta must be PD"
+    return float(-logdet + np.trace(s @ theta) + lam * np.abs(theta).sum())

@@ -1,0 +1,73 @@
+"""Pallas kernel: tiled covariance thresholding (paper eq. 4) — the O(p²)
+screen pass.
+
+TPU mapping (DESIGN.md §5): S streams HBM→VMEM in (TILE×TILE) blocks via a
+2-D BlockSpec grid; each tile emits its 0/1 adjacency block and an edge
+count, fused in a single pass (the roofline here is HBM bandwidth — the
+kernel touches each S entry exactly once). Elementwise → VPU-bound.
+Diagonal exclusion is the caller's job (zero the diagonal first), keeping
+the kernel branch-free.
+
+interpret=True throughout: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO (see /opt/xla-example).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 128
+
+
+def _threshold_kernel(s_ref, lam_ref, mask_ref, count_ref):
+    """One (TILE, TILE) tile: mask = |S| > λ, count = Σ mask."""
+    lam = lam_ref[0]
+    mask = (jnp.abs(s_ref[...]) > lam).astype(jnp.float32)
+    mask_ref[...] = mask
+    count_ref[0, 0] = jnp.sum(mask)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def threshold_mask(s: jax.Array, lam: jax.Array, tile: int = DEFAULT_TILE):
+    """Tiled threshold screen.
+
+    Args:
+      s: (p, p) symmetric matrix with ZERO diagonal (caller's contract).
+      lam: shape-(1,) threshold.
+      tile: VMEM tile edge; p must be a multiple (pad upstream otherwise).
+
+    Returns:
+      (mask, counts): (p, p) float32 0/1 adjacency matrix and the per-tile
+      edge-count grid (p/tile, p/tile) — Σ counts / 2 = |E(λ)|.
+    """
+    p = s.shape[0]
+    assert s.shape == (p, p), "s must be square"
+    assert p % tile == 0, f"p={p} must be a multiple of tile={tile}"
+    grid = (p // tile, p // tile)
+    return pl.pallas_call(
+        _threshold_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, p), jnp.float32),
+            jax.ShapeDtypeStruct(grid, jnp.float32),
+        ],
+        interpret=True,
+    )(s, lam)
+
+
+def edge_count(s: jax.Array, lam: jax.Array, tile: int = DEFAULT_TILE) -> jax.Array:
+    """|E(λ)| from the fused per-tile counts (symmetric S, zero diagonal)."""
+    _, counts = threshold_mask(s, lam, tile=tile)
+    return jnp.sum(counts) / 2.0

@@ -1,0 +1,180 @@
+"""L2 — the JAX compute graphs AOT-compiled for the Rust runtime.
+
+`glasso_block` is the paper's GLASSO (block coordinate descent on W,
+Friedman et al. 2007) over one connected component's S block, with the
+inner row problem delegated to the L1 Pallas `lasso_cd` kernel so both
+layers lower into a single HLO module. Iteration counts are static
+(AOT-compatible); the Rust coordinator picks the artifact whose bucket
+size fits the component and pads with isolated nodes — lossless by the
+paper's own Theorem 1 (padded nodes have |S_ij| = 0 ≤ λ).
+
+`screen_graph` is the L2 wrapper over the `threshold_mask` kernel
+(diagonal zeroing + tile padding), and `covariance_gram` over `gram`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gram import gram
+from .kernels.lasso_cd import lasso_cd
+from .kernels.threshold_mask import threshold_mask
+
+# Iteration policy baked into the AOT artifacts: the outer BCD loop is a
+# convergence-tested `lax.while_loop` (average |ΔW| per sweep below
+# TOL · mean|offdiag S|, the reference-glasso rule) capped at OUTER_SWEEPS;
+# the inner CD runs a fixed INNER_SWEEPS. The early exit matters: a fixed
+# 40-sweep budget made the p=100 artifact ~90× slower than the converged
+# native solver (EXPERIMENTS.md §Perf iteration L2-1).
+OUTER_SWEEPS = 40
+INNER_SWEEPS = 4
+TOL = 1e-5
+
+
+@functools.partial(jax.jit, static_argnames=("outer_sweeps", "inner_sweeps"))
+def glasso_block(
+    s: jax.Array,
+    lam: jax.Array,
+    outer_sweeps: int = OUTER_SWEEPS,
+    inner_sweeps: int = INNER_SWEEPS,
+):
+    """Solve problem (1) on one S block; returns (theta, w).
+
+    Args:
+      s: (n, n) symmetric covariance block.
+      lam: shape-(1,) float32 penalty.
+    """
+    n = s.shape[0]
+    assert s.shape == (n, n)
+    s = s.astype(jnp.float32)
+    w0 = s + lam[0] * jnp.eye(n, dtype=jnp.float32)
+    b0 = jnp.zeros((n, n), jnp.float32)
+
+    # Convergence threshold: tol · mean|offdiag(S)| (reference-glasso rule).
+    offdiag_mass = jnp.sum(jnp.abs(s)) - jnp.sum(jnp.abs(jnp.diag(s)))
+    denom = jnp.float32(max(n * (n - 1), 1))
+    thr = jnp.maximum(TOL * offdiag_mass / denom, jnp.float32(1e-12))
+
+    def column_update(j, carry):
+        w, bmat, change = carry
+        j_arr = jnp.array([0], jnp.int32) + j
+        beta, vbeta = lasso_cd(w, s[:, j], bmat[:, j], j_arr, lam, sweeps=inner_sweeps)
+        new_col = vbeta.at[j].set(w[j, j])
+        change = change + jnp.sum(jnp.abs(new_col - w[:, j]))
+        w = w.at[:, j].set(new_col)
+        w = w.at[j, :].set(new_col)
+        bmat = bmat.at[:, j].set(beta)
+        return w, bmat, change
+
+    def outer_cond(state):
+        w, bmat, it, avg_change = state
+        return jnp.logical_and(it < outer_sweeps, avg_change > thr)
+
+    def outer_body(state):
+        w, bmat, it, _ = state
+        w, bmat, change = jax.lax.fori_loop(
+            0, n, column_update, (w, bmat, jnp.float32(0.0))
+        )
+        return w, bmat, it + 1, change / denom
+
+    w, bmat, _, _ = jax.lax.while_loop(
+        outer_cond, outer_body, (w0, b0, jnp.int32(0), jnp.float32(jnp.inf))
+    )
+
+    # Θ recovery (Appendix A.1 block formulas), vectorized:
+    # θ_jj = 1/(w_jj − w₁₂ᵀβ_j); θ_ij = −β_ij θ_jj; then symmetrize.
+    w12_beta = jnp.einsum("ij,ij->j", w, bmat)  # bmat[j,j] = 0
+    t22 = 1.0 / (jnp.diag(w) - w12_beta)
+    theta = -bmat * t22[None, :]
+    theta = theta * (1.0 - jnp.eye(n, dtype=jnp.float32)) + jnp.diag(t22)
+    theta = 0.5 * (theta + theta.T)
+    return theta, w
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def screen_graph(s: jax.Array, lam: jax.Array, tile: int = 128):
+    """Thresholded covariance graph of a (p, p) S: (mask, n_edges).
+
+    Zeroes the diagonal (self-edges are excluded by convention, §1.1) and
+    delegates the tiled pass to the L1 kernel. p must be tile-aligned.
+    """
+    p = s.shape[0]
+    tile = min(tile, p)  # small screens use a single tile
+    s0 = s * (1.0 - jnp.eye(p, dtype=s.dtype))
+    mask, counts = threshold_mask(s0.astype(jnp.float32), lam, tile=tile)
+    return mask, jnp.sum(counts) / 2.0
+
+
+@jax.jit
+def covariance_gram(x: jax.Array) -> jax.Array:
+    """Sample covariance S = XᵀX / n for pre-centered X (n, p), via the
+    MXU-tiled Gram kernel. Block sizes clamp to the array shape (shapes
+    must still be multiples of the clamped block; pad upstream)."""
+    n, p = x.shape
+    blk = 128
+    return gram(
+        x.astype(jnp.float32), bm=min(blk, p), bn=min(blk, p), bk=min(blk, n)
+    ) / jnp.float32(n)
+
+
+def reference_glasso_jnp(s, lam, outer_sweeps=OUTER_SWEEPS, inner_sweeps=INNER_SWEEPS):
+    """Pure-jnp twin of `glasso_block` that bypasses the Pallas kernel —
+    used by tests to isolate kernel-vs-model discrepancies."""
+    n = s.shape[0]
+    s = s.astype(jnp.float32)
+    w = s + lam[0] * jnp.eye(n, dtype=jnp.float32)
+    bmat = jnp.zeros((n, n), jnp.float32)
+
+    def soft(x, t):
+        return jnp.sign(x) * jnp.maximum(jnp.abs(x) - t, 0.0)
+
+    offdiag_mass = jnp.sum(jnp.abs(s)) - jnp.sum(jnp.abs(jnp.diag(s)))
+    denom = jnp.float32(max(n * (n - 1), 1))
+    thr = jnp.maximum(TOL * offdiag_mass / denom, jnp.float32(1e-12))
+
+    def column_update(j, carry):
+        w, bmat, change = carry
+        beta = bmat[:, j] * (jnp.arange(n) != j)
+        vbeta = w @ beta
+
+        def coord(k, c):
+            beta, vbeta = c
+            wkk = w[k, k]
+            bk = beta[k]
+            g = s[k, j] - (vbeta[k] - wkk * bk)
+            nb = jnp.where(k == j, 0.0, soft(g, lam[0]) / wkk)
+            delta = nb - bk
+            return beta.at[k].set(nb), vbeta + delta * w[k, :]
+
+        def sweep(_, c):
+            return jax.lax.fori_loop(0, n, coord, c)
+
+        beta, vbeta = jax.lax.fori_loop(0, inner_sweeps, sweep, (beta, vbeta))
+        new_col = vbeta.at[j].set(w[j, j])
+        change = change + jnp.sum(jnp.abs(new_col - w[:, j]))
+        w = w.at[:, j].set(new_col)
+        w = w.at[j, :].set(new_col)
+        return w, bmat.at[:, j].set(beta), change
+
+    def outer_cond(state):
+        _, _, it, avg_change = state
+        return jnp.logical_and(it < outer_sweeps, avg_change > thr)
+
+    def outer_body(state):
+        w, bmat, it, _ = state
+        w, bmat, change = jax.lax.fori_loop(
+            0, n, column_update, (w, bmat, jnp.float32(0.0))
+        )
+        return w, bmat, it + 1, change / denom
+
+    w, bmat, _, _ = jax.lax.while_loop(
+        outer_cond, outer_body, (w, bmat, jnp.int32(0), jnp.float32(jnp.inf))
+    )
+    w12_beta = jnp.einsum("ij,ij->j", w, bmat)
+    t22 = 1.0 / (jnp.diag(w) - w12_beta)
+    theta = -bmat * t22[None, :]
+    theta = theta * (1.0 - jnp.eye(n, dtype=jnp.float32)) + jnp.diag(t22)
+    return 0.5 * (theta + theta.T), w

@@ -1,0 +1,150 @@
+"""L1 kernel correctness: Pallas kernels vs pure-numpy oracles.
+
+Hypothesis sweeps shapes/seeds; every property asserts allclose against
+`ref.py`. These tests are the build-time gate for the AOT artifacts.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.gram import gram
+from compile.kernels.lasso_cd import lasso_cd
+from compile.kernels.threshold_mask import threshold_mask
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def rand_sym(rng, p, scale=1.0):
+    a = rng.normal(size=(p, p)) * scale
+    s = 0.5 * (a + a.T)
+    np.fill_diagonal(s, 0.0)
+    return s.astype(np.float32)
+
+
+def rand_spd(rng, n, jitter=None):
+    a = rng.normal(size=(2 * n, n))
+    v = (a.T @ a / (2 * n)).astype(np.float64)
+    v += np.eye(n) * (jitter if jitter is not None else 0.5)
+    return v.astype(np.float32)
+
+
+# ---------------------------------------------------------------- threshold
+
+@given(
+    seed=st.integers(0, 10_000),
+    tiles=st.integers(1, 3),
+    lam=st.floats(0.0, 1.5),
+)
+def test_threshold_mask_matches_ref(seed, tiles, lam):
+    tile = 8
+    p = tile * tiles
+    rng = np.random.default_rng(seed)
+    s = rand_sym(rng, p)
+    mask, counts = threshold_mask(jnp.asarray(s), jnp.array([lam], jnp.float32), tile=tile)
+    expect = ref.ref_threshold_mask(s, lam)
+    np.testing.assert_array_equal(np.asarray(mask), expect)
+    assert int(np.asarray(counts).sum()) == int(expect.sum())
+
+
+def test_threshold_mask_boundary_strict():
+    # |S_ij| == λ must NOT be an edge (strict inequality in eq. 4)
+    s = np.zeros((8, 8), np.float32)
+    s[0, 1] = s[1, 0] = 0.5
+    mask, _ = threshold_mask(jnp.asarray(s), jnp.array([0.5], jnp.float32), tile=8)
+    assert np.asarray(mask).sum() == 0
+
+
+def test_threshold_mask_misaligned_rejected():
+    s = jnp.zeros((9, 9), jnp.float32)
+    with pytest.raises(AssertionError):
+        threshold_mask(s, jnp.array([0.1], jnp.float32), tile=8)
+
+
+# --------------------------------------------------------------------- gram
+
+@given(
+    seed=st.integers(0, 10_000),
+    nb=st.integers(1, 3),
+    pb=st.integers(1, 3),
+)
+def test_gram_matches_ref(seed, nb, pb):
+    blk = 8
+    n, p = blk * nb, blk * pb
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, p)).astype(np.float32)
+    got = np.asarray(gram(jnp.asarray(x), bm=blk, bn=blk, bk=blk))
+    np.testing.assert_allclose(got, ref.ref_gram(x), rtol=1e-5, atol=1e-4)
+
+
+def test_gram_symmetry():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(16, 24)).astype(np.float32)
+    g = np.asarray(gram(jnp.asarray(x), bm=8, bn=8, bk=8))
+    np.testing.assert_allclose(g, g.T, atol=1e-5)
+
+
+# ----------------------------------------------------------------- lasso_cd
+
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(3, 24),
+    lam=st.floats(0.01, 0.8),
+    sweeps=st.integers(1, 6),
+)
+def test_lasso_cd_matches_ref(seed, n, lam, sweeps):
+    rng = np.random.default_rng(seed)
+    w = rand_spd(rng, n)
+    b = rng.normal(size=n).astype(np.float32)
+    beta0 = np.zeros(n, np.float32)
+    j = int(rng.integers(0, n))
+    beta, vbeta = lasso_cd(
+        jnp.asarray(w),
+        jnp.asarray(b),
+        jnp.asarray(beta0),
+        jnp.array([j], jnp.int32),
+        jnp.array([lam], jnp.float32),
+        sweeps=sweeps,
+    )
+    eb, ev = ref.ref_lasso_cd(w, b, beta0, j, lam, sweeps)
+    np.testing.assert_allclose(np.asarray(beta), eb, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vbeta), ev, rtol=1e-4, atol=1e-4)
+    assert np.asarray(beta)[j] == 0.0
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(3, 16))
+def test_lasso_cd_large_lambda_zero(seed, n):
+    rng = np.random.default_rng(seed)
+    w = rand_spd(rng, n)
+    b = (rng.normal(size=n) * 0.1).astype(np.float32)
+    lam = float(np.abs(b).max()) + 0.1
+    beta, _ = lasso_cd(
+        jnp.asarray(w),
+        jnp.asarray(b),
+        jnp.zeros(n, jnp.float32),
+        jnp.array([0], jnp.int32),
+        jnp.array([lam], jnp.float32),
+        sweeps=2,
+    )
+    assert np.all(np.asarray(beta) == 0.0)
+
+
+def test_lasso_cd_warm_start_fixed_point():
+    # restarting from the converged solution must not move it
+    rng = np.random.default_rng(11)
+    n = 10
+    w = rand_spd(rng, n)
+    b = rng.normal(size=n).astype(np.float32)
+    args = (
+        jnp.asarray(w),
+        jnp.asarray(b),
+    )
+    j = jnp.array([2], jnp.int32)
+    lam = jnp.array([0.2], jnp.float32)
+    beta1, _ = lasso_cd(*args, jnp.zeros(n, jnp.float32), j, lam, sweeps=60)
+    beta2, _ = lasso_cd(*args, beta1, j, lam, sweeps=1)
+    np.testing.assert_allclose(np.asarray(beta1), np.asarray(beta2), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,127 @@
+"""L2 model correctness: the AOT-bound glasso_block vs oracles and KKT."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=8)
+settings.load_profile("ci")
+
+
+def rand_cov(rng, n):
+    a = rng.normal(size=(3 * n, n))
+    return (a.T @ a / (3 * n)).astype(np.float32)
+
+
+def lam_arr(x):
+    return jnp.array([x], jnp.float32)
+
+
+def test_diagonal_s_closed_form():
+    s = np.diag([1.0, 2.0, 0.5, 1.5]).astype(np.float32)
+    theta, w = model.glasso_block(jnp.asarray(s), lam_arr(0.2))
+    theta = np.asarray(theta)
+    for i in range(4):
+        assert abs(theta[i, i] - 1.0 / (s[i, i] + 0.2)) < 1e-5
+    offdiag = theta - np.diag(np.diag(theta))
+    assert np.abs(offdiag).max() < 1e-7
+    np.testing.assert_allclose(np.diag(np.asarray(w)), np.diag(s) + 0.2, rtol=1e-6)
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(2, 12))
+def test_model_matches_numpy_oracle(seed, n):
+    rng = np.random.default_rng(seed)
+    s = rand_cov(rng, n)
+    lam = 0.1
+    theta, w = model.glasso_block(
+        jnp.asarray(s), lam_arr(lam), outer_sweeps=15, inner_sweeps=3
+    )
+    et, ew = ref.ref_glasso(s, lam, outer_sweeps=15, inner_sweeps=3)
+    np.testing.assert_allclose(np.asarray(theta), et, rtol=5e-3, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(w), ew, rtol=5e-3, atol=5e-4)
+
+
+def test_kernel_and_jnp_variants_agree():
+    rng = np.random.default_rng(5)
+    s = rand_cov(rng, 10)
+    lam = lam_arr(0.15)
+    t1, w1 = model.glasso_block(jnp.asarray(s), lam, outer_sweeps=10, inner_sweeps=2)
+    t2, w2 = model.reference_glasso_jnp(jnp.asarray(s), lam, outer_sweeps=10, inner_sweeps=2)
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-5, atol=1e-6)
+
+
+def test_kkt_conditions_on_converged_solve():
+    rng = np.random.default_rng(7)
+    n = 8
+    s = rand_cov(rng, n)
+    lam = 0.1
+    theta, w = model.glasso_block(jnp.asarray(s), lam_arr(lam))
+    theta = np.asarray(theta, dtype=np.float64)
+    w_inv = np.linalg.inv(theta)
+    # KKT (11)-(12): |S - W|_ij <= lam on zeros; equality with sign on nonzeros
+    tol = 5e-3  # f32 artifact + fixed iterations
+    for i in range(n):
+        assert abs(w_inv[i, i] - s[i, i] - lam) < tol
+        for j in range(n):
+            if i == j:
+                continue
+            resid = s[i, j] - w_inv[i, j]
+            if abs(theta[i, j]) <= 1e-5:
+                assert abs(resid) <= lam + tol
+            else:
+                assert abs(-resid - lam * np.sign(theta[i, j])) < tol
+
+
+def test_padding_invariance():
+    """Theorem-1 padding guarantee: solving a padded block (extra isolated
+    identity nodes) must reproduce the unpadded solution on the real part —
+    this is what licenses the Rust runtime's bucket padding."""
+    rng = np.random.default_rng(9)
+    n, pad = 6, 10
+    s = rand_cov(rng, n)
+    lam = 0.12
+    theta_small, _ = model.glasso_block(jnp.asarray(s), lam_arr(lam))
+    s_pad = np.eye(pad, dtype=np.float32)
+    s_pad[:n, :n] = s
+    theta_pad, _ = model.glasso_block(jnp.asarray(s_pad), lam_arr(lam))
+    theta_pad = np.asarray(theta_pad)
+    np.testing.assert_allclose(
+        theta_pad[:n, :n], np.asarray(theta_small), rtol=1e-4, atol=1e-5
+    )
+    # cross terms exactly zero, pad diagonal = 1/(1+lam)
+    assert np.abs(theta_pad[:n, n:]).max() == 0.0
+    np.testing.assert_allclose(
+        np.diag(theta_pad)[n:], 1.0 / (1.0 + lam), rtol=1e-5
+    )
+
+
+def test_screen_graph_zeroes_diagonal():
+    s = np.eye(256, dtype=np.float32)  # unit diagonal, no off-diag
+    mask, edges = model.screen_graph(jnp.asarray(s), lam_arr(0.5))
+    assert float(edges) == 0.0
+    assert np.asarray(mask).sum() == 0.0
+
+
+def test_screen_graph_counts():
+    p = 256
+    s = np.zeros((p, p), np.float32)
+    s[0, 5] = s[5, 0] = 0.9
+    s[100, 200] = s[200, 100] = -0.7
+    s[3, 4] = s[4, 3] = 0.2
+    mask, edges = model.screen_graph(jnp.asarray(s), lam_arr(0.5))
+    assert float(edges) == 2.0
+    m = np.asarray(mask)
+    assert m[0, 5] == 1.0 and m[200, 100] == 1.0 and m[3, 4] == 0.0
+
+
+def test_covariance_gram_matches_numpy():
+    rng = np.random.default_rng(13)
+    x = rng.normal(size=(128, 256)).astype(np.float32)
+    s = np.asarray(model.covariance_gram(jnp.asarray(x)))
+    np.testing.assert_allclose(s, x.T @ x / 128.0, rtol=1e-4, atol=1e-4)

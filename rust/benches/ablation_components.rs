@@ -1,0 +1,134 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   1. warm vs cold starts along the λ path (Theorem-2 reuse);
+//!   2. LPT vs round-robin scheduling (makespan, modeled + measured);
+//!   3. native vs XLA backend per block size (AOT fixed-budget trade-off);
+//!   4. node-screen check (10) on/off inside GLASSO (§2.1's observation);
+//!   5. bucket-padding overhead (size just above vs at a bucket edge).
+//!
+//! Run: `cargo bench --bench ablation_components`
+
+use covthresh::bench_harness::{bench_auto, fmt_time};
+use covthresh::coordinator::path::solve_path;
+use covthresh::coordinator::scheduler::{schedule_lpt, schedule_round_robin, CostModel};
+use covthresh::coordinator::{BlockSolver, Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::synthetic::{block_instance, block_instance_sizes};
+use covthresh::linalg::Mat;
+use covthresh::runtime::XlaBackend;
+use covthresh::screen::grid::uniform_grid_desc;
+use covthresh::solvers::{SolverKind, SolverOptions};
+use covthresh::util::rng::Xoshiro256;
+
+fn random_cov(p: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let x = Mat::from_fn(3 * p, p, |_, _| rng.gaussian());
+    let mut s = covthresh::linalg::syrk_t(&x);
+    s.scale(1.0 / (3 * p) as f64);
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== ablation 1: warm vs cold λ-path (4×30 blocks, 10 λ) ==");
+    {
+        let inst = block_instance(4, 30, 7);
+        let coord = Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default());
+        let grid = uniform_grid_desc(1.05, 0.82, 10);
+        let warm = bench_auto("path/warm", 3.0, || {
+            solve_path(&coord, &inst.s, &grid, true).unwrap().total_solve_secs()
+        });
+        let cold = bench_auto("path/cold", 3.0, || {
+            solve_path(&coord, &inst.s, &grid, false).unwrap().total_solve_secs()
+        });
+        println!("{}", warm.summary());
+        println!("{}", cold.summary());
+        println!("warm/cold mean ratio: {:.2}", warm.mean_s / cold.mean_s);
+    }
+
+    println!("\n== ablation 2: LPT vs round-robin (16 skewed blocks, 4 machines) ==");
+    {
+        let sizes = vec![60, 50, 40, 30, 20, 15, 12, 10, 8, 8, 6, 5, 4, 4, 3, 2];
+        let cost = CostModel::default();
+        let lpt = schedule_lpt(&sizes, 4, 1000, cost)?;
+        let rr = schedule_round_robin(&sizes, 4, 1000, cost)?;
+        println!(
+            "modeled makespan: LPT={:.3e} RR={:.3e} (RR/LPT = {:.2})",
+            lpt.makespan(),
+            rr.makespan(),
+            rr.makespan() / lpt.makespan()
+        );
+        // measured: run blocks under both schedules
+        let inst = block_instance_sizes(&sizes, 99);
+        for (name, sched) in [("LPT", &lpt), ("RR", &rr)] {
+            let coord = Coordinator::new(
+                NativeBackend::glasso(),
+                CoordinatorConfig { n_machines: 4, ..Default::default() },
+            );
+            let report = coord.solve_screened(&inst.s, 0.9)?;
+            // re-attribute measured block times to the candidate schedule
+            let mut loads = vec![0.0f64; 4];
+            for (c, b) in report.global.blocks.iter().enumerate() {
+                loads[sched.machine_of[c.min(sched.machine_of.len() - 1)]] += b.secs;
+            }
+            let makespan = loads.iter().copied().fold(0.0, f64::max);
+            println!("measured makespan under {name}: {}", fmt_time(makespan));
+        }
+    }
+
+    println!("\n== ablation 3: native vs XLA backend per block size ==");
+    match XlaBackend::load("artifacts") {
+        Err(e) => println!("skipped (artifacts not built): {e}"),
+        Ok(xla) => {
+            xla.warmup()?;
+            let native = NativeBackend::glasso();
+            for p in [8usize, 16, 31, 64, 100] {
+                let s = random_cov(p, p as u64);
+                let a = bench_auto(&format!("native/p{p}"), 1.5, || {
+                    native.solve_block(&s, 0.1, None).unwrap()
+                });
+                let b = bench_auto(&format!("xla/p{p}"), 1.5, || {
+                    xla.solve_block(&s, 0.1, None).unwrap()
+                });
+                println!("{}", a.summary());
+                println!("{}", b.summary());
+            }
+        }
+    }
+
+    println!("\n== ablation 4: GLASSO node-screen check (10) on/off ==");
+    {
+        // many near-isolated nodes: the check short-circuits whole columns
+        let inst = block_instance(2, 20, 5);
+        let mut s = Mat::eye(140);
+        for i in 0..40 {
+            for j in 0..40 {
+                s.set(i, j, inst.s.get(i, j));
+            }
+        }
+        let lambda = 0.9;
+        for (name, check) in [("with-check", true), ("without-check", false)] {
+            let backend = NativeBackend::new(
+                SolverKind::Glasso,
+                SolverOptions { node_screen_check: check, ..Default::default() },
+            );
+            let stats = bench_auto(&format!("glasso-full/{name}"), 3.0, || {
+                backend.solve_block(&s, lambda, None).unwrap()
+            });
+            println!("{}", stats.summary());
+        }
+    }
+
+    println!("\n== ablation 5: bucket-padding overhead ==");
+    match XlaBackend::load("artifacts") {
+        Err(e) => println!("skipped (artifacts not built): {e}"),
+        Ok(xla) => {
+            xla.warmup()?;
+            for (p, note) in [(64usize, "exact bucket"), (65, "pads 65→128")] {
+                let s = random_cov(p, 7);
+                let stats = bench_auto(&format!("xla/p{p} ({note})"), 2.0, || {
+                    xla.solve_block(&s, 0.1, None).unwrap()
+                });
+                println!("{}", stats.summary());
+            }
+        }
+    }
+    Ok(())
+}

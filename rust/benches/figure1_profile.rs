@@ -1,0 +1,91 @@
+//! Figure 1 — component-size distribution of the thresholded covariance
+//! graph across λ, for the three microarray examples (A), (B), (C).
+//!
+//! Default sizes are scaled; `FULL=1` uses the paper's p = 2000 / 4718 /
+//! 24481 (example (C) takes a few minutes: the screen runs straight off
+//! the standardized data matrix, never materializing the 24481² matrix).
+//!
+//! Output: ASCII heat-table per example (the paper's Figure 1 panels) and
+//! `bench_out/figure1_{a,b,c}.csv` with (lambda, size, count) triples.
+//!
+//! Run: `cargo bench --bench figure1_profile`
+
+use covthresh::datasets::covariance::standardize_columns;
+use covthresh::datasets::microarray;
+use covthresh::report::render_figure1;
+use covthresh::screen::profile::{lambda_for_capacity, profile_grid};
+use covthresh::screen::stream::edges_above_from_standardized;
+use covthresh::util::timer::{fmt_secs, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("FULL").map(|v| v == "1").unwrap_or(false);
+    // (name, config, component-size cap): the paper caps Figure 1 at 1500.
+    let cases: Vec<(&str, microarray::MicroarrayConfig, usize)> = if full {
+        vec![
+            ("A", microarray::example_a(1), 1500),
+            ("B", microarray::example_b(2), 1500),
+            ("C", microarray::example_c(3), 1500),
+        ]
+    } else {
+        vec![
+            ("A", microarray::scaled(&microarray::example_a(1), 1000, 62), 400),
+            ("B", microarray::scaled(&microarray::example_b(2), 1600, 200), 500),
+            ("C", microarray::scaled(&microarray::example_c(3), 2600, 150), 650),
+        ]
+    };
+
+    for (name, cfg, cap) in cases {
+        println!("\n=== example ({name}): p={} n={} cap={cap} ===", cfg.p, cfg.n);
+        let sw = Stopwatch::start();
+        let (x, _, n_imputed) = microarray::generate_data(&cfg);
+        let mut z = x;
+        standardize_columns(&mut z);
+        println!("data generated in {} ({n_imputed} imputed)", fmt_secs(sw.elapsed_secs()));
+
+        // Screen straight from the data matrix. The profile floor is the
+        // λ at which the largest component reaches the cap — found on a
+        // coarse pre-pass, then edges above a slightly lower floor are kept.
+        let sw = Stopwatch::start();
+        let probe_floor = 0.3; // comfortably below any cap-λ for these studies
+        let edges = edges_above_from_standardized(&z, probe_floor, 768);
+        let screen_secs = sw.elapsed_secs();
+        println!(
+            "streamed screen: {} edges with |corr| > {probe_floor} in {}",
+            edges.len(),
+            fmt_secs(screen_secs)
+        );
+
+        let sw = Stopwatch::start();
+        let lam_cap = lambda_for_capacity(cfg.p, edges.clone(), cap);
+        println!(
+            "λ'_min (max component ≤ {cap}) = {:.4} found in {}",
+            lam_cap,
+            fmt_secs(sw.elapsed_secs())
+        );
+        let floor = lam_cap.max(probe_floor);
+        let top = edges.iter().map(|e| e.w).fold(0.0f64, f64::max);
+        let grid = covthresh::screen::grid::uniform_grid_desc(top, floor, 25);
+
+        let sw = Stopwatch::start();
+        let profile = profile_grid(cfg.p, edges, &grid);
+        println!("profile over {} λ values in {}", grid.len(), fmt_secs(sw.elapsed_secs()));
+        print!("{}", render_figure1(&profile, cap));
+
+        let rows: Vec<Vec<String>> = profile
+            .iter()
+            .flat_map(|pt| {
+                pt.histogram.iter().map(move |(size, count)| {
+                    vec![format!("{:.6}", pt.lambda), size.to_string(), count.to_string()]
+                })
+            })
+            .collect();
+        let path = format!("bench_out/figure1_{}.csv", name.to_lowercase());
+        covthresh::report::write_csv(
+            std::path::Path::new(&path),
+            &["lambda", "size", "count"],
+            &rows,
+        )?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

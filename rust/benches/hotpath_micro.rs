@@ -1,0 +1,90 @@
+//! Hot-path microbenchmarks — the §Perf profile targets.
+//!
+//! screen pass (threshold_edges), connected components (BFS vs union-find
+//! vs incremental sweep), block extraction, lasso-CD inner solve, gemm /
+//! syrk, Cholesky, and the assembled end-to-end screened solve.
+//!
+//! Run: `cargo bench --bench hotpath_micro` (BENCH_FILTER=<substr> to pick)
+
+use covthresh::bench_harness::BenchRunner;
+use covthresh::coordinator::{partition_with, Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::microarray;
+use covthresh::datasets::synthetic::block_instance;
+use covthresh::graph::{components_bfs, components_union_find, CsrGraph};
+use covthresh::linalg::{gemm, syrk_t, Cholesky, Mat};
+use covthresh::screen::profile::{profile_grid, weighted_edges};
+use covthresh::screen::threshold_edges;
+use covthresh::solvers::lasso_cd::solve_lasso_cd;
+use covthresh::util::rng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    let mut r = BenchRunner::new();
+
+    // --- screen pass over a p=2000 correlation matrix (example (A) size)
+    let cfg = microarray::scaled(&microarray::example_a(1), 2000, 62);
+    let study = microarray::generate(&cfg);
+    let lambda = 0.5;
+    r.run("screen/threshold_edges p=2000", 3.0, || threshold_edges(&study.s, lambda));
+
+    let edges = threshold_edges(&study.s, lambda);
+    let p = study.s.rows();
+    println!("  (screen yields {} edges at λ={lambda})", edges.len());
+
+    // --- components: BFS vs union-find vs incremental sweep
+    r.run("cc/bfs p=2000", 2.0, || {
+        let g = CsrGraph::from_edges(p, &edges);
+        components_bfs(&g)
+    });
+    r.run("cc/union_find p=2000", 2.0, || components_union_find(p, &edges));
+    let wedges = weighted_edges(&study.s, 0.3);
+    r.run("cc/incremental_sweep 25λ", 2.0, || {
+        let grid: Vec<f64> = (0..25).map(|t| 0.9 - 0.55 * t as f64 / 24.0).collect();
+        profile_grid(p, wedges.clone(), &grid)
+    });
+
+    // --- block extraction
+    let partition = components_union_find(p, &edges);
+    r.run("partition/extract_blocks", 2.0, || {
+        partition_with(&study.s, partition.clone())
+    });
+
+    // --- lasso CD inner solve
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    for n in [32usize, 128, 256] {
+        let x = Mat::from_fn(2 * n, n, |_, _| rng.gaussian());
+        let mut v = syrk_t(&x);
+        v.scale(1.0 / (2 * n) as f64);
+        for i in 0..n {
+            v.add_at(i, i, 0.5);
+        }
+        let b: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        r.run(&format!("lasso_cd/n{n} cold"), 2.0, || {
+            let mut beta = vec![0.0; n];
+            solve_lasso_cd(&v, &b, 0.1, &mut beta, 1e-7, 200)
+        });
+    }
+
+    // --- dense kernels
+    for n in [64usize, 128, 256] {
+        let a = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        r.run(&format!("linalg/gemm n{n}"), 2.0, || gemm(&a, &a));
+        r.run(&format!("linalg/syrk n{n}"), 2.0, || syrk_t(&a));
+        let mut spd = syrk_t(&a);
+        for i in 0..n {
+            spd.add_at(i, i, n as f64);
+        }
+        r.run(&format!("linalg/cholesky n{n}"), 2.0, || Cholesky::new(&spd).unwrap());
+        let ch = Cholesky::new(&spd).unwrap();
+        r.run(&format!("linalg/chol_inverse n{n}"), 2.0, || ch.inverse());
+    }
+
+    // --- end-to-end screened solve (Table-1 small case)
+    let inst = block_instance(5, 60, 9);
+    let coord = Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default());
+    r.run("e2e/screened_solve K=5 p1=60", 5.0, || {
+        coord.solve_screened(&inst.s, 0.9).unwrap()
+    });
+
+    println!("\n{} benches done", r.results().len());
+    Ok(())
+}

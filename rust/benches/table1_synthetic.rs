@@ -1,0 +1,95 @@
+//! Table 1 — synthetic block-diagonal instances: GLASSO & SMACS timings
+//! with/without screening, speedup factor, graph-partition time.
+//!
+//! Default sizes are scaled for a quick run; set `FULL=1` for the paper's
+//! (K, p1) grid {(2,200),(2,500),(5,300),(5,500),(8,300)}. Unscreened
+//! solves above `NOSCREEN_MAX_P` (default 1200) are skipped and reported
+//! as "-", mirroring the paper's did-not-finish entries.
+//!
+//! Run: `cargo bench --bench table1_synthetic`
+
+use covthresh::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::synthetic::block_instance;
+use covthresh::report::Table;
+use covthresh::screen::grid::table1_lambdas;
+use covthresh::screen::profile::weighted_edges;
+use covthresh::solvers::{SolverKind, SolverOptions};
+use covthresh::util::timer::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("FULL").map(|v| v == "1").unwrap_or(false);
+    let noscreen_max_p: usize = std::env::var("NOSCREEN_MAX_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1200);
+    let configs: &[(usize, usize)] = if full {
+        &[(2, 200), (2, 500), (5, 300), (5, 500), (8, 300)]
+    } else {
+        &[(2, 60), (2, 100), (5, 60), (5, 100), (8, 60)]
+    };
+    // Paper §4.1 settings: tol 1e-5, max 1000 iterations.
+    let opts = SolverOptions { tol: 1e-5, max_iter: 1000, ..Default::default() };
+
+    let mut table = Table::new(
+        &format!(
+            "Table 1 reproduction (synthetic blkdiag; {} sizes)",
+            if full { "paper" } else { "scaled" }
+        ),
+        &["K", "p1/p", "lambda", "algorithm", "with screen", "without screen", "speedup", "graph partition"],
+    );
+
+    for &(k, p1) in configs {
+        let inst = block_instance(k, p1, 1000 + (k * p1) as u64);
+        let p = k * p1;
+        let edges = weighted_edges(&inst.s, 0.0);
+        let (lam_i, lam_ii) = table1_lambdas(p, edges, k).expect("exact-K interval exists");
+        // λ_II is the open right end of the exact-K interval; step just
+        // inside it so the thresholded graph has exactly K components.
+        let lam_ii = lam_ii * (1.0 - 1e-9);
+
+        for (label, lambda) in [("l_I", lam_i), ("l_II", lam_ii)] {
+            for kind in [SolverKind::Glasso, SolverKind::Smacs] {
+                let coord = Coordinator::new(
+                    NativeBackend::new(kind, opts.clone()),
+                    CoordinatorConfig::default(),
+                );
+                let report = coord.solve_screened(&inst.s, lambda)?;
+                assert_eq!(
+                    report.global.partition.n_components(),
+                    k,
+                    "expected exactly K components at {label}"
+                );
+                let with_screen = report.solve_secs_serial();
+                let partition_time = report.partition_secs();
+
+                let (without_str, speedup_str) = if p <= noscreen_max_p {
+                    let (_, without) = coord.solve_unscreened(&inst.s, lambda)?;
+                    (fmt_secs(without), format!("{:.2}", without / with_screen.max(1e-12)))
+                } else {
+                    ("-".to_string(), "-".to_string())
+                };
+
+                table.row(vec![
+                    k.to_string(),
+                    format!("{p1}/{p}"),
+                    format!("{label}={lambda:.3}"),
+                    kind.name().to_string(),
+                    fmt_secs(with_screen),
+                    without_str,
+                    speedup_str,
+                    fmt_secs(partition_time),
+                ]);
+                eprintln!("done: K={k} p={p} {label} {}", kind.name());
+            }
+        }
+    }
+
+    print!("{}", table.render());
+    covthresh::report::write_csv(
+        std::path::Path::new("bench_out/table1.csv"),
+        &table.csv_header(),
+        &table.csv_rows(),
+    )?;
+    println!("wrote bench_out/table1.csv");
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Table 2 — example (A): GLASSO & SMACS with/without screening over two
+//! λ ranges (sparse regime: tiny components; denser regime: a few hundred
+//! nodes in the largest block). Times are summed across 10 λ values per
+//! regime, exactly the paper's protocol (§4.2: tol 1e-4, ≤ 500 iters).
+//!
+//! Scaled by default (p=600); `FULL=1` → the paper's p=2000.
+//! Unscreened solves are skipped above `NOSCREEN_MAX_P` (default 800).
+//!
+//! Run: `cargo bench --bench table2_microarray_a`
+
+use covthresh::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::microarray;
+use covthresh::report::Table;
+use covthresh::screen::profile::{lambda_for_capacity, weighted_edges};
+use covthresh::solvers::{SolverKind, SolverOptions};
+use covthresh::util::timer::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("FULL").map(|v| v == "1").unwrap_or(false);
+    let noscreen_max_p: usize = std::env::var("NOSCREEN_MAX_P")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500);
+    // Unscreened runs get an iteration cap so the slow baseline terminates;
+    // capped-and-unconverged entries are flagged '*' exactly as the paper's
+    // Table 1 flags SMACS non-convergence.
+    let unscreen_max_iter: usize = std::env::var("UNSCREEN_MAX_ITER")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if full { 500 } else { 120 });
+    let cfg = if full {
+        microarray::example_a(1)
+    } else {
+        microarray::scaled(&microarray::example_a(1), 400, 62)
+    };
+    let p = cfg.p;
+    println!("generating example (A): p={p} n={} …", cfg.n);
+    let study = microarray::generate(&cfg);
+    let edges = weighted_edges(&study.s, 0.0);
+
+    // Two regimes via capacity targets (the paper reports avg max component
+    // sizes of 5 and 727 at p=2000; scale the targets with p).
+    let small_cap = (5 * p / 2000).max(4);
+    let large_cap = (727 * p / 2000).max(40);
+    let lam_hi = lambda_for_capacity(p, edges.clone(), small_cap);
+    let lam_lo = lambda_for_capacity(p, edges.clone(), large_cap);
+    println!(
+        "regimes: sparse λ∈[{lam_hi:.4}, …] (cap {small_cap}), denser λ∈[{lam_lo:.4}, …] (cap {large_cap})"
+    );
+
+    // paper §4.2 convergence: 1e-4, max 500 iterations
+    let opts = SolverOptions { tol: 1e-4, max_iter: 500, ..Default::default() };
+
+    let mut table = Table::new(
+        &format!("Table 2 reproduction (example (A), p={p}; 10 λ per regime)"),
+        &["avg max comp", "algorithm", "with screen", "without screen", "speedup", "graph partition"],
+    );
+
+    for (cap_lambda, _regime) in [(lam_hi, "sparse"), (lam_lo, "denser")] {
+        // 10 λ values spread just above the regime threshold
+        let lambdas: Vec<f64> = (0..10).map(|t| cap_lambda * (1.0 + 0.02 * (t + 1) as f64)).collect();
+        for kind in [SolverKind::Glasso, SolverKind::Smacs] {
+            let coord = Coordinator::new(
+                NativeBackend::new(kind, opts.clone()),
+                CoordinatorConfig::default(),
+            );
+            let unscreen_coord = Coordinator::new(
+                NativeBackend::new(
+                    kind,
+                    SolverOptions { max_iter: unscreen_max_iter, ..opts.clone() },
+                ),
+                CoordinatorConfig::default(),
+            );
+            let mut with_total = 0.0;
+            let mut partition_total = 0.0;
+            let mut maxcomp_total = 0usize;
+            let mut without_total = 0.0;
+            let mut without_ran = true;
+            let mut without_converged = true;
+            for &lam in &lambdas {
+                let report = coord.solve_screened(&study.s, lam)?;
+                with_total += report.solve_secs_serial();
+                partition_total += report.partition_secs();
+                maxcomp_total += report.global.partition.max_component_size();
+                if p <= noscreen_max_p {
+                    let (sol, secs) = unscreen_coord.solve_unscreened(&study.s, lam)?;
+                    without_total += secs;
+                    without_converged &= sol.converged;
+                } else {
+                    without_ran = false;
+                }
+            }
+            let avg_max = maxcomp_total as f64 / lambdas.len() as f64;
+            table.row(vec![
+                format!("{avg_max:.0}"),
+                kind.name().to_string(),
+                fmt_secs(with_total),
+                if without_ran {
+                    format!("{}{}", fmt_secs(without_total), if without_converged { "" } else { "*" })
+                } else {
+                    "-".into()
+                },
+                if without_ran {
+                    format!("{:.1}", without_total / with_total.max(1e-12))
+                } else {
+                    "-".into()
+                },
+                fmt_secs(partition_total),
+            ]);
+            eprintln!("done: regime cap λ={cap_lambda:.4} {}", kind.name());
+        }
+    }
+
+    print!("{}", table.render());
+    covthresh::report::write_csv(
+        std::path::Path::new("bench_out/table2.csv"),
+        &table.csv_header(),
+        &table.csv_rows(),
+    )?;
+    println!("wrote bench_out/table2.csv");
+    Ok(())
+}

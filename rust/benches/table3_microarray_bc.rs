@@ -1,0 +1,128 @@
+//! Table 3 — examples (B) and (C): average per-λ solve time with the
+//! screening rule over a 100-value λ grid (the top 2% of sorted |S_ij|
+//! below λ_500, the smallest λ whose max component is ≤ 500). At these
+//! sizes the unscreened problem is out of reach — "the screening rule is
+//! apparently the only way" (§4.2) — so only screened runs are timed.
+//!
+//! Scaled by default; `FULL=1` → p=4718 / p=24481.
+//!
+//! Run: `cargo bench --bench table3_microarray_bc`
+
+use covthresh::coordinator::{partition_with, Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::covariance::standardize_columns;
+use covthresh::datasets::microarray;
+use covthresh::graph::components_union_find;
+use covthresh::report::Table;
+use covthresh::screen::grid::quantile_grid_below;
+use covthresh::screen::profile::lambda_for_capacity;
+use covthresh::screen::stream::edges_above_from_standardized;
+use covthresh::solvers::{SolverKind, SolverOptions};
+use covthresh::util::timer::{fmt_secs, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::var("FULL").map(|v| v == "1").unwrap_or(false);
+    let cases: Vec<(&str, microarray::MicroarrayConfig, usize)> = if full {
+        vec![
+            ("B", microarray::example_b(2), 500),
+            ("C", microarray::example_c(3), 500),
+        ]
+    } else {
+        vec![
+            ("B", microarray::scaled(&microarray::example_b(2), 1200, 200), 160),
+            ("C", microarray::scaled(&microarray::example_c(3), 2000, 150), 220),
+        ]
+    };
+    let opts = SolverOptions { tol: 1e-4, max_iter: 500, ..Default::default() };
+
+    let mut table = Table::new(
+        "Table 3 reproduction (100-λ grids, screening only)",
+        &["example/p", "avg max comp", "GLASSO(s)", "SMACS(s)", "graph partition(s)"],
+    );
+
+    for (name, cfg, cap) in cases {
+        let p = cfg.p;
+        println!("\n=== example ({name}): p={p} n={} cap={cap} ===", cfg.n);
+        let (x, _, _) = microarray::generate_data(&cfg);
+        let mut z = x;
+        standardize_columns(&mut z);
+        let sw = Stopwatch::start();
+        let edges = edges_above_from_standardized(&z, 0.3, 768);
+        println!("streamed screen: {} edges in {}", edges.len(), fmt_secs(sw.elapsed_secs()));
+
+        let lam_cap = lambda_for_capacity(p, edges.clone(), cap);
+        // top 2% of |S_ij| below λ_cap, subsampled to 100 values
+        // (60 at scaled sizes to keep the default run short)
+        let n_grid = if full { 100 } else { 60 };
+        let grid = quantile_grid_below(&edges, lam_cap.max(0.31), 0.02, n_grid);
+        println!("λ grid: {} values in [{:.4}, {:.4}]", grid.len(),
+                 grid.last().copied().unwrap_or(0.0), grid.first().copied().unwrap_or(0.0));
+
+        // Build correlation lookups per λ via the edge list (weights are
+        // |corr|; exact signed values rebuilt per block from Z).
+        let mut s_like = covthresh::linalg::Mat::eye(p);
+        for e in &edges {
+            s_like.set(e.i as usize, e.j as usize, e.w);
+            s_like.set(e.j as usize, e.i as usize, e.w);
+        }
+        let inv_n = 1.0 / z.rows() as f64;
+
+        let mut glasso_total = 0.0;
+        let mut smacs_total = 0.0;
+        let mut partition_total = 0.0;
+        let mut maxcomp_total = 0usize;
+        for &lam in &grid {
+            let sw = Stopwatch::start();
+            let active: Vec<(u32, u32)> =
+                edges.iter().filter(|e| e.w > lam).map(|e| (e.i, e.j)).collect();
+            let partition = components_union_find(p, &active);
+            partition_total += sw.elapsed_secs();
+            maxcomp_total += partition.max_component_size();
+
+            let mut parts = partition_with(&s_like, partition);
+            for sp in &mut parts.subproblems {
+                for (a, &gi) in sp.indices.iter().enumerate() {
+                    for (b, &gj) in sp.indices.iter().enumerate() {
+                        if a == b {
+                            sp.s_block.set(a, b, 1.0);
+                        } else {
+                            let mut dot = 0.0;
+                            for r in 0..z.rows() {
+                                dot += z.get(r, gi) * z.get(r, gj);
+                            }
+                            sp.s_block.set(a, b, dot * inv_n);
+                        }
+                    }
+                }
+            }
+
+            for kind in [SolverKind::Glasso, SolverKind::Smacs] {
+                let coord = Coordinator::new(
+                    NativeBackend::new(kind, opts.clone()),
+                    CoordinatorConfig::default(),
+                );
+                let report = coord.solve_partitioned(&s_like, lam, parts.clone(), &[])?;
+                match kind {
+                    SolverKind::Glasso => glasso_total += report.solve_secs_serial(),
+                    _ => smacs_total += report.solve_secs_serial(),
+                }
+            }
+        }
+        let n_lam = grid.len().max(1) as f64;
+        table.row(vec![
+            format!("({name}) / {p}"),
+            format!("{:.0}", maxcomp_total as f64 / n_lam),
+            format!("{:.3}", glasso_total / n_lam),
+            format!("{:.3}", smacs_total / n_lam),
+            format!("{:.4}", partition_total / n_lam),
+        ]);
+    }
+
+    print!("{}", table.render());
+    covthresh::report::write_csv(
+        std::path::Path::new("bench_out/table3.csv"),
+        &table.csv_header(),
+        &table.csv_rows(),
+    )?;
+    println!("wrote bench_out/table3.csv");
+    Ok(())
+}

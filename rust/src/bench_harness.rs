@@ -1,0 +1,178 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations with mean/median/stddev/p95, plus a one-shot mode for
+//! long-running end-to-end measurements (the paper's tables time full
+//! solves once — repeating a 20-minute no-screen solve is pointless).
+//!
+//! Used by every `rust/benches/*.rs` target (`harness = false`).
+
+use crate::util::{mean, median, quantile, stddev};
+use crate::util::timer::Stopwatch;
+
+/// Statistics from a measured run.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub stddev_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>5} iters  mean {:>12}  median {:>12}  p95 {:>12}  σ {:>10}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.median_s),
+            fmt_time(self.p95_s),
+            fmt_time(self.stddev_s),
+        )
+    }
+}
+
+/// Format seconds adaptively (ns/µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Run `f` with warmup, then `iters` timed repetitions.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        std::hint::black_box(f());
+        samples.push(sw.elapsed_secs());
+    }
+    stats_from(name, &samples)
+}
+
+/// Auto-calibrated bench: pick an iteration count that fits a time budget.
+pub fn bench_auto<T>(name: &str, budget_secs: f64, mut f: impl FnMut() -> T) -> BenchStats {
+    // one probe iteration
+    let sw = Stopwatch::start();
+    std::hint::black_box(f());
+    let probe = sw.elapsed_secs().max(1e-9);
+    let iters = ((budget_secs / probe) as usize).clamp(1, 1000);
+    let warmup = if probe < 0.01 { 3 } else { 0 };
+    bench(name, warmup, iters, f)
+}
+
+/// One-shot measurement (long end-to-end runs).
+pub fn bench_once<T>(name: &str, f: impl FnOnce() -> T) -> (T, BenchStats) {
+    let sw = Stopwatch::start();
+    let out = f();
+    let s = sw.elapsed_secs();
+    (out, stats_from(name, &[s]))
+}
+
+fn stats_from(name: &str, samples: &[f64]) -> BenchStats {
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean(samples),
+        median_s: median(samples),
+        stddev_s: stddev(samples),
+        p95_s: quantile(samples, 0.95),
+        min_s: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().copied().fold(0.0, f64::max),
+    }
+}
+
+/// Standard bench-binary entry: print a header honoring BENCH_FILTER.
+pub struct BenchRunner {
+    filter: Option<String>,
+    results: Vec<BenchStats>,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BenchRunner {
+    pub fn new() -> BenchRunner {
+        BenchRunner {
+            filter: std::env::var("BENCH_FILTER").ok().filter(|s| !s.is_empty()),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn should_run(&self, name: &str) -> bool {
+        self.filter.as_ref().map(|f| name.contains(f.as_str())).unwrap_or(true)
+    }
+
+    pub fn record(&mut self, stats: BenchStats) {
+        println!("{}", stats.summary());
+        self.results.push(stats);
+    }
+
+    pub fn run<T>(&mut self, name: &str, budget_secs: f64, f: impl FnMut() -> T) {
+        if !self.should_run(name) {
+            return;
+        }
+        let stats = bench_auto(name, budget_secs, f);
+        self.record(stats);
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0usize;
+        let stats = bench("t", 2, 5, || {
+            n += 1;
+            n
+        });
+        assert_eq!(stats.iters, 5);
+        assert_eq!(n, 7); // warmup + timed
+        assert!(stats.mean_s >= 0.0);
+        assert!(stats.min_s <= stats.median_s && stats.median_s <= stats.max_s);
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, stats) = bench_once("one", || 99);
+        assert_eq!(v, 99);
+        assert_eq!(stats.iters, 1);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn runner_filters() {
+        std::env::remove_var("BENCH_FILTER");
+        let r = BenchRunner::new();
+        assert!(r.should_run("anything"));
+    }
+}

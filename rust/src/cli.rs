@@ -1,0 +1,102 @@
+//! Hand-rolled CLI argument parsing (clap unavailable offline).
+//!
+//! Grammar: `covthresh <subcommand> [--flag value]... [--switch]...`.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument '{tok}'");
+            };
+            if name.is_empty() {
+                bail!("empty flag name");
+            }
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                switches.push(name.to_string());
+            }
+        }
+        Ok(Args { subcommand, flags, switches })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} must be a number, got '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow::anyhow!("--{name} must be an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = args(&["solve", "--p1", "200", "--lambda=0.5", "--parallel", "--solver", "smacs"]);
+        assert_eq!(a.subcommand, "solve");
+        assert_eq!(a.get_usize("p1", 0).unwrap(), 200);
+        assert_eq!(a.get_f64("lambda", 0.0).unwrap(), 0.5);
+        assert!(a.has("parallel"));
+        assert_eq!(a.get_str("solver", "glasso"), "smacs");
+        assert_eq!(a.get_str("missing", "dflt"), "dflt");
+        assert!(!a.has("absent"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = args(&["x"]);
+        assert_eq!(a.get_f64("nope", 1.5).unwrap(), 1.5);
+        let bad = args(&["x", "--n", "abc"]);
+        assert!(bad.get_usize("n", 0).is_err());
+        assert!(Args::parse(["x".to_string(), "stray".to_string()]).is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = args(&["run", "--fast"]);
+        assert!(a.has("fast"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Configuration system: a TOML-subset parser (no serde offline) plus the
+//! typed run configuration consumed by the CLI and examples.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (quoted), float, integer, boolean and flat arrays of these; `#`
+//! comments. That covers every knob this system exposes.
+
+pub mod toml_lite;
+
+use crate::coordinator::{CoordinatorConfig, CostModel};
+use crate::solvers::{SolverKind, SolverOptions};
+use anyhow::{bail, Context, Result};
+use toml_lite::TomlDoc;
+
+/// Full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// solver family for block solves
+    pub solver: SolverKind,
+    pub solver_opts: SolverOptions,
+    pub coordinator: CoordinatorConfig,
+    /// execution backend: "native" or "xla"
+    pub backend: String,
+    /// AOT bucket sizes for the XLA backend
+    pub buckets: Vec<usize>,
+    /// directory with *.hlo.txt artifacts
+    pub artifacts_dir: String,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            solver: SolverKind::Glasso,
+            solver_opts: SolverOptions::default(),
+            coordinator: CoordinatorConfig::default(),
+            backend: "native".to_string(),
+            buckets: vec![16, 32, 64, 128],
+            artifacts_dir: "artifacts".to_string(),
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from TOML text, starting from defaults.
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = RunConfig::default();
+
+        if let Some(v) = doc.get("solver", "kind") {
+            let name = v.as_str().context("solver.kind must be a string")?;
+            cfg.solver = SolverKind::parse(name)
+                .with_context(|| format!("unknown solver.kind '{name}'"))?;
+        }
+        if let Some(v) = doc.get("solver", "tol") {
+            cfg.solver_opts.tol = v.as_f64().context("solver.tol must be a number")?;
+        }
+        if let Some(v) = doc.get("solver", "max_iter") {
+            cfg.solver_opts.max_iter =
+                v.as_f64().context("solver.max_iter must be a number")? as usize;
+        }
+        if let Some(v) = doc.get("solver", "node_screen_check") {
+            cfg.solver_opts.node_screen_check =
+                v.as_bool().context("solver.node_screen_check must be a bool")?;
+        }
+        if let Some(v) = doc.get("coordinator", "n_machines") {
+            cfg.coordinator.n_machines =
+                v.as_f64().context("coordinator.n_machines must be a number")? as usize;
+            if cfg.coordinator.n_machines == 0 {
+                bail!("coordinator.n_machines must be >= 1");
+            }
+        }
+        if let Some(v) = doc.get("coordinator", "capacity") {
+            cfg.coordinator.capacity =
+                v.as_f64().context("coordinator.capacity must be a number")? as usize;
+        }
+        if let Some(v) = doc.get("coordinator", "parallel") {
+            cfg.coordinator.parallel =
+                v.as_bool().context("coordinator.parallel must be a bool")?;
+        }
+        if let Some(v) = doc.get("coordinator", "cost_exponent") {
+            cfg.coordinator.cost_model = CostModel {
+                exponent: v.as_f64().context("coordinator.cost_exponent must be a number")?,
+            };
+        }
+        if let Some(v) = doc.get("runtime", "backend") {
+            let b = v.as_str().context("runtime.backend must be a string")?;
+            if b != "native" && b != "xla" {
+                bail!("runtime.backend must be 'native' or 'xla', got '{b}'");
+            }
+            cfg.backend = b.to_string();
+        }
+        if let Some(v) = doc.get("runtime", "buckets") {
+            let arr = v.as_array().context("runtime.buckets must be an array")?;
+            cfg.buckets = arr
+                .iter()
+                .map(|x| x.as_f64().map(|f| f as usize))
+                .collect::<Option<Vec<_>>>()
+                .context("runtime.buckets entries must be numbers")?;
+            if cfg.buckets.is_empty() {
+                bail!("runtime.buckets must not be empty");
+            }
+        }
+        if let Some(v) = doc.get("runtime", "artifacts_dir") {
+            cfg.artifacts_dir =
+                v.as_str().context("runtime.artifacts_dir must be a string")?.to_string();
+        }
+        if let Some(v) = doc.get("run", "seed") {
+            cfg.seed = v.as_f64().context("run.seed must be a number")? as u64;
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config file {path}"))?;
+        RunConfig::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_without_input() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert_eq!(cfg.solver, SolverKind::Glasso);
+        assert_eq!(cfg.backend, "native");
+        assert_eq!(cfg.coordinator.n_machines, 4);
+    }
+
+    #[test]
+    fn full_config_roundtrip() {
+        let text = r#"
+# run configuration
+[solver]
+kind = "smacs"
+tol = 1e-4
+max_iter = 500
+node_screen_check = false
+
+[coordinator]
+n_machines = 8
+capacity = 1500
+parallel = true
+cost_exponent = 4.0
+
+[runtime]
+backend = "xla"
+buckets = [16, 64, 256]
+artifacts_dir = "my_artifacts"
+
+[run]
+seed = 7
+"#;
+        let cfg = RunConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.solver, SolverKind::Smacs);
+        assert_eq!(cfg.solver_opts.tol, 1e-4);
+        assert_eq!(cfg.solver_opts.max_iter, 500);
+        assert!(!cfg.solver_opts.node_screen_check);
+        assert_eq!(cfg.coordinator.n_machines, 8);
+        assert_eq!(cfg.coordinator.capacity, 1500);
+        assert!(cfg.coordinator.parallel);
+        assert_eq!(cfg.coordinator.cost_model.exponent, 4.0);
+        assert_eq!(cfg.backend, "xla");
+        assert_eq!(cfg.buckets, vec![16, 64, 256]);
+        assert_eq!(cfg.artifacts_dir, "my_artifacts");
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(RunConfig::from_toml("[solver]\nkind = \"nope\"").is_err());
+        assert!(RunConfig::from_toml("[runtime]\nbackend = \"gpu\"").is_err());
+        assert!(RunConfig::from_toml("[coordinator]\nn_machines = 0").is_err());
+        assert!(RunConfig::from_toml("[runtime]\nbuckets = []").is_err());
+    }
+}

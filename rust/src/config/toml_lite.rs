@@ -1,0 +1,242 @@
+//! Minimal TOML-subset parser (serde/toml unavailable offline).
+//!
+//! Grammar: `[section]`, `key = value`, `#` comments. Values: quoted
+//! strings, booleans, numbers (int/float/scientific), flat arrays.
+
+use anyhow::{bail, Result};
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: (section, key) → value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, Value)>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section header '{raw}'", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+            };
+            let key = line[..eq].trim().to_string();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            doc.entries.push((section.clone(), key, value));
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        // last write wins, like TOML re-definition would error but we accept
+        self.entries
+            .iter()
+            .rev()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+
+    pub fn sections(&self) -> Vec<&str> {
+        let mut out: Vec<&str> = self.entries.iter().map(|(s, _, _)| s.as_str()).collect();
+        out.dedup();
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: '#' inside quoted strings is not supported
+    // by this subset (none of our configs need it).
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            bail!("unterminated string {s}");
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array {s}");
+        }
+        let inner = s[1..s.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(Vec::new()));
+        }
+        let items = split_top_level(inner)?;
+        let vals = items
+            .iter()
+            .map(|it| parse_value(it))
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Arr(vals));
+    }
+    match s.parse::<f64>() {
+        Ok(x) => Ok(Value::Num(x)),
+        Err(_) => bail!("cannot parse value '{s}'"),
+    }
+}
+
+/// Split an array body on top-level commas (no nested arrays needed, but
+/// handle them anyway).
+fn split_top_level(s: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or_else(|| anyhow::anyhow!("unbalanced ]"))?;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+top = 1
+[a]
+s = "hello"
+x = 2.5
+flag = true
+[b]
+arr = [1, 2, 3]
+neg = -1e-3
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&Value::Num(1.0)));
+        assert_eq!(doc.get("a", "s").unwrap().as_str(), Some("hello"));
+        assert_eq!(doc.get("a", "x").unwrap().as_f64(), Some(2.5));
+        assert_eq!(doc.get("a", "flag").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("b", "arr").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(doc.get("b", "neg").unwrap().as_f64(), Some(-1e-3));
+        assert_eq!(doc.get("a", "missing"), None);
+        assert_eq!(doc.get("zz", "s"), None);
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let doc = TomlDoc::parse("# full line\nx = 5 # trailing\ns = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_f64(), Some(5.0));
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("x = ").is_err());
+        assert!(TomlDoc::parse("x = \"unterminated").is_err());
+        assert!(TomlDoc::parse("x = [1, 2").is_err());
+        assert!(TomlDoc::parse("x = wat").is_err());
+    }
+
+    #[test]
+    fn last_write_wins() {
+        let doc = TomlDoc::parse("x = 1\nx = 2").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = TomlDoc::parse("x = []").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_array().unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,240 @@
+//! Global solution assembly — the inverse of the partitioner.
+//!
+//! Appendix A.1 (eq. 14): the global Θ̂/Ŵ are block-diagonal under the
+//! component ordering, so the assembled object stores blocks + index maps
+//! rather than a p×p dense matrix (p can be 25k; the dense form is only
+//! materialized on demand for small p).
+
+use crate::graph::Partition;
+use crate::linalg::Mat;
+use crate::solvers::Solution;
+
+/// One solved block with its global index map.
+#[derive(Clone, Debug)]
+pub struct SolvedBlock {
+    pub component: usize,
+    pub indices: Vec<usize>,
+    pub solution: Solution,
+    /// wall-clock seconds spent solving this block
+    pub secs: f64,
+    /// machine that executed it (simulated fabric)
+    pub machine: usize,
+}
+
+/// Block-diagonal global solution of problem (1).
+#[derive(Clone, Debug)]
+pub struct GlobalSolution {
+    pub p: usize,
+    pub lambda: f64,
+    pub partition: Partition,
+    pub blocks: Vec<SolvedBlock>,
+    /// (index, theta_ii) for isolated nodes: θ_ii = 1/(S_ii + λ)
+    pub isolated: Vec<(usize, f64)>,
+}
+
+impl GlobalSolution {
+    /// Θ̂_ij lookup. O(1) for diagonal/isolated, O(log-ish) via label check
+    /// for off-diagonal (cross-component entries are exactly 0).
+    pub fn theta(&self, i: usize, j: usize) -> f64 {
+        let li = self.partition.label_of(i);
+        if i != j && li != self.partition.label_of(j) {
+            return 0.0;
+        }
+        if let Some(&(_, v)) = self.isolated.iter().find(|&&(n, _)| n == i) {
+            return if i == j { v } else { 0.0 };
+        }
+        for b in &self.blocks {
+            if b.component == li {
+                let a = b.indices.iter().position(|&v| v == i).unwrap();
+                let c = b.indices.iter().position(|&v| v == j).unwrap();
+                return b.solution.theta.get(a, c);
+            }
+        }
+        0.0
+    }
+
+    /// Total objective = Σ block objectives + Σ isolated closed forms.
+    /// (The paper's (15): the global problem separates exactly.)
+    pub fn objective(&self) -> f64 {
+        let blocks: f64 = self.blocks.iter().map(|b| b.solution.objective).sum();
+        let iso: f64 = self
+            .isolated
+            .iter()
+            .map(|&(_, t)| {
+                // θ = 1/(s+λ): objective contribution ln(s+λ) + 1
+                -(t.ln()) + 1.0
+            })
+            .sum();
+        blocks + iso
+    }
+
+    /// Did every block converge?
+    pub fn all_converged(&self) -> bool {
+        self.blocks.iter().all(|b| b.solution.converged)
+    }
+
+    /// Number of structurally nonzero off-diagonal entries of Θ̂.
+    pub fn offdiag_nnz(&self, tol: f64) -> usize {
+        self.blocks.iter().map(|b| b.solution.theta.offdiag_nnz(tol)).sum()
+    }
+
+    /// Sum of per-block solve seconds ("with screen" serial time à la
+    /// Table 1: "operated serially — the times reflect the total time
+    /// summed across all blocks").
+    pub fn serial_solve_secs(&self) -> f64 {
+        self.blocks.iter().map(|b| b.secs).sum()
+    }
+
+    /// Simulated-parallel makespan: max over machines of Σ block secs.
+    pub fn makespan_secs(&self, n_machines: usize) -> f64 {
+        let n = n_machines.max(1);
+        let mut loads = vec![0.0f64; n];
+        for b in &self.blocks {
+            loads[b.machine % n] += b.secs;
+        }
+        loads.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Materialize dense Θ̂ (small p only).
+    pub fn theta_dense(&self) -> Mat {
+        let mut t = Mat::zeros(self.p, self.p);
+        for &(i, v) in &self.isolated {
+            t.set(i, i, v);
+        }
+        for b in &self.blocks {
+            t.scatter_block(&b.indices, &b.solution.theta);
+        }
+        t
+    }
+
+    /// Materialize dense Ŵ (small p only). Isolated: w_ii = S_ii + λ = 1/θ.
+    pub fn w_dense(&self) -> Mat {
+        let mut w = Mat::zeros(self.p, self.p);
+        for &(i, v) in &self.isolated {
+            w.set(i, i, 1.0 / v);
+        }
+        for b in &self.blocks {
+            w.scatter_block(&b.indices, &b.solution.w);
+        }
+        w
+    }
+
+    /// The vertex partition induced by the nonzero pattern of Θ̂ — must
+    /// refine `self.partition`; equals it under exact solves (Theorem 1).
+    pub fn concentration_partition(&self, zero_tol: f64) -> Partition {
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for b in &self.blocks {
+            let t = &b.solution.theta;
+            for a in 0..t.rows() {
+                for c in (a + 1)..t.cols() {
+                    if t.get(a, c).abs() > zero_tol {
+                        edges.push((b.indices[a] as u32, b.indices[c] as u32));
+                    }
+                }
+            }
+        }
+        let g = crate::graph::CsrGraph::from_edges(self.p, &edges);
+        crate::graph::components_bfs(&g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::partitioner::partition_problem;
+    use crate::coordinator::solver_backend::{BlockSolver, NativeBackend};
+
+    fn demo_s() -> Mat {
+        let mut s = Mat::eye(5);
+        for &(i, j, v) in &[(0usize, 1usize, 0.9), (3usize, 4usize, 0.5)] {
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+        s
+    }
+
+    fn solve_demo(lambda: f64) -> (Mat, GlobalSolution) {
+        let s = demo_s();
+        let parts = partition_problem(&s, lambda);
+        let backend = NativeBackend::glasso();
+        let blocks: Vec<SolvedBlock> = parts
+            .subproblems
+            .iter()
+            .map(|sp| SolvedBlock {
+                component: sp.component,
+                indices: sp.indices.clone(),
+                solution: backend.solve_block(&sp.s_block, lambda, None).unwrap(),
+                secs: 0.0,
+                machine: 0,
+            })
+            .collect();
+        let isolated: Vec<(usize, f64)> =
+            parts.isolated.iter().map(|&(i, sii)| (i, 1.0 / (sii + lambda))).collect();
+        let g = GlobalSolution {
+            p: 5,
+            lambda,
+            partition: parts.partition,
+            blocks,
+            isolated,
+        };
+        (s, g)
+    }
+
+    #[test]
+    fn dense_matches_elementwise_lookup() {
+        let (_, g) = solve_demo(0.3);
+        let dense = g.theta_dense();
+        for i in 0..5 {
+            for j in 0..5 {
+                assert!((dense.get(i, j) - g.theta(i, j)).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn cross_component_entries_zero() {
+        let (_, g) = solve_demo(0.3);
+        assert_eq!(g.theta(0, 3), 0.0);
+        assert_eq!(g.theta(1, 4), 0.0);
+        assert_eq!(g.theta(2, 0), 0.0);
+    }
+
+    #[test]
+    fn objective_equals_full_objective_on_dense(){
+        let (s, g) = solve_demo(0.3);
+        let dense = g.theta_dense();
+        let full = crate::solvers::objective(&s, &dense, 0.3).unwrap();
+        assert!(
+            (full - g.objective()).abs() < 1e-8,
+            "full={full} assembled={}",
+            g.objective()
+        );
+    }
+
+    #[test]
+    fn isolated_closed_form() {
+        let (_, g) = solve_demo(0.95);
+        // λ=0.95 kills the (3,4)=0.5 edge; (0,1)=0.9 dies too ⇒ all isolated
+        assert_eq!(g.isolated.len(), 5);
+        assert!((g.theta(2, 2) - 1.0 / 1.95).abs() < 1e-12);
+        let w = g.w_dense();
+        assert!((w.get(2, 2) - 1.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn assembled_global_kkt() {
+        let (s, g) = solve_demo(0.3);
+        let dense = g.theta_dense();
+        let report = crate::solvers::kkt::check_kkt(&s, &dense, 0.3, 1e-4);
+        assert!(report.satisfied, "{report:?}");
+    }
+
+    #[test]
+    fn concentration_partition_refines_screen_partition() {
+        let (_, g) = solve_demo(0.3);
+        let cp = g.concentration_partition(1e-8);
+        assert!(cp.is_refinement_of(&g.partition));
+        // Theorem 1: equality for exact solves
+        assert!(cp.equals(&g.partition));
+    }
+}

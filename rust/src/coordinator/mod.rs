@@ -1,0 +1,276 @@
+//! The coordinator — the paper's system contribution as a serving layer.
+//!
+//! Pipeline for one (S, λ) request:
+//!
+//! 1. **screen**: threshold S at λ (eq. 4) → thresholded covariance graph;
+//! 2. **partition**: connected components → independent sub-problems
+//!    (licensed exactly by Theorem 1);
+//! 3. **schedule**: LPT bin-packing onto the machine fabric, enforcing the
+//!    per-machine capacity p_max (§2 consequence 5);
+//! 4. **solve**: dispatch blocks to the backend (native Rust solvers or
+//!    the PJRT runtime executing AOT JAX/Pallas artifacts);
+//! 5. **assemble**: block-diagonal global Θ̂ + report.
+//!
+//! `solve_unscreened` runs the same backend on the whole p×p problem — the
+//! paper's "without screening" baseline column in Tables 1–2.
+
+pub mod assemble;
+pub mod partitioner;
+pub mod path;
+pub mod scheduler;
+pub mod solver_backend;
+pub mod worker;
+
+pub use assemble::{GlobalSolution, SolvedBlock};
+pub use partitioner::{partition_problem, partition_with, Partitioned, SubProblem};
+pub use scheduler::{schedule_lpt, CostModel, Schedule};
+pub use solver_backend::{BlockSolver, NativeBackend};
+
+use crate::linalg::Mat;
+use crate::solvers::WarmStart;
+use crate::util::timer::{PhaseTimings, Stopwatch};
+use anyhow::Result;
+
+/// Coordinator configuration (the simulated distributed fabric).
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// number of machines in the fabric
+    pub n_machines: usize,
+    /// per-machine maximum solvable block size (p_max)
+    pub capacity: usize,
+    /// execute machines on real threads (false = paper's serial timing)
+    pub parallel: bool,
+    /// cost model for scheduling
+    pub cost_model: CostModel,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            n_machines: 4,
+            capacity: usize::MAX,
+            parallel: false,
+            cost_model: CostModel::default(),
+        }
+    }
+}
+
+/// Report for one screened solve.
+#[derive(Clone, Debug)]
+pub struct ScreenReport {
+    pub global: GlobalSolution,
+    pub schedule: Schedule,
+    pub timings: PhaseTimings,
+    /// |E(λ)| of the thresholded graph
+    pub n_edges: usize,
+}
+
+impl ScreenReport {
+    /// The paper's "graph partition" column: screen + component time.
+    pub fn partition_secs(&self) -> f64 {
+        self.timings.get("screen") + self.timings.get("partition")
+    }
+
+    /// Total solve time summed serially across blocks (Table 1 convention).
+    pub fn solve_secs_serial(&self) -> f64 {
+        self.global.serial_solve_secs()
+    }
+}
+
+/// The coordinator: a backend plus fabric configuration.
+pub struct Coordinator<B: BlockSolver> {
+    pub backend: B,
+    pub config: CoordinatorConfig,
+}
+
+impl<B: BlockSolver> Coordinator<B> {
+    pub fn new(backend: B, config: CoordinatorConfig) -> Self {
+        Coordinator { backend, config }
+    }
+
+    /// Solve (1) with the screening wrapper.
+    pub fn solve_screened(&self, s: &Mat, lambda: f64) -> Result<ScreenReport> {
+        self.solve_screened_warm(s, lambda, &[])
+    }
+
+    /// Screened solve with per-component warm starts (path driver).
+    /// `warm` is keyed by sub-problem order after partitioning; pass `&[]`
+    /// for cold starts.
+    pub fn solve_screened_warm(
+        &self,
+        s: &Mat,
+        lambda: f64,
+        warm: &[Option<WarmStart>],
+    ) -> Result<ScreenReport> {
+        let mut timings = PhaseTimings::new();
+
+        // 1. screen: build the thresholded edge set.
+        let sw = Stopwatch::start();
+        let edges = crate::screen::threshold_edges(s, lambda);
+        let n_edges = edges.len();
+        timings.add("screen", sw.elapsed_secs());
+
+        // 2. partition: components + block extraction.
+        let sw = Stopwatch::start();
+        let g = crate::graph::CsrGraph::from_edges(s.rows(), &edges);
+        let partition = crate::graph::components_bfs(&g);
+        let parts = partition_with(s, partition);
+        timings.add("partition", sw.elapsed_secs());
+
+        self.finish_solve(s, lambda, parts, warm, timings, n_edges)
+    }
+
+    /// Screened solve from a pre-computed partition (incremental sweeps,
+    /// streaming screens). Screen/partition phases are credited 0s.
+    pub fn solve_partitioned(
+        &self,
+        s: &Mat,
+        lambda: f64,
+        parts: Partitioned,
+        warm: &[Option<WarmStart>],
+    ) -> Result<ScreenReport> {
+        self.finish_solve(s, lambda, parts, warm, PhaseTimings::new(), 0)
+    }
+
+    fn finish_solve(
+        &self,
+        s: &Mat,
+        lambda: f64,
+        parts: Partitioned,
+        warm: &[Option<WarmStart>],
+        mut timings: PhaseTimings,
+        n_edges: usize,
+    ) -> Result<ScreenReport> {
+        // 3. schedule.
+        let sw = Stopwatch::start();
+        let sizes: Vec<usize> = parts.subproblems.iter().map(|sp| sp.size()).collect();
+        let capacity = self.config.capacity.min(self.backend.max_block().unwrap_or(usize::MAX));
+        let schedule =
+            schedule_lpt(&sizes, self.config.n_machines, capacity, self.config.cost_model)?;
+        timings.add("schedule", sw.elapsed_secs());
+
+        // 4. solve.
+        let sw = Stopwatch::start();
+        let blocks = worker::run_blocks(
+            &self.backend,
+            &parts.subproblems,
+            &schedule,
+            warm,
+            lambda,
+            self.config.parallel,
+        )?;
+        timings.add("solve", sw.elapsed_secs());
+
+        // 5. assemble.
+        let sw = Stopwatch::start();
+        let isolated: Vec<(usize, f64)> =
+            parts.isolated.iter().map(|&(i, sii)| (i, 1.0 / (sii + lambda))).collect();
+        let global = GlobalSolution {
+            p: s.rows(),
+            lambda,
+            partition: parts.partition,
+            blocks,
+            isolated,
+        };
+        timings.add("assemble", sw.elapsed_secs());
+
+        Ok(ScreenReport { global, schedule, timings, n_edges })
+    }
+
+    /// Baseline: solve the full p×p problem with no screening.
+    pub fn solve_unscreened(&self, s: &Mat, lambda: f64) -> Result<(crate::solvers::Solution, f64)> {
+        let sw = Stopwatch::start();
+        let sol = self.backend.solve_block(s, lambda, None)?;
+        Ok((sol, sw.elapsed_secs()))
+    }
+}
+
+/// Convenience: screened solve with the default native GLASSO backend.
+pub fn solve_screened_default(s: &Mat, lambda: f64) -> Result<ScreenReport> {
+    Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default())
+        .solve_screened(s, lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synthetic::block_instance;
+    use crate::solvers::kkt::check_kkt;
+
+    #[test]
+    fn screened_solution_is_globally_optimal() {
+        let inst = block_instance(3, 8, 42);
+        let lambda = 0.9;
+        let report = solve_screened_default(&inst.s, lambda).unwrap();
+        assert!(report.global.all_converged());
+        assert_eq!(report.global.partition.n_components(), 3);
+        // KKT on the assembled dense solution against the FULL S
+        let dense = report.global.theta_dense();
+        let kkt = check_kkt(&inst.s, &dense, lambda, 1e-4);
+        assert!(kkt.satisfied, "{kkt:?}");
+    }
+
+    #[test]
+    fn screened_matches_unscreened() {
+        let inst = block_instance(2, 6, 7);
+        let lambda = 0.9;
+        let coord = Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default());
+        let screened = coord.solve_screened(&inst.s, lambda).unwrap();
+        let (unscreened, _) = coord.solve_unscreened(&inst.s, lambda).unwrap();
+        let diff = screened.global.theta_dense().max_abs_diff(&unscreened.theta);
+        assert!(diff < 1e-5, "screened vs unscreened diff = {diff}");
+    }
+
+    #[test]
+    fn capacity_enforcement() {
+        let inst = block_instance(2, 10, 3);
+        let coord = Coordinator::new(
+            NativeBackend::glasso(),
+            CoordinatorConfig { capacity: 5, ..Default::default() },
+        );
+        // λ=0.9 keeps the two 10-blocks ⇒ capacity 5 must error
+        let err = coord.solve_screened(&inst.s, 0.9).unwrap_err();
+        assert!(err.to_string().contains("capacity"));
+        // raising λ per the screen fixes it
+        let edges = crate::screen::profile::weighted_edges(&inst.s, 0.0);
+        let lam = crate::screen::lambda_for_capacity(20, edges, 5);
+        assert!(coord.solve_screened(&inst.s, lam).is_ok());
+    }
+
+    #[test]
+    fn parallel_equals_serial() {
+        let inst = block_instance(4, 5, 9);
+        let lambda = 0.9;
+        let serial = Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default())
+            .solve_screened(&inst.s, lambda)
+            .unwrap();
+        let parallel = Coordinator::new(
+            NativeBackend::glasso(),
+            CoordinatorConfig { parallel: true, n_machines: 4, ..Default::default() },
+        )
+        .solve_screened(&inst.s, lambda)
+        .unwrap();
+        let diff = serial.global.theta_dense().max_abs_diff(&parallel.global.theta_dense());
+        assert!(diff < 1e-12);
+    }
+
+    #[test]
+    fn timings_phases_present() {
+        let inst = block_instance(2, 5, 11);
+        let report = solve_screened_default(&inst.s, 0.9).unwrap();
+        for phase in ["screen", "partition", "schedule", "solve", "assemble"] {
+            assert!(report.timings.get(phase) >= 0.0);
+        }
+        assert!(report.partition_secs() >= 0.0);
+        assert!(report.n_edges > 0);
+    }
+
+    #[test]
+    fn theorem1_components_match_after_solve() {
+        let inst = block_instance(3, 6, 13);
+        let lambda = 0.9;
+        let report = solve_screened_default(&inst.s, lambda).unwrap();
+        let conc = report.global.concentration_partition(1e-8);
+        assert!(conc.equals(&report.global.partition));
+    }
+}

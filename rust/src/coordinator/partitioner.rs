@@ -1,0 +1,154 @@
+//! Problem partitioning: thresholded-graph components → independent
+//! glasso sub-problems (§2 consequence 3).
+//!
+//! Theorem 1 licenses solving (1) block-by-block on the components of the
+//! thresholded sample covariance graph; Appendix A.1's construction (15) is
+//! exactly "solve (1) on S restricted to each component's index set". The
+//! partitioner extracts those principal submatrices, with a closed-form
+//! fast path for isolated nodes (the Witten–Friedman special case).
+
+use crate::graph::Partition;
+use crate::linalg::Mat;
+use crate::screen::threshold_partition;
+
+/// One independent sub-problem: global indices + the S block on them.
+#[derive(Clone, Debug)]
+pub struct SubProblem {
+    /// component label in the partition
+    pub component: usize,
+    /// global vertex indices (sorted ascending by construction)
+    pub indices: Vec<usize>,
+    /// S restricted to indices × indices
+    pub s_block: Mat,
+}
+
+impl SubProblem {
+    pub fn size(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// Result of partitioning: the partition, the non-trivial sub-problems
+/// (size ≥ 2), and the isolated nodes (solved in closed form).
+#[derive(Clone, Debug)]
+pub struct Partitioned {
+    pub partition: Partition,
+    pub subproblems: Vec<SubProblem>,
+    /// (global index, S_ii) for each isolated node
+    pub isolated: Vec<(usize, f64)>,
+}
+
+impl Partitioned {
+    /// Total nodes covered by non-trivial sub-problems.
+    pub fn covered(&self) -> usize {
+        self.subproblems.iter().map(|sp| sp.size()).sum()
+    }
+
+    pub fn max_block(&self) -> usize {
+        self.subproblems.iter().map(|sp| sp.size()).max().unwrap_or(1)
+    }
+
+    /// Paper §3: Σ_i O(p_i^J) vs O(p^J). The modeled speedup for exponent J.
+    pub fn modeled_speedup(&self, j: f64) -> f64 {
+        let p = self.partition.n_vertices() as f64;
+        let split: f64 = self
+            .subproblems
+            .iter()
+            .map(|sp| (sp.size() as f64).powf(j))
+            .sum::<f64>()
+            .max(1.0);
+        p.powf(j) / split
+    }
+}
+
+/// Threshold S at λ and slice it into sub-problems.
+pub fn partition_problem(s: &Mat, lambda: f64) -> Partitioned {
+    let partition = threshold_partition(s, lambda);
+    partition_with(s, partition)
+}
+
+/// Slice S by an externally computed partition (e.g. from a `LambdaSweep`
+/// mid-path, or from the streaming screen).
+pub fn partition_with(s: &Mat, partition: Partition) -> Partitioned {
+    let mut subproblems = Vec::new();
+    let mut isolated = Vec::new();
+    for (label, group) in partition.groups().iter().enumerate() {
+        if group.len() == 1 {
+            isolated.push((group[0], s.get(group[0], group[0])));
+        } else {
+            subproblems.push(SubProblem {
+                component: label,
+                indices: group.clone(),
+                s_block: s.principal_submatrix(group),
+            });
+        }
+    }
+    Partitioned { partition, subproblems, isolated }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_s() -> Mat {
+        let mut s = Mat::eye(5);
+        for &(i, j, v) in &[(0usize, 1usize, 0.9), (1, 2, 0.7), (3, 4, 0.5)] {
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+        s
+    }
+
+    #[test]
+    fn splits_into_expected_blocks() {
+        let part = partition_problem(&demo_s(), 0.4);
+        assert_eq!(part.partition.n_components(), 2);
+        assert_eq!(part.subproblems.len(), 2);
+        assert!(part.isolated.is_empty());
+        let sizes: Vec<usize> = part.subproblems.iter().map(|sp| sp.size()).collect();
+        assert_eq!(sizes, vec![3, 2]);
+        assert_eq!(part.covered(), 5);
+        assert_eq!(part.max_block(), 3);
+    }
+
+    #[test]
+    fn isolated_fast_path() {
+        let part = partition_problem(&demo_s(), 0.8);
+        // only edge (0,1) survives; 2,3,4 isolated
+        assert_eq!(part.subproblems.len(), 1);
+        assert_eq!(part.isolated.len(), 3);
+        assert_eq!(part.isolated[0].0, 2);
+        assert_eq!(part.isolated[0].1, 1.0);
+    }
+
+    #[test]
+    fn blocks_carry_correct_entries() {
+        let s = demo_s();
+        let part = partition_problem(&s, 0.4);
+        let block0 = &part.subproblems[0];
+        assert_eq!(block0.indices, vec![0, 1, 2]);
+        assert_eq!(block0.s_block.get(0, 1), 0.9);
+        assert_eq!(block0.s_block.get(1, 2), 0.7);
+        assert_eq!(block0.s_block.get(0, 2), 0.0);
+    }
+
+    #[test]
+    fn modeled_speedup_grows_with_splitting() {
+        let s = demo_s();
+        let coarse = partition_problem(&s, 0.4); // blocks {0,1,2} + {3,4}
+        let fine = partition_problem(&s, 0.8); // block {0,1} + 3 isolated
+        assert!(fine.modeled_speedup(3.0) > coarse.modeled_speedup(3.0));
+        // 5³/(3³+2³) = 125/35
+        assert!((coarse.modeled_speedup(3.0) - 125.0 / 35.0).abs() < 1e-12);
+        // isolated nodes cost nothing in the model: 5³/2³
+        assert!((fine.modeled_speedup(3.0) - 125.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_isolated_at_high_lambda() {
+        let part = partition_problem(&demo_s(), 2.0);
+        assert!(part.subproblems.is_empty());
+        assert_eq!(part.isolated.len(), 5);
+        assert_eq!(part.max_block(), 1);
+    }
+}

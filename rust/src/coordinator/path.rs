@@ -1,0 +1,244 @@
+//! λ-path driver — solve (1) over a grid of λ values exploiting the
+//! Theorem-2 nesting of component partitions.
+//!
+//! The grid is traversed DOWNWARD (λ large → small): partitions coarsen
+//! monotonically, so (a) the incremental `LambdaSweep` maintains the
+//! components without re-running the screen per grid point, and (b) each
+//! coarser block at λ_{t+1} is a disjoint union of blocks solved at λ_t,
+//! whose solutions tile a block-diagonal warm start (cross-block Θ entries
+//! start at 0 — exactly the structure Theorem 1 guarantees they had at the
+//! previous λ).
+//!
+//! The driver asserts the nesting invariant at every step — a live check
+//! of Theorem 2 on every path run.
+
+use super::solver_backend::BlockSolver;
+use super::{partition_with, Coordinator, ScreenReport};
+use crate::linalg::Mat;
+use crate::screen::profile::{weighted_edges, LambdaSweep};
+use crate::solvers::WarmStart;
+use crate::util::timer::Stopwatch;
+use anyhow::{ensure, Result};
+
+/// One grid point's outcome.
+#[derive(Clone, Debug)]
+pub struct PathPoint {
+    pub lambda: f64,
+    pub report: ScreenReport,
+    /// seconds spent advancing the incremental screen to this λ
+    pub sweep_secs: f64,
+}
+
+/// Full path outcome.
+#[derive(Clone, Debug)]
+pub struct PathResult {
+    pub points: Vec<PathPoint>,
+}
+
+impl PathResult {
+    /// Serial solve seconds summed over the whole path.
+    pub fn total_solve_secs(&self) -> f64 {
+        self.points.iter().map(|pt| pt.report.solve_secs_serial()).sum()
+    }
+
+    pub fn total_sweep_secs(&self) -> f64 {
+        self.points.iter().map(|pt| pt.sweep_secs).sum()
+    }
+}
+
+/// Solve the path over `lambdas` (must be strictly descending).
+///
+/// `warm_start = true` tiles each block's initial point from the previous
+/// grid point's solution (ablation: pass false for cold starts).
+pub fn solve_path<B: BlockSolver>(
+    coord: &Coordinator<B>,
+    s: &Mat,
+    lambdas: &[f64],
+    warm_start: bool,
+) -> Result<PathResult> {
+    ensure!(!lambdas.is_empty(), "empty lambda grid");
+    ensure!(
+        lambdas.windows(2).all(|w| w[0] > w[1]),
+        "lambda grid must be strictly descending"
+    );
+    let p = s.rows();
+
+    // One-time edge extraction at the path floor.
+    let floor = *lambdas.last().unwrap();
+    let mut sweep = LambdaSweep::new(p, weighted_edges(s, floor));
+
+    let mut points: Vec<PathPoint> = Vec::with_capacity(lambdas.len());
+    let mut prev: Option<ScreenReport> = None;
+
+    for &lambda in lambdas {
+        let sw = Stopwatch::start();
+        sweep.advance_to(lambda);
+        let partition = sweep.partition();
+        let sweep_secs = sw.elapsed_secs();
+
+        // Theorem 2 live check: the previous (larger-λ) partition must
+        // refine the current one.
+        if let Some(prev_report) = &prev {
+            ensure!(
+                prev_report.global.partition.is_refinement_of(&partition),
+                "Theorem-2 nesting violated between λ={} and λ={lambda}",
+                prev_report.global.lambda
+            );
+        }
+
+        let parts = partition_with(s, partition);
+
+        // Warm starts: tile previous blocks into current blocks.
+        let warm: Vec<Option<WarmStart>> = if warm_start {
+            match &prev {
+                Some(prev_report) => build_warm_starts(&parts, prev_report, p),
+                None => vec![None; parts.subproblems.len()],
+            }
+        } else {
+            vec![None; parts.subproblems.len()]
+        };
+
+        let report = coord.solve_partitioned(s, lambda, parts, &warm)?;
+        prev = Some(report.clone());
+        points.push(PathPoint { lambda, report, sweep_secs });
+    }
+
+    Ok(PathResult { points })
+}
+
+/// For each current sub-problem, assemble a block-diagonal warm start from
+/// the previous solution's blocks/isolated nodes that fall inside it.
+fn build_warm_starts(
+    parts: &super::Partitioned,
+    prev: &ScreenReport,
+    p: usize,
+) -> Vec<Option<WarmStart>> {
+    // global index -> (current subproblem idx, local position)
+    let mut where_of: Vec<(usize, usize)> = vec![(usize::MAX, 0); p];
+    for (spi, sp) in parts.subproblems.iter().enumerate() {
+        for (local, &g) in sp.indices.iter().enumerate() {
+            where_of[g] = (spi, local);
+        }
+    }
+
+    let mut warms: Vec<Option<(Mat, Mat)>> = parts
+        .subproblems
+        .iter()
+        .map(|sp| Some((Mat::zeros(sp.size(), sp.size()), Mat::zeros(sp.size(), sp.size()))))
+        .collect();
+
+    // Tile previous non-trivial blocks.
+    for b in &prev.global.blocks {
+        let (spi, _) = where_of[b.indices[0]];
+        if spi == usize::MAX {
+            continue; // previous block is isolated-only at current λ? impossible (nesting) — skip
+        }
+        if let Some((theta, w)) = warms[spi].as_mut() {
+            for (a, &gi) in b.indices.iter().enumerate() {
+                let (_, la) = where_of[gi];
+                for (c, &gj) in b.indices.iter().enumerate() {
+                    let (_, lc) = where_of[gj];
+                    theta.set(la, lc, b.solution.theta.get(a, c));
+                    w.set(la, lc, b.solution.w.get(a, c));
+                }
+            }
+        }
+    }
+    // Tile previous isolated nodes that are now inside a block.
+    for &(gi, t) in &prev.global.isolated {
+        let (spi, la) = where_of[gi];
+        if spi == usize::MAX {
+            continue;
+        }
+        if let Some((theta, w)) = warms[spi].as_mut() {
+            theta.set(la, la, t);
+            w.set(la, la, 1.0 / t);
+        }
+    }
+
+    warms
+        .into_iter()
+        .map(|opt| opt.map(|(theta, w)| WarmStart { theta, w }))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CoordinatorConfig, NativeBackend};
+    use crate::datasets::synthetic::block_instance;
+    use crate::solvers::kkt::check_kkt;
+
+    fn coord() -> Coordinator<NativeBackend> {
+        Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default())
+    }
+
+    #[test]
+    fn path_solutions_match_pointwise_solves() {
+        let inst = block_instance(2, 6, 3);
+        let c = coord();
+        let grid = [0.95, 0.9, 0.85];
+        let path = solve_path(&c, &inst.s, &grid, true).unwrap();
+        assert_eq!(path.points.len(), 3);
+        for pt in &path.points {
+            let direct = c.solve_screened(&inst.s, pt.lambda).unwrap();
+            let diff = pt
+                .report
+                .global
+                .theta_dense()
+                .max_abs_diff(&direct.global.theta_dense());
+            assert!(diff < 1e-5, "λ={} diff={diff}", pt.lambda);
+        }
+    }
+
+    #[test]
+    fn warm_and_cold_agree() {
+        let inst = block_instance(3, 5, 5);
+        let c = coord();
+        let grid = [1.0, 0.9, 0.8];
+        let warm = solve_path(&c, &inst.s, &grid, true).unwrap();
+        let cold = solve_path(&c, &inst.s, &grid, false).unwrap();
+        for (a, b) in warm.points.iter().zip(cold.points.iter()) {
+            let diff =
+                a.report.global.theta_dense().max_abs_diff(&b.report.global.theta_dense());
+            assert!(diff < 1e-5, "λ={} diff={diff}", a.lambda);
+        }
+    }
+
+    #[test]
+    fn kkt_along_the_path() {
+        let inst = block_instance(2, 5, 8);
+        let c = coord();
+        let grid = [0.95, 0.88, 0.82];
+        let path = solve_path(&c, &inst.s, &grid, true).unwrap();
+        for pt in &path.points {
+            let dense = pt.report.global.theta_dense();
+            let kkt = check_kkt(&inst.s, &dense, pt.lambda, 1e-4);
+            assert!(kkt.satisfied, "λ={}: {kkt:?}", pt.lambda);
+        }
+    }
+
+    #[test]
+    fn nesting_holds_along_path() {
+        let inst = block_instance(4, 4, 10);
+        let c = coord();
+        // wide grid: from all-isolated down into merged regime
+        let grid = [1.2, 1.0, 0.9, 0.7, 0.5];
+        let path = solve_path(&c, &inst.s, &grid, true).unwrap();
+        for w in path.points.windows(2) {
+            assert!(w[0]
+                .report
+                .global
+                .partition
+                .is_refinement_of(&w[1].report.global.partition));
+        }
+    }
+
+    #[test]
+    fn ascending_grid_rejected() {
+        let inst = block_instance(2, 4, 2);
+        let c = coord();
+        assert!(solve_path(&c, &inst.s, &[0.5, 0.9], true).is_err());
+        assert!(solve_path(&c, &inst.s, &[], true).is_err());
+    }
+}

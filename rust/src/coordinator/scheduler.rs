@@ -1,0 +1,209 @@
+//! Capacity-aware component scheduling — §2 consequence 5 + footnote 4.
+//!
+//! The paper's deployment model: a fleet of machines, each able to solve a
+//! glasso problem of size ≤ p_max; components are distributed across
+//! machines, "club[bing] smaller components into a single machine". We
+//! model per-component cost as size^J (J = 3, the §3 solver exponent) and
+//! schedule by Longest-Processing-Time-first greedy onto the least-loaded
+//! machine — the classic 4/3-approximation for makespan.
+
+use anyhow::{bail, Result};
+
+/// Cost model for a component of size n: n^J.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    pub exponent: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { exponent: 3.0 }
+    }
+}
+
+impl CostModel {
+    pub fn cost(&self, size: usize) -> f64 {
+        (size as f64).powf(self.exponent)
+    }
+}
+
+/// The schedule: which machine runs each component and the load profile.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// machine_of[c] = machine index for component c (indexing the input)
+    pub machine_of: Vec<usize>,
+    /// components assigned to each machine
+    pub per_machine: Vec<Vec<usize>>,
+    /// modeled load (Σ cost) per machine
+    pub loads: Vec<f64>,
+}
+
+impl Schedule {
+    /// Modeled makespan (max machine load).
+    pub fn makespan(&self) -> f64 {
+        self.loads.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Modeled serial time (Σ all loads).
+    pub fn serial_time(&self) -> f64 {
+        self.loads.iter().sum()
+    }
+
+    /// Modeled parallel speedup.
+    pub fn parallel_speedup(&self) -> f64 {
+        let ms = self.makespan();
+        if ms > 0.0 {
+            self.serial_time() / ms
+        } else {
+            1.0
+        }
+    }
+
+    pub fn n_machines(&self) -> usize {
+        self.per_machine.len()
+    }
+}
+
+/// LPT-greedy schedule of components (given by size) onto `n_machines`
+/// machines, each refusing single components larger than `capacity`.
+///
+/// Errors if any component exceeds the capacity — the caller should raise
+/// λ (see `screen::lambda_for_capacity`) rather than over-commit a machine,
+/// which is precisely the paper's operating procedure in §4.2.
+pub fn schedule_lpt(
+    sizes: &[usize],
+    n_machines: usize,
+    capacity: usize,
+    cost: CostModel,
+) -> Result<Schedule> {
+    if n_machines == 0 {
+        bail!("need at least one machine");
+    }
+    if let Some((idx, &sz)) = sizes.iter().enumerate().find(|(_, &s)| s > capacity) {
+        bail!(
+            "component {idx} of size {sz} exceeds machine capacity {capacity}; \
+             raise lambda to at least lambda_{{p_max}} (screen::lambda_for_capacity)"
+        );
+    }
+
+    // LPT: sort components by cost descending, place each on the currently
+    // least-loaded machine.
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    order.sort_by(|&a, &b| {
+        cost.cost(sizes[b]).partial_cmp(&cost.cost(sizes[a])).unwrap().then(a.cmp(&b))
+    });
+
+    let mut machine_of = vec![0usize; sizes.len()];
+    let mut per_machine = vec![Vec::new(); n_machines];
+    let mut loads = vec![0.0f64; n_machines];
+    for &c in &order {
+        let m = (0..n_machines)
+            .min_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+            .unwrap();
+        machine_of[c] = m;
+        per_machine[m].push(c);
+        loads[m] += cost.cost(sizes[c]);
+    }
+    Ok(Schedule { machine_of, per_machine, loads })
+}
+
+/// Alternative policy for the ablation bench: round-robin in input order
+/// (ignores sizes — a deliberately naive baseline).
+pub fn schedule_round_robin(
+    sizes: &[usize],
+    n_machines: usize,
+    capacity: usize,
+    cost: CostModel,
+) -> Result<Schedule> {
+    if n_machines == 0 {
+        bail!("need at least one machine");
+    }
+    if let Some((idx, &sz)) = sizes.iter().enumerate().find(|(_, &s)| s > capacity) {
+        bail!("component {idx} of size {sz} exceeds machine capacity {capacity}");
+    }
+    let mut machine_of = vec![0usize; sizes.len()];
+    let mut per_machine = vec![Vec::new(); n_machines];
+    let mut loads = vec![0.0f64; n_machines];
+    for (c, &s) in sizes.iter().enumerate() {
+        let m = c % n_machines;
+        machine_of[c] = m;
+        per_machine[m].push(c);
+        loads[m] += cost.cost(s);
+    }
+    Ok(Schedule { machine_of, per_machine, loads })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lpt_balances_loads() {
+        let sizes = [10, 10, 10, 10, 1, 1, 1, 1];
+        let sched = schedule_lpt(&sizes, 4, 100, CostModel::default()).unwrap();
+        // 4 big ones land on distinct machines
+        let bigs: Vec<usize> = (0..4).map(|c| sched.machine_of[c]).collect();
+        let mut sorted = bigs.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 4);
+        assert!(sched.parallel_speedup() > 3.5);
+    }
+
+    #[test]
+    fn capacity_violation_is_an_error() {
+        let err = schedule_lpt(&[50, 10], 2, 40, CostModel::default()).unwrap_err();
+        assert!(err.to_string().contains("capacity"));
+        assert!(err.to_string().contains("lambda"));
+    }
+
+    #[test]
+    fn all_components_assigned_once() {
+        let sizes = [3, 7, 2, 9, 4, 6, 1];
+        let sched = schedule_lpt(&sizes, 3, 10, CostModel::default()).unwrap();
+        assert_eq!(sched.machine_of.len(), 7);
+        let total: usize = sched.per_machine.iter().map(|v| v.len()).sum();
+        assert_eq!(total, 7);
+        for (m, comps) in sched.per_machine.iter().enumerate() {
+            for &c in comps {
+                assert_eq!(sched.machine_of[c], m);
+            }
+        }
+    }
+
+    #[test]
+    fn makespan_serial_consistency() {
+        let sizes = [5, 4, 3];
+        let cost = CostModel::default();
+        let sched = schedule_lpt(&sizes, 2, 10, cost).unwrap();
+        let expect_serial: f64 = sizes.iter().map(|&s| cost.cost(s)).sum();
+        assert!((sched.serial_time() - expect_serial).abs() < 1e-9);
+        assert!(sched.makespan() <= sched.serial_time());
+        assert!(sched.makespan() >= expect_serial / 2.0);
+    }
+
+    #[test]
+    fn single_machine_is_serial() {
+        let sizes = [5, 4, 3, 2];
+        let sched = schedule_lpt(&sizes, 1, 10, CostModel::default()).unwrap();
+        assert_eq!(sched.makespan(), sched.serial_time());
+        assert_eq!(sched.parallel_speedup(), 1.0);
+    }
+
+    #[test]
+    fn lpt_beats_round_robin_on_skew() {
+        // adversarial for round-robin: big ones all hit machine 0
+        let sizes = [9, 1, 9, 1, 9, 1];
+        let cost = CostModel::default();
+        let lpt = schedule_lpt(&sizes, 2, 10, cost).unwrap();
+        let rr = schedule_round_robin(&sizes, 2, 10, cost).unwrap();
+        assert!(lpt.makespan() < rr.makespan());
+    }
+
+    #[test]
+    fn empty_input() {
+        let sched = schedule_lpt(&[], 2, 10, CostModel::default()).unwrap();
+        assert_eq!(sched.makespan(), 0.0);
+        assert_eq!(sched.parallel_speedup(), 1.0);
+    }
+}

@@ -1,0 +1,198 @@
+//! Sample covariance / correlation construction from a data matrix —
+//! the O(n·p²) step of §3, plus the global-mean imputation used for the
+//! microarray examples (B) and (C) in §4.2.
+
+use crate::linalg::{blas, Mat};
+
+/// Column means ignoring NaNs. Returns (means, n_missing_total).
+pub fn column_means_observed(x: &Mat) -> (Vec<f64>, usize) {
+    let (n, p) = (x.rows(), x.cols());
+    let mut sums = vec![0.0; p];
+    let mut counts = vec![0usize; p];
+    let mut missing = 0usize;
+    for i in 0..n {
+        let row = x.row(i);
+        for j in 0..p {
+            if row[j].is_nan() {
+                missing += 1;
+            } else {
+                sums[j] += row[j];
+                counts[j] += 1;
+            }
+        }
+    }
+    let means = sums
+        .iter()
+        .zip(counts.iter())
+        .map(|(&s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+        .collect();
+    (means, missing)
+}
+
+/// Global mean of all observed (non-NaN) entries.
+pub fn global_mean_observed(x: &Mat) -> f64 {
+    let mut sum = 0.0;
+    let mut count = 0usize;
+    for v in x.as_slice() {
+        if !v.is_nan() {
+            sum += v;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        0.0
+    } else {
+        sum / count as f64
+    }
+}
+
+/// Impute NaNs by the global mean of observed values (paper §4.2: examples
+/// (B) and (C) "have few missing values — which we imputed by the respective
+/// global means"). Returns the number of imputed entries.
+pub fn impute_global_mean(x: &mut Mat) -> usize {
+    let g = global_mean_observed(x);
+    let mut count = 0usize;
+    for v in x.as_mut_slice() {
+        if v.is_nan() {
+            *v = g;
+            count += 1;
+        }
+    }
+    count
+}
+
+/// Sample covariance matrix S = (1/n) (X - x̄)ᵀ (X - x̄).
+/// (MLE normalization 1/n, matching the glasso likelihood (1).)
+pub fn sample_covariance(x: &Mat) -> Mat {
+    let (n, p) = (x.rows(), x.cols());
+    assert!(n > 0 && p > 0);
+    let (means, _) = column_means_observed(x);
+    let mut centered = x.clone();
+    for i in 0..n {
+        let row = centered.row_mut(i);
+        for j in 0..p {
+            row[j] -= means[j];
+        }
+    }
+    let mut s = blas::syrk_t(&centered);
+    s.scale(1.0 / n as f64);
+    s
+}
+
+/// Sample correlation matrix (unit diagonal). Columns with zero variance get
+/// correlation 0 off-diagonal and 1 on the diagonal.
+pub fn sample_correlation(x: &Mat) -> Mat {
+    let mut s = sample_covariance(x);
+    let p = s.cols();
+    let sd: Vec<f64> = (0..p).map(|j| s.get(j, j).sqrt()).collect();
+    for i in 0..p {
+        for j in 0..p {
+            let d = sd[i] * sd[j];
+            let v = if d > 0.0 { s.get(i, j) / d } else { 0.0 };
+            s.set(i, j, if i == j { 1.0 } else { v });
+        }
+    }
+    s
+}
+
+/// Z-score columns in place (mean 0, ‖col‖₂ = √n ⇒ XᵀX/n is the correlation
+/// matrix) — the streaming screen consumes this form.
+pub fn standardize_columns(x: &mut Mat) {
+    let (n, p) = (x.rows(), x.cols());
+    let (means, _) = column_means_observed(x);
+    let mut ssq = vec![0.0; p];
+    for i in 0..n {
+        let row = x.row_mut(i);
+        for j in 0..p {
+            row[j] -= means[j];
+            ssq[j] += row[j] * row[j];
+        }
+    }
+    let inv_sd: Vec<f64> = ssq
+        .iter()
+        .map(|&s| {
+            let sd = (s / n as f64).sqrt();
+            if sd > 0.0 {
+                1.0 / sd
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    for i in 0..n {
+        let row = x.row_mut(i);
+        for j in 0..p {
+            row[j] *= inv_sd[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn covariance_of_known_data() {
+        // two columns, perfectly anti-correlated
+        let x = Mat::from_vec(4, 2, vec![1.0, -1.0, 2.0, -2.0, 3.0, -3.0, 4.0, -4.0]);
+        let s = sample_covariance(&x);
+        assert!((s.get(0, 0) - 1.25).abs() < 1e-12);
+        assert!((s.get(0, 1) + 1.25).abs() < 1e-12);
+        let c = sample_correlation(&x);
+        assert!((c.get(0, 1) + 1.0).abs() < 1e-12);
+        assert_eq!(c.get(0, 0), 1.0);
+    }
+
+    #[test]
+    fn correlation_bounded() {
+        let mut rng = Xoshiro256::seed_from_u64(10);
+        let x = Mat::from_fn(30, 8, |_, _| rng.gaussian());
+        let c = sample_correlation(&x);
+        for i in 0..8 {
+            assert!((c.get(i, i) - 1.0).abs() < 1e-12);
+            for j in 0..8 {
+                assert!(c.get(i, j).abs() <= 1.0 + 1e-12);
+            }
+        }
+        assert!(c.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn imputation_global_mean() {
+        let mut x = Mat::from_vec(2, 2, vec![1.0, f64::NAN, 3.0, 5.0]);
+        let g = global_mean_observed(&x);
+        assert!((g - 3.0).abs() < 1e-12);
+        let k = impute_global_mean(&mut x);
+        assert_eq!(k, 1);
+        assert_eq!(x.get(0, 1), 3.0);
+    }
+
+    #[test]
+    fn standardized_gram_is_correlation() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        let x = Mat::from_fn(50, 6, |_, _| rng.gaussian() * 3.0 + 1.0);
+        let c = sample_correlation(&x);
+        let mut z = x.clone();
+        standardize_columns(&mut z);
+        let mut g = crate::linalg::syrk_t(&z);
+        g.scale(1.0 / 50.0);
+        assert!(g.max_abs_diff(&c) < 1e-10);
+    }
+
+    #[test]
+    fn zero_variance_column() {
+        let x = Mat::from_vec(3, 2, vec![1.0, 5.0, 1.0, 6.0, 1.0, 7.0]);
+        let c = sample_correlation(&x);
+        assert_eq!(c.get(0, 0), 1.0);
+        assert_eq!(c.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn column_means_with_missing() {
+        let x = Mat::from_vec(2, 2, vec![2.0, f64::NAN, 4.0, 8.0]);
+        let (m, missing) = column_means_observed(&x);
+        assert_eq!(m, vec![3.0, 8.0]);
+        assert_eq!(missing, 1);
+    }
+}

@@ -1,0 +1,260 @@
+//! Simulated microarray expression data for the paper's §4.2 examples.
+//!
+//! The real datasets are gated (Alon et al. colon data, the Patrick Brown
+//! lab array, the NKI breast-cancer set); per DESIGN.md §4 we substitute a
+//! latent-factor generator that reproduces what the screen actually
+//! consumes: a p×p sample **correlation** matrix whose off-diagonal
+//! magnitude distribution yields the Figure-1 phenomenology — a giant
+//! component at small λ that dissolves into a power-law spread of small
+//! components as λ grows, with n ≪ p sampling noise setting the background
+//! correlation level.
+//!
+//! Generator: genes are grouped into latent clusters whose sizes follow a
+//! truncated Pareto; gene j in cluster c has expression
+//! x_j = w_j·f_c + (1-w_j²)^{1/2}·ε_j over n arrays (f_c, ε iid N(0,1)),
+//! so within-cluster population correlation is w_i·w_j with w ~ U(lo, hi).
+//! A fraction of genes is unclustered pure noise. Missingness is injected
+//! and imputed by the global observed mean, exercising §4.2's imputation.
+
+use super::covariance::{impute_global_mean, sample_correlation};
+use crate::linalg::Mat;
+use crate::util::rng::Xoshiro256;
+
+/// Configuration of the simulated expression study.
+#[derive(Clone, Debug)]
+pub struct MicroarrayConfig {
+    /// number of genes (columns)
+    pub p: usize,
+    /// number of arrays/samples (rows)
+    pub n: usize,
+    /// fraction of genes assigned to correlated clusters (rest pure noise)
+    pub clustered_fraction: f64,
+    /// Pareto tail exponent for cluster sizes (smaller = heavier tail)
+    pub cluster_alpha: f64,
+    /// largest allowed cluster
+    pub max_cluster: usize,
+    /// factor-loading range (within-cluster correlation ≈ w²)
+    pub loading_lo: f64,
+    pub loading_hi: f64,
+    /// fraction of entries set missing then imputed
+    pub missing_fraction: f64,
+    pub seed: u64,
+}
+
+/// A generated study: raw data matrix and derived correlation matrix.
+pub struct MicroarrayStudy {
+    pub config: MicroarrayConfig,
+    /// n×p expression matrix (after imputation)
+    pub x: Mat,
+    /// p×p sample correlation matrix (what §4.2 feeds the screen)
+    pub s: Mat,
+    /// latent cluster id per gene (usize::MAX = unclustered noise gene)
+    pub cluster_of: Vec<usize>,
+    pub n_imputed: usize,
+}
+
+/// Draw a truncated-Pareto cluster size in [2, max].
+fn pareto_size(rng: &mut Xoshiro256, alpha: f64, max: usize) -> usize {
+    let u = rng.uniform().max(1e-12);
+    let raw = 2.0 * u.powf(-1.0 / alpha);
+    (raw as usize).clamp(2, max)
+}
+
+/// Generate the study (data matrix only; see `generate` for S too).
+pub fn generate_data(config: &MicroarrayConfig) -> (Mat, Vec<usize>, usize) {
+    let mut rng = Xoshiro256::seed_from_u64(config.seed);
+    let (n, p) = (config.n, config.p);
+
+    // Assign genes to clusters.
+    let n_clustered = ((p as f64) * config.clustered_fraction) as usize;
+    let mut cluster_of = vec![usize::MAX; p];
+    let perm = rng.permutation(p);
+    let mut assigned = 0usize;
+    let mut cluster_id = 0usize;
+    while assigned < n_clustered {
+        let sz = pareto_size(&mut rng, config.cluster_alpha, config.max_cluster)
+            .min(n_clustered - assigned)
+            .max(1);
+        for k in 0..sz {
+            cluster_of[perm[assigned + k]] = cluster_id;
+        }
+        assigned += sz;
+        cluster_id += 1;
+    }
+
+    // Latent factors per cluster.
+    let factors: Vec<Vec<f64>> = (0..cluster_id).map(|_| rng.gaussian_vec(n)).collect();
+
+    // Loadings per gene.
+    let loadings: Vec<f64> = (0..p)
+        .map(|_| rng.uniform_range(config.loading_lo, config.loading_hi))
+        .collect();
+
+    // Expression matrix, column by column (genes) over rows (arrays).
+    let mut x = Mat::zeros(n, p);
+    for j in 0..p {
+        let c = cluster_of[j];
+        let w = loadings[j];
+        let noise_w = (1.0 - w * w).max(0.0).sqrt();
+        for i in 0..n {
+            let signal = if c == usize::MAX { 0.0 } else { w * factors[c][i] };
+            let scale = if c == usize::MAX { 1.0 } else { noise_w };
+            x.set(i, j, signal + scale * rng.gaussian());
+        }
+    }
+
+    // Inject missingness, then impute by global mean (paper §4.2).
+    let n_missing = ((n * p) as f64 * config.missing_fraction) as usize;
+    for _ in 0..n_missing {
+        let i = rng.uniform_usize(n);
+        let j = rng.uniform_usize(p);
+        x.set(i, j, f64::NAN);
+    }
+    let n_imputed = impute_global_mean(&mut x);
+    (x, cluster_of, n_imputed)
+}
+
+/// Generate the full study including the dense correlation matrix.
+/// Memory: p² doubles — fine up to p ≈ 25k on this machine (≈5 GB).
+pub fn generate(config: &MicroarrayConfig) -> MicroarrayStudy {
+    let (x, cluster_of, n_imputed) = generate_data(config);
+    let s = sample_correlation(&x);
+    MicroarrayStudy { config: config.clone(), x, s, cluster_of, n_imputed }
+}
+
+/// Example (A): Alon et al. colon cancer — p=2000, n=62.
+pub fn example_a(seed: u64) -> MicroarrayConfig {
+    MicroarrayConfig {
+        p: 2000,
+        n: 62,
+        clustered_fraction: 0.55,
+        cluster_alpha: 1.1,
+        max_cluster: 120,
+        loading_lo: 0.55,
+        loading_hi: 0.95,
+        missing_fraction: 0.0, // (A) had no missing values
+        seed,
+    }
+}
+
+/// Example (B): Patrick Brown lab array — p=4718, n=385.
+pub fn example_b(seed: u64) -> MicroarrayConfig {
+    MicroarrayConfig {
+        p: 4718,
+        n: 385,
+        clustered_fraction: 0.5,
+        cluster_alpha: 1.0,
+        max_cluster: 250,
+        loading_lo: 0.5,
+        loading_hi: 0.95,
+        missing_fraction: 0.002, // "few missing values"
+        seed,
+    }
+}
+
+/// Example (C): NKI breast cancer — p=24481, n=295.
+pub fn example_c(seed: u64) -> MicroarrayConfig {
+    MicroarrayConfig {
+        p: 24481,
+        n: 295,
+        clustered_fraction: 0.45,
+        cluster_alpha: 0.9,
+        max_cluster: 600,
+        loading_lo: 0.45,
+        loading_hi: 0.95,
+        missing_fraction: 0.001,
+        seed,
+    }
+}
+
+/// Scaled-down variant for tests/CI: same shape parameters, smaller p/n.
+pub fn scaled(config: &MicroarrayConfig, p: usize, n: usize) -> MicroarrayConfig {
+    MicroarrayConfig { p, n, max_cluster: config.max_cluster.min(p / 4 + 2), ..config.clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> MicroarrayConfig {
+        scaled(&example_a(1), 120, 40)
+    }
+
+    #[test]
+    fn shapes_and_diagonal() {
+        let study = generate(&small());
+        assert_eq!(study.x.rows(), 40);
+        assert_eq!(study.x.cols(), 120);
+        assert_eq!(study.s.rows(), 120);
+        for i in 0..120 {
+            assert!((study.s.get(i, i) - 1.0).abs() < 1e-10);
+        }
+        assert!(study.s.is_symmetric(1e-10));
+    }
+
+    #[test]
+    fn within_cluster_correlation_higher() {
+        let study = generate(&small());
+        let s = &study.s;
+        let mut within = Vec::new();
+        let mut between = Vec::new();
+        for i in 0..120 {
+            for j in (i + 1)..120 {
+                let same = study.cluster_of[i] != usize::MAX
+                    && study.cluster_of[i] == study.cluster_of[j];
+                if same {
+                    within.push(s.get(i, j).abs());
+                } else {
+                    between.push(s.get(i, j).abs());
+                }
+            }
+        }
+        assert!(!within.is_empty());
+        let mw = crate::util::mean(&within);
+        let mb = crate::util::mean(&between);
+        assert!(mw > mb + 0.1, "within={mw:.3} between={mb:.3}");
+    }
+
+    #[test]
+    fn missingness_imputed() {
+        let mut cfg = small();
+        cfg.missing_fraction = 0.01;
+        let study = generate(&cfg);
+        assert!(study.n_imputed > 0);
+        assert!(study.x.as_slice().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = generate(&small());
+        let b = generate(&small());
+        assert_eq!(a.s.as_slice(), b.s.as_slice());
+        let mut cfg = small();
+        cfg.seed = 2;
+        let c = generate(&cfg);
+        assert!(a.s.max_abs_diff(&c.s) > 1e-6);
+    }
+
+    #[test]
+    fn cluster_sizes_bounded() {
+        let cfg = small();
+        let (_, cluster_of, _) = generate_data(&cfg);
+        let mut counts = std::collections::HashMap::new();
+        for &c in &cluster_of {
+            if c != usize::MAX {
+                *counts.entry(c).or_insert(0usize) += 1;
+            }
+        }
+        assert!(!counts.is_empty());
+        assert!(counts.values().all(|&c| c <= cfg.max_cluster));
+    }
+
+    #[test]
+    fn pareto_size_in_range() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for _ in 0..1000 {
+            let s = pareto_size(&mut rng, 1.1, 50);
+            assert!((2..=50).contains(&s));
+        }
+    }
+}

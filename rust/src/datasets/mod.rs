@@ -1,0 +1,14 @@
+//! Workload generators + covariance construction.
+//!
+//! `synthetic` — the paper's §4.1 block-diagonal instances (Table 1);
+//! `microarray` — simulated substitutes for the gated §4.2 expression
+//! datasets (A)/(B)/(C) (Figure 1, Tables 2–3) — see DESIGN.md §4;
+//! `covariance` — sample covariance/correlation + global-mean imputation.
+
+pub mod covariance;
+pub mod microarray;
+pub mod synthetic;
+
+pub use covariance::{sample_correlation, sample_covariance, standardize_columns};
+pub use microarray::{example_a, example_b, example_c, generate as generate_microarray, MicroarrayConfig};
+pub use synthetic::{block_instance, block_instance_sizes, SyntheticInstance};

@@ -1,0 +1,131 @@
+//! Sparse undirected graph in CSR form + edge-list builder.
+//!
+//! The thresholded sample covariance graph E(λ) (eq. 4 of the paper) is
+//! materialized in this form: p up to ~25k, |E| ≪ p² in the screening
+//! regime, so CSR keeps the BFS/DFS component pass O(|E| + p).
+
+/// Undirected graph, CSR adjacency. Vertices are 0..n.
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    n: usize,
+    /// offsets.len() == n+1
+    offsets: Vec<usize>,
+    /// neighbor lists, concatenated
+    neighbors: Vec<u32>,
+}
+
+impl CsrGraph {
+    /// Build from an undirected edge list (u, v); self-loops are dropped,
+    /// duplicate edges are kept (harmless for connectivity).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> CsrGraph {
+        let mut degree = vec![0usize; n];
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            degree[u as usize] += 1;
+            degree[v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + degree[i];
+        }
+        let mut cursor = offsets.clone();
+        let mut neighbors = vec![0u32; offsets[n]];
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            neighbors[cursor[u as usize]] = v;
+            cursor[u as usize] += 1;
+            neighbors[cursor[v as usize]] = u;
+            cursor[v as usize] += 1;
+        }
+        CsrGraph { n, offsets, neighbors }
+    }
+
+    /// Build from a dense symmetric adjacency (0/1) matrix given as closure.
+    pub fn from_dense(n: usize, is_edge: impl Fn(usize, usize) -> bool) -> CsrGraph {
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if is_edge(i, j) {
+                    edges.push((i as u32, j as u32));
+                }
+            }
+        }
+        CsrGraph::from_edges(n, &edges)
+    }
+
+    #[inline]
+    pub fn n_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Number of undirected edges.
+    pub fn n_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Vertices with no incident edges — the Witten–Friedman screen (7).
+    pub fn isolated_vertices(&self) -> Vec<usize> {
+        (0..self.n).filter(|&v| self.degree(v) == 0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_basic() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2)]);
+        assert_eq!(g.n_vertices(), 4);
+        assert_eq!(g.n_edges(), 2);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.degree(3), 0);
+        let mut nb: Vec<u32> = g.neighbors(1).to_vec();
+        nb.sort_unstable();
+        assert_eq!(nb, vec![0, 2]);
+    }
+
+    #[test]
+    fn self_loops_dropped() {
+        let g = CsrGraph::from_edges(3, &[(0, 0), (0, 1)]);
+        assert_eq!(g.n_edges(), 1);
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    fn isolated_detection() {
+        let g = CsrGraph::from_edges(5, &[(1, 3)]);
+        assert_eq!(g.isolated_vertices(), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn from_dense_matches_edges() {
+        let g = CsrGraph::from_dense(4, |i, j| i + 1 == j);
+        // path 0-1-2-3
+        assert_eq!(g.n_edges(), 3);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::from_edges(0, &[]);
+        assert_eq!(g.n_vertices(), 0);
+        assert_eq!(g.n_edges(), 0);
+        assert!(g.isolated_vertices().is_empty());
+    }
+}

@@ -1,0 +1,147 @@
+//! Connected components: BFS over CSR, union-find over edge lists, and a
+//! dense-matrix entry point for thresholded covariance graphs.
+//!
+//! Complexity O(|E| + p) (Tarjan 1972), matching §3 of the paper. Both
+//! implementations are kept because the screening engine uses union-find
+//! incrementally (edges sorted by |S_ij|) while one-shot queries on a built
+//! graph are faster via BFS.
+
+use super::adjacency::CsrGraph;
+use super::partition::Partition;
+use super::union_find::UnionFind;
+
+/// Connected components of a CSR graph via BFS. O(|E| + p).
+pub fn components_bfs(g: &CsrGraph) -> Partition {
+    let n = g.n_vertices();
+    let mut labels = vec![usize::MAX; n];
+    let mut queue: Vec<u32> = Vec::new();
+    let mut next = 0usize;
+    for start in 0..n {
+        if labels[start] != usize::MAX {
+            continue;
+        }
+        let l = next;
+        next += 1;
+        labels[start] = l;
+        queue.clear();
+        queue.push(start as u32);
+        let mut head = 0;
+        while head < queue.len() {
+            let v = queue[head] as usize;
+            head += 1;
+            for &w in g.neighbors(v) {
+                let w = w as usize;
+                if labels[w] == usize::MAX {
+                    labels[w] = l;
+                    queue.push(w as u32);
+                }
+            }
+        }
+    }
+    Partition::from_labels(&labels)
+}
+
+/// Connected components from an edge list via union-find. O(|E| α(p) + p).
+pub fn components_union_find(n: usize, edges: &[(u32, u32)]) -> Partition {
+    let mut uf = UnionFind::new(n);
+    for &(u, v) in edges {
+        uf.union(u as usize, v as usize);
+    }
+    Partition::from_labels(&uf.labels())
+}
+
+/// Iterative DFS components (Tarjan-style, explicit stack — safe for huge
+/// components where recursion would overflow).
+pub fn components_dfs(g: &CsrGraph) -> Partition {
+    let n = g.n_vertices();
+    let mut labels = vec![usize::MAX; n];
+    let mut stack: Vec<u32> = Vec::new();
+    let mut next = 0usize;
+    for start in 0..n {
+        if labels[start] != usize::MAX {
+            continue;
+        }
+        let l = next;
+        next += 1;
+        stack.clear();
+        stack.push(start as u32);
+        labels[start] = l;
+        while let Some(v) = stack.pop() {
+            for &w in g.neighbors(v as usize) {
+                if labels[w as usize] == usize::MAX {
+                    labels[w as usize] = l;
+                    stack.push(w);
+                }
+            }
+        }
+    }
+    Partition::from_labels(&labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    fn path_graph(n: usize) -> CsrGraph {
+        let edges: Vec<(u32, u32)> = (0..n.saturating_sub(1)).map(|i| (i as u32, (i + 1) as u32)).collect();
+        CsrGraph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn path_is_one_component() {
+        let p = components_bfs(&path_graph(10));
+        assert_eq!(p.n_components(), 1);
+        assert_eq!(p.max_component_size(), 10);
+    }
+
+    #[test]
+    fn disconnected_pieces() {
+        let g = CsrGraph::from_edges(7, &[(0, 1), (1, 2), (4, 5)]);
+        for part in [
+            components_bfs(&g),
+            components_dfs(&g),
+            components_union_find(7, &[(0, 1), (1, 2), (4, 5)]),
+        ] {
+            assert_eq!(part.n_components(), 4); // {0,1,2} {3} {4,5} {6}
+            assert_eq!(part.label_of(0), part.label_of(2));
+            assert_ne!(part.label_of(0), part.label_of(4));
+            assert_eq!(part.n_isolated(), 2);
+        }
+    }
+
+    #[test]
+    fn all_three_agree_on_random_graphs() {
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        for trial in 0..25 {
+            let n = 2 + rng.uniform_usize(60);
+            let m = rng.uniform_usize(2 * n);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (rng.uniform_usize(n) as u32, rng.uniform_usize(n) as u32))
+                .collect();
+            let g = CsrGraph::from_edges(n, &edges);
+            let a = components_bfs(&g);
+            let b = components_dfs(&g);
+            let c = components_union_find(n, &edges);
+            assert!(a.equals(&b), "trial {trial}: bfs != dfs");
+            assert!(a.equals(&c), "trial {trial}: bfs != uf");
+        }
+    }
+
+    #[test]
+    fn empty_and_edgeless() {
+        let g = CsrGraph::from_edges(0, &[]);
+        assert_eq!(components_bfs(&g).n_components(), 0);
+        let g = CsrGraph::from_edges(5, &[]);
+        let p = components_bfs(&g);
+        assert_eq!(p.n_components(), 5);
+        assert!(p.equals(&Partition::singletons(5)));
+    }
+
+    #[test]
+    fn big_component_no_stack_overflow() {
+        // 200k-vertex path: recursion would overflow, iterative must not.
+        let p = components_dfs(&path_graph(200_000));
+        assert_eq!(p.n_components(), 1);
+    }
+}

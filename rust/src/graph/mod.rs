@@ -1,0 +1,13 @@
+//! Graph substrate: CSR adjacency, union-find, connected components, and
+//! the `Partition` type that Theorems 1 & 2 are stated over.
+
+pub mod adjacency;
+pub mod components;
+pub mod parallel_cc;
+pub mod partition;
+pub mod union_find;
+
+pub use adjacency::CsrGraph;
+pub use components::{components_bfs, components_dfs, components_union_find};
+pub use partition::Partition;
+pub use union_find::UnionFind;

@@ -1,0 +1,129 @@
+//! Parallel connected components — label-propagation ("hooking +
+//! shortcutting") in the style the paper cites for the off-line screen
+//! (§3: Gazit 1991, O(log p) time on (|E|+p)/log p processors).
+//!
+//! The algorithm is the classic Shiloach–Vishkin structure: every round,
+//! each edge hooks the larger root onto the smaller, then every vertex
+//! pointer is shortcut (pointer jumping). Rounds are data-parallel —
+//! here they run as deterministic sequential passes (1-core box), but the
+//! round count is the quantity of interest: it is O(log p), which the
+//! tests assert, versus the O(p) depth a BFS frontier can reach.
+
+use super::partition::Partition;
+
+/// Result: the partition plus the number of parallel rounds it took.
+pub struct ParallelCcResult {
+    pub partition: Partition,
+    pub rounds: usize,
+}
+
+/// Shiloach–Vishkin-style label propagation over an edge list.
+pub fn components_label_propagation(n: usize, edges: &[(u32, u32)]) -> ParallelCcResult {
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    let mut rounds = 0usize;
+    if n == 0 {
+        return ParallelCcResult { partition: Partition::from_labels(&[]), rounds };
+    }
+    loop {
+        rounds += 1;
+        let mut changed = false;
+
+        // Hooking: for each edge, attach the larger root under the smaller.
+        // (Deterministic: min-root wins, so the result is seed-free.)
+        for &(u, v) in edges {
+            let (ru, rv) = (parent[u as usize], parent[v as usize]);
+            if ru == rv {
+                continue;
+            }
+            let (lo, hi) = if ru < rv { (ru, rv) } else { (rv, ru) };
+            // hook only roots (parent[hi] == hi) to keep the forest shallow
+            if parent[hi as usize] == hi {
+                parent[hi as usize] = lo;
+                changed = true;
+            }
+        }
+
+        // Shortcutting: pointer jumping, parent <- parent(parent).
+        for v in 0..n {
+            let p = parent[v];
+            let gp = parent[p as usize];
+            if gp != p {
+                parent[v] = gp;
+                changed = true;
+            }
+        }
+
+        if !changed {
+            break;
+        }
+    }
+
+    // Final flatten to roots (at most O(log p) extra hops).
+    for v in 0..n {
+        let mut r = parent[v];
+        while parent[r as usize] != r {
+            r = parent[r as usize];
+        }
+        parent[v] = r;
+    }
+    let labels: Vec<usize> = parent.iter().map(|&r| r as usize).collect();
+    ParallelCcResult { partition: Partition::from_labels(&labels), rounds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::components_union_find;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn matches_union_find_on_random_graphs() {
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        for trial in 0..30 {
+            let n = 2 + rng.uniform_usize(200);
+            let m = rng.uniform_usize(3 * n);
+            let edges: Vec<(u32, u32)> = (0..m)
+                .map(|_| (rng.uniform_usize(n) as u32, rng.uniform_usize(n) as u32))
+                .filter(|&(a, b)| a != b)
+                .collect();
+            let lp = components_label_propagation(n, &edges);
+            let uf = components_union_find(n, &edges);
+            assert!(lp.partition.equals(&uf), "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn round_count_is_logarithmic_on_paths() {
+        // A path graph is the adversarial case for propagation depth;
+        // pointer jumping must keep rounds ~log2(n), far below n.
+        for n in [64usize, 256, 1024, 4096] {
+            let edges: Vec<(u32, u32)> =
+                (0..n - 1).map(|i| (i as u32, (i + 1) as u32)).collect();
+            let lp = components_label_propagation(n, &edges);
+            assert_eq!(lp.partition.n_components(), 1);
+            let bound = 4 * (n as f64).log2().ceil() as usize + 8;
+            assert!(
+                lp.rounds <= bound,
+                "n={n}: rounds={} exceeds O(log p) bound {bound}",
+                lp.rounds
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_edgeless() {
+        let r = components_label_propagation(0, &[]);
+        assert_eq!(r.partition.n_components(), 0);
+        let r = components_label_propagation(5, &[]);
+        assert_eq!(r.partition.n_components(), 5);
+    }
+
+    #[test]
+    fn deterministic() {
+        let edges = vec![(0u32, 3u32), (1, 2), (3, 4), (2, 0)];
+        let a = components_label_propagation(6, &edges);
+        let b = components_label_propagation(6, &edges);
+        assert!(a.partition.equals(&b.partition));
+        assert_eq!(a.rounds, b.rounds);
+    }
+}

@@ -1,0 +1,215 @@
+//! Vertex partitions — the object Theorem 1 equates and Theorem 2 nests.
+//!
+//! A `Partition` is the vertex-partition induced by the connected components
+//! of a graph: a canonical labeling plus member lists. Equality is "equal up
+//! to permutation of component labels" exactly as defined in §1.1 of the
+//! paper; `is_refinement_of` is the nesting relation of Theorem 2.
+
+/// Vertex partition of {0..n} into disjoint non-empty groups.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// label[v] ∈ 0..k, canonical (components numbered by smallest member).
+    labels: Vec<usize>,
+    /// groups[l] = sorted member list of component l.
+    groups: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    /// Build from arbitrary (not necessarily canonical) labels.
+    pub fn from_labels(raw: &[usize]) -> Partition {
+        let n = raw.len();
+        // canonicalize: number components by order of first appearance,
+        // then sort groups by smallest member (== first appearance order).
+        let mut remap: Vec<usize> = Vec::new();
+        let mut map: std::collections::HashMap<usize, usize> = std::collections::HashMap::new();
+        let mut labels = vec![0usize; n];
+        for (v, &r) in raw.iter().enumerate() {
+            let l = *map.entry(r).or_insert_with(|| {
+                remap.push(r);
+                remap.len() - 1
+            });
+            labels[v] = l;
+        }
+        let k = remap.len();
+        let mut groups = vec![Vec::new(); k];
+        for (v, &l) in labels.iter().enumerate() {
+            groups[l].push(v);
+        }
+        Partition { labels, groups }
+    }
+
+    /// Build from explicit groups (must partition 0..n).
+    pub fn from_groups(n: usize, groups: &[Vec<usize>]) -> Partition {
+        let mut raw = vec![usize::MAX; n];
+        for (l, g) in groups.iter().enumerate() {
+            for &v in g {
+                assert!(raw[v] == usize::MAX, "vertex {v} in two groups");
+                raw[v] = l;
+            }
+        }
+        assert!(raw.iter().all(|&l| l != usize::MAX), "groups must cover 0..n");
+        Partition::from_labels(&raw)
+    }
+
+    /// The all-singletons partition.
+    pub fn singletons(n: usize) -> Partition {
+        Partition::from_labels(&(0..n).collect::<Vec<_>>())
+    }
+
+    /// One giant component.
+    pub fn trivial(n: usize) -> Partition {
+        Partition::from_labels(&vec![0; n.max(1)][..n])
+    }
+
+    pub fn n_vertices(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn label_of(&self, v: usize) -> usize {
+        self.labels[v]
+    }
+
+    pub fn labels(&self) -> &[usize] {
+        &self.labels
+    }
+
+    pub fn groups(&self) -> &[Vec<usize>] {
+        &self.groups
+    }
+
+    pub fn group(&self, l: usize) -> &[usize] {
+        &self.groups[l]
+    }
+
+    /// Sizes of all components.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.groups.iter().map(|g| g.len()).collect()
+    }
+
+    pub fn max_component_size(&self) -> usize {
+        self.groups.iter().map(|g| g.len()).max().unwrap_or(0)
+    }
+
+    /// Count of singleton components (paper: "isolated nodes").
+    pub fn n_isolated(&self) -> usize {
+        self.groups.iter().filter(|g| g.len() == 1).count()
+    }
+
+    /// Histogram of component sizes: (size, count), ascending by size —
+    /// one horizontal slice of Figure 1.
+    pub fn size_histogram(&self) -> Vec<(usize, usize)> {
+        let mut map = std::collections::BTreeMap::new();
+        for g in &self.groups {
+            *map.entry(g.len()).or_insert(0usize) += 1;
+        }
+        map.into_iter().collect()
+    }
+
+    /// Partition equality as defined in the paper (§1.1): same number of
+    /// components and a label permutation matching the member sets. Because
+    /// both sides are canonicalized (components numbered by smallest member)
+    /// this reduces to structural equality of the group lists.
+    pub fn equals(&self, other: &Partition) -> bool {
+        self.n_vertices() == other.n_vertices() && self.groups == other.groups
+    }
+
+    /// Is `self` a refinement of `coarser` (every component of self contained
+    /// in one component of coarser)? — the Theorem-2 nesting relation.
+    pub fn is_refinement_of(&self, coarser: &Partition) -> bool {
+        if self.n_vertices() != coarser.n_vertices() {
+            return false;
+        }
+        for g in &self.groups {
+            let target = coarser.labels[g[0]];
+            if g.iter().any(|&v| coarser.labels[v] != target) {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+impl PartialEq for Partition {
+    fn eq(&self, other: &Self) -> bool {
+        self.equals(other)
+    }
+}
+impl Eq for Partition {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonicalization_up_to_permutation() {
+        // same partition, different raw labels
+        let a = Partition::from_labels(&[5, 5, 9, 9, 5]);
+        let b = Partition::from_labels(&[0, 0, 1, 1, 0]);
+        let c = Partition::from_labels(&[1, 1, 0, 0, 1]);
+        assert!(a.equals(&b));
+        assert!(b.equals(&c));
+        assert_eq!(a.n_components(), 2);
+        assert_eq!(a.group(0), &[0, 1, 4]);
+        assert_eq!(a.group(1), &[2, 3]);
+    }
+
+    #[test]
+    fn inequality() {
+        let a = Partition::from_labels(&[0, 0, 1]);
+        let b = Partition::from_labels(&[0, 1, 1]);
+        assert!(!a.equals(&b));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn from_groups_roundtrip() {
+        let p = Partition::from_groups(4, &[vec![2, 3], vec![0], vec![1]]);
+        assert_eq!(p.n_components(), 3);
+        assert_eq!(p.label_of(2), p.label_of(3));
+        assert_ne!(p.label_of(0), p.label_of(1));
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_groups_overlap_panics() {
+        let _ = Partition::from_groups(3, &[vec![0, 1], vec![1, 2]]);
+    }
+
+    #[test]
+    fn refinement_relation() {
+        let fine = Partition::from_labels(&[0, 1, 2, 2, 3]);
+        let coarse = Partition::from_labels(&[0, 0, 1, 1, 1]);
+        assert!(fine.is_refinement_of(&coarse));
+        assert!(!coarse.is_refinement_of(&fine));
+        // every partition refines the trivial one and is refined by singletons
+        assert!(fine.is_refinement_of(&Partition::trivial(5)));
+        assert!(Partition::singletons(5).is_refinement_of(&fine));
+        // refinement is reflexive
+        assert!(fine.is_refinement_of(&fine));
+    }
+
+    #[test]
+    fn histogram_and_counts() {
+        let p = Partition::from_labels(&[0, 0, 1, 2, 3, 3, 3]);
+        assert_eq!(p.size_histogram(), vec![(1, 2), (2, 1), (3, 1)]);
+        assert_eq!(p.n_isolated(), 2);
+        assert_eq!(p.max_component_size(), 3);
+        let mut sizes = p.sizes();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![1, 1, 2, 3]);
+    }
+
+    #[test]
+    fn edge_cases() {
+        let empty = Partition::from_labels(&[]);
+        assert_eq!(empty.n_components(), 0);
+        assert_eq!(empty.max_component_size(), 0);
+        assert!(empty.equals(&Partition::singletons(0)));
+        let one = Partition::trivial(1);
+        assert_eq!(one.n_components(), 1);
+    }
+}

@@ -1,0 +1,188 @@
+//! Disjoint-set union (union by size + path halving).
+//!
+//! The screening engine's workhorse: connected components of the thresholded
+//! covariance graph, and the *incremental* Kruskal-style λ-profile (edges
+//! arrive in decreasing |S_ij| order, component sizes are tracked as they
+//! merge) that regenerates Figure 1 without recomputing components per λ.
+
+/// Disjoint-set forest over 0..n.
+#[derive(Clone, Debug)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+    n_components: usize,
+    max_size: u32,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> UnionFind {
+        assert!(n <= u32::MAX as usize);
+        UnionFind {
+            parent: (0..n as u32).collect(),
+            size: vec![1; n],
+            n_components: n,
+            max_size: if n == 0 { 0 } else { 1 },
+        }
+    }
+
+    /// Representative of x's component (path halving).
+    #[inline]
+    pub fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] as usize != x {
+            let gp = self.parent[self.parent[x] as usize];
+            self.parent[x] = gp;
+            x = gp as usize;
+        }
+        x
+    }
+
+    /// Merge the components of a and b. Returns true if a merge happened.
+    pub fn union(&mut self, a: usize, b: usize) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (big, small) = if self.size[ra] >= self.size[rb] { (ra, rb) } else { (rb, ra) };
+        self.parent[small] = big as u32;
+        self.size[big] += self.size[small];
+        self.max_size = self.max_size.max(self.size[big]);
+        self.n_components -= 1;
+        true
+    }
+
+    /// Are a and b in the same component?
+    pub fn connected(&mut self, a: usize, b: usize) -> bool {
+        self.find(a) == self.find(b)
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.n_components
+    }
+
+    /// Size of the largest component (O(1), maintained incrementally).
+    pub fn max_component_size(&self) -> usize {
+        self.max_size as usize
+    }
+
+    /// Size of x's component.
+    pub fn component_size(&mut self, x: usize) -> usize {
+        let r = self.find(x);
+        self.size[r] as usize
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Canonical labels: label[v] ∈ 0..k, components numbered by first
+    /// appearance (so the labeling is deterministic).
+    pub fn labels(&mut self) -> Vec<usize> {
+        let n = self.parent.len();
+        let mut label = vec![usize::MAX; n];
+        let mut next = 0usize;
+        let mut root_label = vec![usize::MAX; n];
+        for v in 0..n {
+            let r = self.find(v);
+            if root_label[r] == usize::MAX {
+                root_label[r] = next;
+                next += 1;
+            }
+            label[v] = root_label[r];
+        }
+        label
+    }
+
+    /// Members of each component, ordered by canonical label.
+    pub fn groups(&mut self) -> Vec<Vec<usize>> {
+        let labels = self.labels();
+        let k = self.n_components;
+        let mut groups = vec![Vec::new(); k];
+        for (v, &l) in labels.iter().enumerate() {
+            groups[l].push(v);
+        }
+        groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_forest() {
+        let mut uf = UnionFind::new(5);
+        assert_eq!(uf.n_components(), 5);
+        assert_eq!(uf.max_component_size(), 1);
+        assert!(!uf.connected(0, 1));
+    }
+
+    #[test]
+    fn union_and_find() {
+        let mut uf = UnionFind::new(6);
+        assert!(uf.union(0, 1));
+        assert!(uf.union(2, 3));
+        assert!(!uf.union(1, 0)); // already merged
+        assert!(uf.connected(0, 1));
+        assert!(!uf.connected(0, 2));
+        assert_eq!(uf.n_components(), 4);
+        uf.union(1, 2);
+        assert!(uf.connected(0, 3));
+        assert_eq!(uf.n_components(), 3);
+        assert_eq!(uf.max_component_size(), 4);
+        assert_eq!(uf.component_size(3), 4);
+        assert_eq!(uf.component_size(5), 1);
+    }
+
+    #[test]
+    fn labels_canonical() {
+        let mut uf = UnionFind::new(5);
+        uf.union(3, 4);
+        uf.union(0, 2);
+        let labels = uf.labels();
+        // first appearance order: {0,2}->0, {1}->1, {3,4}->2
+        assert_eq!(labels, vec![0, 1, 0, 2, 2]);
+    }
+
+    #[test]
+    fn groups_partition_everything() {
+        let mut uf = UnionFind::new(10);
+        uf.union(0, 5);
+        uf.union(5, 9);
+        uf.union(2, 3);
+        let groups = uf.groups();
+        assert_eq!(groups.len(), uf.n_components());
+        let total: usize = groups.iter().map(|g| g.len()).sum();
+        assert_eq!(total, 10);
+        // every vertex appears exactly once
+        let mut seen = vec![false; 10];
+        for g in &groups {
+            for &v in g {
+                assert!(!seen[v]);
+                seen[v] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn empty_forest() {
+        let mut uf = UnionFind::new(0);
+        assert_eq!(uf.n_components(), 0);
+        assert_eq!(uf.max_component_size(), 0);
+        assert!(uf.groups().is_empty());
+        assert!(uf.is_empty());
+    }
+
+    #[test]
+    fn chain_merge_max_size() {
+        let mut uf = UnionFind::new(100);
+        for i in 0..99 {
+            uf.union(i, i + 1);
+        }
+        assert_eq!(uf.n_components(), 1);
+        assert_eq!(uf.max_component_size(), 100);
+    }
+}

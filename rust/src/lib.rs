@@ -1,0 +1,41 @@
+//! # covthresh
+//!
+//! Production-quality reproduction of **"Exact Covariance Thresholding into
+//! Connected Components for large-scale Graphical Lasso"** (Mazumder &
+//! Hastie, 2011).
+//!
+//! The library proves out the paper's central result in systems form: the
+//! vertex-partition induced by the connected components of the thresholded
+//! sample covariance graph (`|S_ij| > λ`) equals the partition induced by
+//! the nonzero pattern of the graphical-lasso solution `Θ̂(λ)` (Theorem 1),
+//! and these partitions are nested along the λ path (Theorem 2). The
+//! `screen` module implements exact thresholding and the incremental
+//! component profile; `coordinator` turns it into a scheduling wrapper that
+//! splits one intractable glasso problem into many small independent ones;
+//! `solvers` provides the GLASSO/SMACS/ADMM sub-problem solvers; `runtime`
+//! executes AOT-compiled JAX/Pallas artifacts via PJRT on the hot path.
+//!
+//! Layering (Python never runs at request time):
+//! - L3: this crate — screening, partitioning, scheduling, serving.
+//! - L2: `python/compile/model.py` — JAX block-solver graphs, AOT → HLO text.
+//! - L1: `python/compile/kernels/` — Pallas kernels (threshold mask, lasso
+//!   coordinate descent, Gram), correctness-checked against `ref.py`.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod graph;
+pub mod linalg;
+pub mod proptest_lite;
+pub mod report;
+pub mod runtime;
+pub mod screen;
+pub mod solvers;
+pub mod util;
+
+/// Crate version string.
+pub fn crate_version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

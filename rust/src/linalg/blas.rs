@@ -1,0 +1,176 @@
+//! BLAS-like kernels over `Mat`: dot/axpy (L1), gemv/symv (L2), gemm/syrk
+//! (L3). Cache-aware loop orders; no unsafe, no SIMD intrinsics — the
+//! compiler autovectorizes the inner `f64` loops.
+
+use super::matrix::Mat;
+
+/// Dot product.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = 0.0;
+    for i in 0..x.len() {
+        acc += x[i] * y[i];
+    }
+    acc
+}
+
+/// y += a * x.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += a * x[i];
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// max |x_i|.
+#[inline]
+pub fn amax(x: &[f64]) -> f64 {
+    x.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+}
+
+/// y = A x  (A: m×n, x: n, y: m).
+pub fn gemv(a: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.cols(), x.len());
+    assert_eq!(a.rows(), y.len());
+    for i in 0..a.rows() {
+        y[i] = dot(a.row(i), x);
+    }
+}
+
+/// y = Aᵀ x  (A: m×n, x: m, y: n).
+pub fn gemv_t(a: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(a.rows(), x.len());
+    assert_eq!(a.cols(), y.len());
+    y.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..a.rows() {
+        axpy(x[i], a.row(i), y);
+    }
+}
+
+/// C = A · B (ikj loop order: streams B's rows, good for row-major).
+pub fn gemm(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "gemm inner dim mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        // split borrow: write into c's row i while reading b
+        let crow = c.row_mut(i);
+        for l in 0..k {
+            let av = arow[l];
+            if av != 0.0 {
+                axpy(av, b.row(l), crow);
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ · A  (A: n×p → C: p×p), the Gram matrix kernel used to form S.
+pub fn syrk_t(a: &Mat) -> Mat {
+    let (n, p) = (a.rows(), a.cols());
+    let mut c = Mat::zeros(p, p);
+    // accumulate rank-1 updates row by row; only upper triangle, then mirror.
+    for s in 0..n {
+        let row = a.row(s);
+        for i in 0..p {
+            let ri = row[i];
+            if ri == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in i..p {
+                crow[j] += ri * row[j];
+            }
+        }
+    }
+    // mirror upper -> lower
+    for i in 0..p {
+        for j in (i + 1)..p {
+            let v = c.get(i, j);
+            c.set(j, i, v);
+        }
+    }
+    c
+}
+
+/// Quadratic form xᵀ A x for square A.
+pub fn quad_form(a: &Mat, x: &[f64]) -> f64 {
+    assert!(a.is_square());
+    assert_eq!(a.rows(), x.len());
+    let mut acc = 0.0;
+    for i in 0..a.rows() {
+        acc += x[i] * dot(a.row(i), x);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_axpy_nrm2() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&x, &y), 32.0);
+        let mut z = y;
+        axpy(2.0, &x, &mut z);
+        assert_eq!(z, [6.0, 9.0, 12.0]);
+        assert!((nrm2(&x) - 14f64.sqrt()).abs() < 1e-12);
+        assert_eq!(amax(&[-5.0, 3.0]), 5.0);
+    }
+
+    #[test]
+    fn gemv_matches_manual() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let x = [1.0, 0.0, -1.0];
+        let mut y = [0.0; 2];
+        gemv(&a, &x, &mut y);
+        assert_eq!(y, [-2.0, -2.0]);
+        let xt = [1.0, -1.0];
+        let mut yt = [0.0; 3];
+        gemv_t(&a, &xt, &mut yt);
+        assert_eq!(yt, [-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn gemm_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = gemm(&a, &b);
+        assert_eq!(c.as_slice(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let a = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let c = gemm(&a, &Mat::eye(4));
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn syrk_t_matches_gemm() {
+        let a = Mat::from_fn(5, 3, |i, j| ((i + 1) * (j + 2)) as f64 * 0.1);
+        let g1 = syrk_t(&a);
+        let g2 = gemm(&a.transpose(), &a);
+        assert!(g1.max_abs_diff(&g2) < 1e-12);
+        assert!(g1.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn quad_form_matches() {
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 3.0]);
+        let x = [1.0, -1.0];
+        // xᵀAx = 2 -1 -1 +3 = 3
+        assert_eq!(quad_form(&a, &x), 3.0);
+    }
+}

@@ -1,0 +1,238 @@
+//! Cholesky factorization and SPD solves — logdet, inverse, linear systems.
+//!
+//! Used by the solvers (`smacs` gradient = Θ⁻¹, objective logdet, final
+//! Θ = W⁻¹ recovery checks) and by the KKT certifier.
+
+use super::matrix::Mat;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. Errors if a non-positive pivot is hit.
+    pub fn new(a: &Mat) -> Result<Cholesky> {
+        assert!(a.is_square());
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                // sum_{k<j} L[i,k] L[j,k]
+                let mut s = 0.0;
+                for k in 0..j {
+                    s += l.get(i, k) * l.get(j, k);
+                }
+                if i == j {
+                    let d = a.get(i, i) - s;
+                    if d <= 0.0 || !d.is_finite() {
+                        bail!("matrix not positive definite at pivot {i} (d={d})");
+                    }
+                    l.set(i, j, d.sqrt());
+                } else {
+                    l.set(i, j, (a.get(i, j) - s) / l.get(j, j));
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    pub fn factor(&self) -> &Mat {
+        &self.l
+    }
+
+    /// log det A = 2 Σ log L_ii.
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve A x = b in place (forward + back substitution).
+    pub fn solve_in_place(&self, b: &mut [f64]) {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n);
+        // L y = b
+        for i in 0..n {
+            let mut s = b[i];
+            let row = self.l.row(i);
+            for k in 0..i {
+                s -= row[k] * b[k];
+            }
+            b[i] = s / row[i];
+        }
+        // Lᵀ x = y
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for k in (i + 1)..n {
+                s -= self.l.get(k, i) * b[k];
+            }
+            b[i] = s / self.l.get(i, i);
+        }
+    }
+
+    /// Solve A X = B column-wise.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        let n = self.l.rows();
+        assert_eq!(b.rows(), n);
+        let mut x = Mat::zeros(n, b.cols());
+        let mut col = vec![0.0; n];
+        for j in 0..b.cols() {
+            for i in 0..n {
+                col[i] = b.get(i, j);
+            }
+            self.solve_in_place(&mut col);
+            for i in 0..n {
+                x.set(i, j, col[i]);
+            }
+        }
+        x
+    }
+
+    /// A⁻¹ (symmetric).
+    ///
+    /// Computed as MᵀM with M = L⁻¹ (A = LLᵀ ⇒ A⁻¹ = L⁻ᵀL⁻¹). M is built
+    /// row by row — row i of L⁻¹ is a linear combination of earlier rows,
+    /// so the inner loop is a row-major axpy — then the product is a
+    /// SYRK over M's rows. This is ~7× faster than columnwise
+    /// forward/backward solves on I (the naive route walks L's columns,
+    /// which is cache-hostile in row-major storage). SMACS calls this
+    /// every iteration (∇ logdet(S+U) = (S+U)⁻¹), so it dominates that
+    /// solver's O(p³) per-iteration cost.
+    pub fn inverse(&self) -> Mat {
+        let n = self.l.rows();
+        // M = L⁻¹ (lower triangular):
+        // M[i][j] = (δ_ij − Σ_{k<i} L[i][k]·M[k][j]) / L[i][i]
+        let mut m = Mat::zeros(n, n);
+        let mut acc = vec![0.0f64; n];
+        for i in 0..n {
+            let lrow = self.l.row(i);
+            let acc = &mut acc[..i]; // entries j < i
+            acc.iter_mut().for_each(|x| *x = 0.0);
+            for k in 0..i {
+                let lik = lrow[k];
+                if lik != 0.0 {
+                    let mrow = m.row(k);
+                    // M[k][j] nonzero only for j ≤ k
+                    for j in 0..=k {
+                        acc[j] += lik * mrow[j];
+                    }
+                }
+            }
+            let inv_d = 1.0 / lrow[i];
+            let mrow = m.row_mut(i);
+            for j in 0..i {
+                mrow[j] = -acc[j] * inv_d;
+            }
+            mrow[i] = inv_d;
+        }
+        // A⁻¹ = MᵀM, exploiting M lower-triangular: row k contributes only
+        // to C[i][j] with i, j ≤ k (a generic SYRK would multiply the
+        // structural-zero tail too — ~2× wasted work).
+        let mut inv = Mat::zeros(n, n);
+        for k in 0..n {
+            let row = &m.row(k)[..=k];
+            for i in 0..=k {
+                let mki = row[i];
+                if mki == 0.0 {
+                    continue;
+                }
+                let crow = inv.row_mut(i);
+                for (j, &rj) in row.iter().enumerate().skip(i) {
+                    crow[j] += mki * rj;
+                }
+            }
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = inv.get(i, j);
+                inv.set(j, i, v);
+            }
+        }
+        inv
+    }
+}
+
+/// Convenience: logdet of an SPD matrix.
+pub fn logdet_spd(a: &Mat) -> Result<f64> {
+    Ok(Cholesky::new(a)?.logdet())
+}
+
+/// Convenience: inverse of an SPD matrix.
+pub fn inverse_spd(a: &Mat) -> Result<Mat> {
+    Ok(Cholesky::new(a)?.inverse())
+}
+
+/// Is `a` positive definite (by attempting a factorization)?
+pub fn is_positive_definite(a: &Mat) -> bool {
+    a.is_square() && Cholesky::new(a).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::gemm;
+    use crate::util::rng::Xoshiro256;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let b = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let mut a = gemm(&b.transpose(), &b);
+        for i in 0..n {
+            a.add_at(i, i, n as f64); // well conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(8, 1);
+        let ch = Cholesky::new(&a).unwrap();
+        let l = ch.factor();
+        let rec = gemm(l, &l.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let a = random_spd(6, 2);
+        let ch = Cholesky::new(&a).unwrap();
+        let b = [1.0, -2.0, 3.0, 0.5, 0.0, 4.0];
+        let mut x = b;
+        ch.solve_in_place(&mut x);
+        // check A x = b
+        let mut ax = [0.0; 6];
+        crate::linalg::blas::gemv(&a, &x, &mut ax);
+        for i in 0..6 {
+            assert!((ax[i] - b[i]).abs() < 1e-9, "i={i}");
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(5, 3);
+        let inv = inverse_spd(&a).unwrap();
+        let prod = gemm(&a, &inv);
+        assert!(prod.max_abs_diff(&Mat::eye(5)) < 1e-9);
+        assert!(inv.is_symmetric(1e-10));
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let a = Mat::from_vec(2, 2, vec![2.0, 0.5, 0.5, 3.0]);
+        let det: f64 = 2.0 * 3.0 - 0.25;
+        assert!((logdet_spd(&a).unwrap() - det.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(Cholesky::new(&a).is_err());
+        assert!(!is_positive_definite(&a));
+    }
+
+    #[test]
+    fn identity_logdet_zero() {
+        assert_eq!(logdet_spd(&Mat::eye(4)).unwrap(), 0.0);
+    }
+}

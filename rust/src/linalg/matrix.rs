@@ -1,0 +1,347 @@
+//! Dense row-major f64 matrix — the storage type for S, W, Θ blocks.
+//!
+//! No external BLAS/LAPACK is available offline; this module provides the
+//! storage + element-level ops, `blas.rs` the kernels, `chol.rs`/`eigen.rs`
+//! the factorizations.
+
+use std::fmt;
+
+/// Dense row-major matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn diag(d: &[f64]) -> Mat {
+        let n = d.len();
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = d[i];
+        }
+        m
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Construct from a row-major vec (length must equal rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "from_vec shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    #[inline]
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] += v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// Force exact symmetry: M <- (M + Mᵀ)/2. Panics if not square.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.5 * (self.data[i * n + j] + self.data[j * n + i]);
+                self.data[i * n + j] = v;
+                self.data[j * n + i] = v;
+            }
+        }
+    }
+
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if !self.is_square() {
+            return false;
+        }
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if (self.data[i * n + j] - self.data[j * n + i]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Principal submatrix on the given (not necessarily sorted) index set.
+    pub fn principal_submatrix(&self, idx: &[usize]) -> Mat {
+        assert!(self.is_square());
+        let k = idx.len();
+        let mut m = Mat::zeros(k, k);
+        for (a, &i) in idx.iter().enumerate() {
+            let src = self.row(i);
+            let dst = m.row_mut(a);
+            for (b, &j) in idx.iter().enumerate() {
+                dst[b] = src[j];
+            }
+        }
+        m
+    }
+
+    /// Scatter a k×k block back into self at positions idx×idx.
+    pub fn scatter_block(&mut self, idx: &[usize], block: &Mat) {
+        assert!(self.is_square());
+        assert_eq!(block.rows, idx.len());
+        assert_eq!(block.cols, idx.len());
+        for (a, &i) in idx.iter().enumerate() {
+            for (b, &j) in idx.iter().enumerate() {
+                self.set(i, j, block.get(a, b));
+            }
+        }
+    }
+
+    /// Maximum absolute off-diagonal entry (0 for 1×1).
+    pub fn max_abs_offdiag(&self) -> f64 {
+        assert!(self.is_square());
+        let n = self.rows;
+        let mut m = 0.0f64;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    m = m.max(self.data[i * n + j].abs());
+                }
+            }
+        }
+        m
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |a_ij - b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Elementwise in-place scale.
+    pub fn scale(&mut self, a: f64) {
+        for x in &mut self.data {
+            *x *= a;
+        }
+    }
+
+    /// self += a * other.
+    pub fn axpy(&mut self, a: f64, other: &Mat) {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        for (x, y) in self.data.iter_mut().zip(other.data.iter()) {
+            *x += a * y;
+        }
+    }
+
+    /// Sum of |entries| (the ℓ1 penalty including diagonal, as in eq. (1)).
+    pub fn abs_sum(&self) -> f64 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    /// Trace.
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self.get(i, i)).sum()
+    }
+
+    /// Number of structurally nonzero off-diagonal entries (|x| > tol).
+    pub fn offdiag_nnz(&self, tol: f64) -> usize {
+        assert!(self.is_square());
+        let n = self.rows;
+        let mut cnt = 0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && self.data[i * n + j].abs() > tol {
+                    cnt += 1;
+                }
+            }
+        }
+        cnt
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(8);
+        for i in 0..show {
+            let cols = self.cols.min(8);
+            let row: Vec<String> = (0..cols).map(|j| format!("{:9.4}", self.get(i, j))).collect();
+            writeln!(
+                f,
+                "  {}{}",
+                row.join(" "),
+                if self.cols > 8 { " …" } else { "" }
+            )?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_and_diag() {
+        let e = Mat::eye(3);
+        assert_eq!(e.get(0, 0), 1.0);
+        assert_eq!(e.get(0, 1), 0.0);
+        assert_eq!(e.trace(), 3.0);
+        let d = Mat::diag(&[1.0, 2.0]);
+        assert_eq!(d.get(1, 1), 2.0);
+        assert_eq!(d.get(1, 0), 0.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        let t = m.transpose();
+        assert_eq!(t.rows(), 4);
+        assert_eq!(t.get(2, 1), m.get(1, 2));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn symmetrize_works() {
+        let mut m = Mat::from_fn(3, 3, |i, j| (i + 2 * j) as f64);
+        assert!(!m.is_symmetric(1e-12));
+        m.symmetrize();
+        assert!(m.is_symmetric(1e-12));
+    }
+
+    #[test]
+    fn principal_submatrix_scatter_roundtrip() {
+        let m = Mat::from_fn(5, 5, |i, j| (i * 5 + j) as f64);
+        let idx = [4usize, 1, 3];
+        let sub = m.principal_submatrix(&idx);
+        assert_eq!(sub.get(0, 0), m.get(4, 4));
+        assert_eq!(sub.get(0, 1), m.get(4, 1));
+        assert_eq!(sub.get(2, 1), m.get(3, 1));
+        let mut target = Mat::zeros(5, 5);
+        target.scatter_block(&idx, &sub);
+        for (a, &i) in idx.iter().enumerate() {
+            for (b, &j) in idx.iter().enumerate() {
+                assert_eq!(target.get(i, j), sub.get(a, b));
+            }
+        }
+        // untouched positions stay zero
+        assert_eq!(target.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn norms_and_counts() {
+        let m = Mat::from_vec(2, 2, vec![1.0, -2.0, 0.0, 3.0]);
+        assert!((m.fro_norm() - (14.0f64).sqrt()).abs() < 1e-12);
+        assert_eq!(m.abs_sum(), 6.0);
+        assert_eq!(m.max_abs_offdiag(), 2.0);
+        assert_eq!(m.offdiag_nnz(1e-12), 1);
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let mut a = Mat::eye(2);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.get(0, 0), 3.0);
+        assert_eq!(a.get(0, 1), 2.0);
+        a.scale(0.5);
+        assert_eq!(a.get(0, 0), 1.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_mismatch_panics() {
+        let _ = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,15 @@
+//! Dense linear algebra substrate (no external BLAS/LAPACK).
+//!
+//! `matrix` — storage + elementwise ops; `blas` — L1/L2/L3 kernels;
+//! `chol` — SPD factorization/solves/logdet; `eigen` — Jacobi symmetric
+//! eigendecomposition (SMACS's per-iteration O(p³) kernel).
+
+pub mod blas;
+pub mod chol;
+pub mod eigen;
+pub mod matrix;
+
+pub use blas::{axpy, dot, gemm, gemv, nrm2, syrk_t};
+pub use chol::{inverse_spd, is_positive_definite, logdet_spd, Cholesky};
+pub use eigen::{sym_eigen, SymEigen};
+pub use matrix::Mat;

@@ -1,0 +1,279 @@
+//! covthresh CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   solve    screened solve of a synthetic block instance (Table-1 style)
+//!   path     λ-path solve with Theorem-2 nesting + warm starts
+//!   profile  component-size profile across λ (Figure-1 style)
+//!   capacity λ_{p_max} search (§2 consequence 5)
+//!   info     artifact registry / configuration inspection
+//!
+//! Examples:
+//!   covthresh solve --k 3 --p1 100 --lambda 0.9 --solver glasso
+//!   covthresh solve --k 2 --p1 16 --backend xla
+//!   covthresh path --k 3 --p1 50 --points 8
+//!   covthresh profile --example a --scale 400 --points 30
+//!   covthresh capacity --example a --scale 400 --pmax 50
+
+use anyhow::{bail, Result};
+use covthresh::cli::Args;
+use covthresh::config::RunConfig;
+use covthresh::coordinator::{path::solve_path, Coordinator, NativeBackend};
+use covthresh::datasets::{microarray, synthetic};
+use covthresh::report::{render_figure1, Table};
+use covthresh::runtime::XlaBackend;
+use covthresh::screen::grid::{figure1_grid, table1_lambdas, uniform_grid_desc};
+use covthresh::screen::profile::{profile_grid, weighted_edges};
+use covthresh::solvers::{SolverKind, SolverOptions};
+use covthresh::util::timer::fmt_secs;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_str() {
+        "solve" => cmd_solve(&args),
+        "path" => cmd_path(&args),
+        "profile" => cmd_profile(&args),
+        "capacity" => cmd_capacity(&args),
+        "info" => cmd_info(&args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `covthresh help`)"),
+    }
+}
+
+const HELP: &str = "covthresh — exact covariance thresholding for large-scale graphical lasso\n\
+\n\
+USAGE: covthresh <solve|path|profile|capacity|info> [flags]\n\
+\n\
+solve:    --k N --p1 N --lambda X [--solver glasso|smacs|admm] [--backend native|xla]\n\
+          [--machines N] [--pmax N] [--parallel] [--config FILE] [--seed N] [--no-screen]\n\
+path:     --k N --p1 N [--points N] [--cold]\n\
+profile:  --example a|b|c [--scale P] [--points N] [--cap N] [--csv PATH]\n\
+capacity: --example a|b|c [--scale P] --pmax N\n\
+info:     [--artifacts DIR]\n";
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(s) = args.get("solver") {
+        cfg.solver = SolverKind::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown solver '{s}'"))?;
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.to_string();
+    }
+    cfg.coordinator.n_machines = args.get_usize("machines", cfg.coordinator.n_machines)?;
+    cfg.coordinator.capacity = args.get_usize("pmax", cfg.coordinator.capacity)?;
+    if args.has("parallel") {
+        cfg.coordinator.parallel = true;
+    }
+    cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+    Ok(cfg)
+}
+
+fn make_instance(args: &Args, cfg: &RunConfig) -> Result<synthetic::SyntheticInstance> {
+    let k = args.get_usize("k", 2)?;
+    let p1 = args.get_usize("p1", 50)?;
+    Ok(synthetic::block_instance(k, p1, cfg.seed))
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let inst = make_instance(args, &cfg)?;
+    let p = inst.s.rows();
+    let edges = weighted_edges(&inst.s, 0.0);
+    let (lam_i, _lam_ii) =
+        table1_lambdas(p, edges, inst.planted.n_components()).unwrap_or((0.9, 1.0));
+    let lambda = args.get_f64("lambda", lam_i)?;
+    println!(
+        "instance: p={p} K={} λ={lambda:.4} solver={} backend={}",
+        inst.planted.n_components(),
+        cfg.solver.name(),
+        cfg.backend
+    );
+
+    macro_rules! run_with {
+        ($backend:expr) => {{
+            let coord = Coordinator::new($backend, cfg.coordinator.clone());
+            let report = coord.solve_screened(&inst.s, lambda)?;
+            print_report(&report);
+            if args.has("no-screen") {
+                let (sol, secs) = coord.solve_unscreened(&inst.s, lambda)?;
+                println!(
+                    "unscreened: {} in {} (converged={})",
+                    sol.iterations,
+                    fmt_secs(secs),
+                    sol.converged
+                );
+                println!(
+                    "speedup factor: {:.2}",
+                    secs / report.solve_secs_serial().max(1e-12)
+                );
+            }
+        }};
+    }
+
+    match cfg.backend.as_str() {
+        "xla" => {
+            let backend = XlaBackend::load(&cfg.artifacts_dir)?;
+            backend.warmup()?;
+            run_with!(backend)
+        }
+        _ => {
+            let opts = SolverOptions { ..cfg.solver_opts.clone() };
+            run_with!(NativeBackend::new(cfg.solver, opts))
+        }
+    }
+    Ok(())
+}
+
+fn print_report(report: &covthresh::coordinator::ScreenReport) {
+    let g = &report.global;
+    println!(
+        "screen: |E(λ)|={} components={} max={} isolated={}",
+        report.n_edges,
+        g.partition.n_components(),
+        g.partition.max_component_size(),
+        g.partition.n_isolated()
+    );
+    println!(
+        "solve:  blocks={} serial={} makespan={} converged={}",
+        g.blocks.len(),
+        fmt_secs(g.serial_solve_secs()),
+        fmt_secs(g.makespan_secs(report.schedule.n_machines())),
+        g.all_converged()
+    );
+    println!("phases: {}", report.timings.summary());
+    println!("objective: {:.6}", g.objective());
+}
+
+fn cmd_path(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let inst = make_instance(args, &cfg)?;
+    let p = inst.s.rows();
+    let points = args.get_usize("points", 8)?;
+    let edges = weighted_edges(&inst.s, 0.0);
+    let k = inst.planted.n_components();
+    let (lo, hi) = table1_lambdas(p, edges, k).unwrap_or((0.8, 1.0));
+    let grid = uniform_grid_desc(hi * 0.999, lo, points);
+    let coord = Coordinator::new(
+        NativeBackend::new(cfg.solver, cfg.solver_opts.clone()),
+        cfg.coordinator.clone(),
+    );
+    let path = solve_path(&coord, &inst.s, &grid, !args.has("cold"))?;
+    let mut table = Table::new(
+        "λ-path (Theorem-2 nesting verified at every step)",
+        &["lambda", "components", "max_size", "solve(s)", "sweep(s)", "objective"],
+    );
+    for pt in &path.points {
+        table.row(vec![
+            format!("{:.4}", pt.lambda),
+            pt.report.global.partition.n_components().to_string(),
+            pt.report.global.partition.max_component_size().to_string(),
+            fmt_secs(pt.report.solve_secs_serial()),
+            fmt_secs(pt.sweep_secs),
+            format!("{:.4}", pt.report.global.objective()),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "total: solve={} sweep={}",
+        fmt_secs(path.total_solve_secs()),
+        fmt_secs(path.total_sweep_secs())
+    );
+    Ok(())
+}
+
+fn example_config(args: &Args, cfg: &RunConfig) -> Result<microarray::MicroarrayConfig> {
+    let base = match args.get_str("example", "a") {
+        "a" => microarray::example_a(cfg.seed),
+        "b" => microarray::example_b(cfg.seed),
+        "c" => microarray::example_c(cfg.seed),
+        other => bail!("unknown example '{other}' (use a, b or c)"),
+    };
+    Ok(match args.get("scale") {
+        Some(_) => {
+            let p = args.get_usize("scale", base.p)?;
+            let n = base.n.min(p);
+            microarray::scaled(&base, p, n)
+        }
+        None => base,
+    })
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mcfg = example_config(args, &cfg)?;
+    println!("generating microarray study p={} n={} …", mcfg.p, mcfg.n);
+    let study = microarray::generate(&mcfg);
+    let cap = args.get_usize("cap", 1500.min(mcfg.p / 2 + 1))?;
+    let points = args.get_usize("points", 30)?;
+    let edges = weighted_edges(&study.s, 0.0);
+    let grid = figure1_grid(mcfg.p, &edges, cap, points);
+    let profile = profile_grid(mcfg.p, edges, &grid);
+    print!("{}", render_figure1(&profile, cap));
+    if let Some(csv) = args.get("csv") {
+        let rows: Vec<Vec<String>> = profile
+            .iter()
+            .flat_map(|pt| {
+                pt.histogram.iter().map(move |(size, count)| {
+                    vec![format!("{:.6}", pt.lambda), size.to_string(), count.to_string()]
+                })
+            })
+            .collect();
+        covthresh::report::write_csv(
+            std::path::Path::new(csv),
+            &["lambda", "size", "count"],
+            &rows,
+        )?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_capacity(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mcfg = example_config(args, &cfg)?;
+    let pmax = args.get_usize("pmax", 500)?;
+    let study = microarray::generate(&mcfg);
+    let edges = weighted_edges(&study.s, 0.0);
+    let lam = covthresh::screen::lambda_for_capacity(mcfg.p, edges, pmax);
+    println!("λ_{{p_max={pmax}}} = {lam:.6}");
+    let part = covthresh::screen::threshold_partition(&study.s, lam);
+    println!(
+        "at that λ: components={} max={} isolated={}",
+        part.n_components(),
+        part.max_component_size(),
+        part.n_isolated()
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("covthresh {}", covthresh::crate_version());
+    let dir = args.get_str("artifacts", "artifacts");
+    match covthresh::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            println!("artifacts ({}):", m.dir.display());
+            for a in &m.artifacts {
+                println!(
+                    "  {:<24} kind={:?} bucket={:?} inputs={:?}",
+                    a.name, a.kind, a.bucket, a.inputs
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Property-testing harness (proptest unavailable offline).
+//!
+//! Seeded random-case generation with failure shrinking-lite: on failure,
+//! the harness retries the case with progressively smaller size parameters
+//! and reports the smallest failing seed/size, which is what you need to
+//! reproduce (`CASE_SEED`/`CASE_SIZE` in the panic message).
+//!
+//! Used by the coordinator/theorem property tests for invariants like
+//! "screened == unscreened", "partitions nest", "KKT certified".
+
+use crate::util::rng::Xoshiro256;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+    /// size parameter range passed to the generator
+    pub min_size: usize,
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 25, base_seed: 0xC0FFEE, min_size: 2, max_size: 24 }
+    }
+}
+
+/// Outcome of a single case.
+pub enum CaseResult {
+    Pass,
+    Fail(String),
+}
+
+impl CaseResult {
+    pub fn from_bool(ok: bool, msg: &str) -> CaseResult {
+        if ok {
+            CaseResult::Pass
+        } else {
+            CaseResult::Fail(msg.to_string())
+        }
+    }
+}
+
+/// Run `prop(seed, size, &mut rng)` over `config.cases` random cases.
+/// On failure, attempt to shrink `size` downward while the failure
+/// persists, then panic with the minimal reproducer.
+pub fn check_property(
+    name: &str,
+    config: &PropConfig,
+    mut prop: impl FnMut(u64, usize, &mut Xoshiro256) -> CaseResult,
+) {
+    for case in 0..config.cases {
+        let seed = config.base_seed.wrapping_add(case as u64 * 0x9E37);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let size = config.min_size
+            + rng.uniform_usize(config.max_size.saturating_sub(config.min_size) + 1);
+        let mut rng_case = Xoshiro256::seed_from_u64(seed);
+        if let CaseResult::Fail(msg) = prop(seed, size, &mut rng_case) {
+            // shrink: walk size down, keeping the same seed
+            let mut min_fail = (size, msg);
+            let mut sz = size;
+            while sz > config.min_size {
+                sz -= 1;
+                let mut rng_shrunk = Xoshiro256::seed_from_u64(seed);
+                if let CaseResult::Fail(m) = prop(seed, sz, &mut rng_shrunk) {
+                    min_fail = (sz, m);
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}): CASE_SEED={seed} CASE_SIZE={} — {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_property("always-true", &PropConfig::default(), |_, _, _| {
+            count += 1;
+            CaseResult::Pass
+        });
+        assert_eq!(count, PropConfig::default().cases);
+    }
+
+    #[test]
+    fn failing_property_shrinks_and_panics() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check_property(
+                "fails-at-size-ge-5",
+                &PropConfig { cases: 50, min_size: 2, max_size: 30, base_seed: 7 },
+                |_, size, _| CaseResult::from_bool(size < 5, "size too big"),
+            );
+        }));
+        let msg = format!("{:?}", result.unwrap_err().downcast_ref::<String>());
+        // shrinker should land exactly on the boundary size 5
+        assert!(msg.contains("CASE_SIZE=5"), "panic message: {msg}");
+    }
+
+    #[test]
+    fn deterministic_sizes_per_seed() {
+        let mut sizes1 = Vec::new();
+        let mut sizes2 = Vec::new();
+        let cfg = PropConfig::default();
+        check_property("collect1", &cfg, |_, s, _| {
+            sizes1.push(s);
+            CaseResult::Pass
+        });
+        check_property("collect2", &cfg, |_, s, _| {
+            sizes2.push(s);
+            CaseResult::Pass
+        });
+        assert_eq!(sizes1, sizes2);
+    }
+}

@@ -1,0 +1,119 @@
+//! Reporting: paper-style ASCII tables, CSV writers, and the Figure-1
+//! component-size heat rendering.
+
+pub mod table;
+
+pub use table::Table;
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write rows as CSV (no quoting needed for our numeric/label content).
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for r in rows {
+        writeln!(f, "{}", r.join(","))?;
+    }
+    Ok(())
+}
+
+/// ASCII heat rendering of the Figure-1 profile: rows = λ values, columns =
+/// log-scaled component-size bins, cell glyph = log-count of components.
+pub fn render_figure1(
+    profile: &[crate::screen::profile::ProfilePoint],
+    max_size_cap: usize,
+) -> String {
+    // log2 size bins: 1, 2, 3-4, 5-8, ..., up to cap
+    let mut bins: Vec<(usize, usize)> = Vec::new();
+    let mut lo = 1usize;
+    while lo <= max_size_cap {
+        let hi = (lo * 2 - 1).min(max_size_cap);
+        bins.push((lo, hi));
+        lo = hi + 1;
+    }
+    let glyphs = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+
+    let mut out = String::new();
+    out.push_str("      λ | components by size bin (glyph ~ log10 count)\n");
+    out.push_str("        | ");
+    for &(lo, hi) in &bins {
+        if lo == hi {
+            out.push_str(&format!("{lo:^7}"));
+        } else {
+            out.push_str(&format!("{:^7}", format!("{lo}-{hi}")));
+        }
+    }
+    out.push('\n');
+    out.push_str(&"-".repeat(10 + 7 * bins.len()));
+    out.push('\n');
+    for pt in profile {
+        out.push_str(&format!("{:7.4} | ", pt.lambda));
+        for &(lo, hi) in &bins {
+            let count: usize = pt
+                .histogram
+                .iter()
+                .filter(|(s, _)| *s >= lo && *s <= hi)
+                .map(|(_, c)| *c)
+                .sum();
+            let glyph = if count == 0 {
+                ' '
+            } else {
+                let idx = ((count as f64).log10().floor() as usize + 1).min(glyphs.len() - 1);
+                glyphs[idx]
+            };
+            out.push_str(&format!("{:^7}", glyph));
+        }
+        out.push_str(&format!("  k={} max={}\n", pt.n_components, pt.max_size));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screen::profile::ProfilePoint;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("covthresh_test_csv");
+        let path = dir.join("t.csv");
+        write_csv(
+            &path,
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn figure1_rendering_contains_rows() {
+        let profile = vec![
+            ProfilePoint {
+                lambda: 0.9,
+                n_components: 10,
+                max_size: 1,
+                n_isolated: 10,
+                histogram: vec![(1, 10)],
+            },
+            ProfilePoint {
+                lambda: 0.5,
+                n_components: 4,
+                max_size: 6,
+                n_isolated: 2,
+                histogram: vec![(1, 2), (2, 1), (6, 1)],
+            },
+        ];
+        let s = render_figure1(&profile, 8);
+        assert!(s.contains("0.9000"));
+        assert!(s.contains("0.5000"));
+        assert!(s.contains("k=10"));
+        assert!(s.contains("max=6"));
+    }
+}

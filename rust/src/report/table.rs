@@ -1,0 +1,100 @@
+//! ASCII table renderer for paper-style outputs (Tables 1–3).
+
+/// A simple left-padded table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with per-column autosizing.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(r[c].len());
+            }
+        }
+        let sep: String = {
+            let total: usize = widths.iter().sum::<usize>() + 3 * ncol + 1;
+            "-".repeat(total)
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("{}\n", self.title));
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out.push('|');
+        for (c, h) in self.header.iter().enumerate() {
+            out.push_str(&format!(" {:>w$} |", h, w = widths[c]));
+        }
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for r in &self.rows {
+            out.push('|');
+            for (c, cell) in r.iter().enumerate() {
+                out.push_str(&format!(" {:>w$} |", cell, w = widths[c]));
+            }
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out.push('\n');
+        out
+    }
+
+    /// Rows as CSV strings (for `report::write_csv`).
+    pub fn csv_rows(&self) -> Vec<Vec<String>> {
+        self.rows.clone()
+    }
+
+    pub fn csv_header(&self) -> Vec<&str> {
+        self.header.iter().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "value"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22.5".into()]);
+        let s = t.render();
+        assert!(s.contains("Demo"));
+        assert!(s.contains("| longer |"));
+        assert!(s.contains("|  22.5 |"));
+        assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,116 @@
+//! PJRT client wrapper: load HLO text → compile → execute with f32 buffers.
+//!
+//! Thin, synchronous layer over the `xla` crate (PJRT C API, CPU plugin),
+//! following /opt/xla-example/load_hlo. One process-wide client; compiled
+//! executables are cached by the registry, not here.
+
+use anyhow::{Context, Result};
+use once_cell::sync::OnceCell;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Process-wide PJRT CPU client. The xla crate's client is not Sync-safe
+/// for concurrent compiles, so all entry points lock.
+struct ClientCell {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: access is serialized through the Mutex below.
+unsafe impl Send for ClientCell {}
+
+static CLIENT: OnceCell<Mutex<ClientCell>> = OnceCell::new();
+
+fn with_client<T>(f: impl FnOnce(&xla::PjRtClient) -> Result<T>) -> Result<T> {
+    let cell = CLIENT.get_or_try_init(|| -> Result<Mutex<ClientCell>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Mutex::new(ClientCell { client }))
+    })?;
+    let guard = cell.lock().unwrap();
+    f(&guard.client)
+}
+
+/// A compiled executable plus its output arity.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_outputs: usize,
+}
+
+// SAFETY: all executions go through &self and the PJRT CPU plugin is
+// internally synchronized; we additionally serialize at the client level.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// Load an HLO-text file and compile it for the CPU client.
+pub fn compile_hlo_text(path: impl AsRef<Path>, n_outputs: usize) -> Result<Executable> {
+    let path = path.as_ref();
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = with_client(|c| {
+        c.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+    })?;
+    Ok(Executable { exe, n_outputs })
+}
+
+/// An f32 tensor argument.
+pub struct TensorArg {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl TensorArg {
+    pub fn matrix(data: Vec<f32>, rows: usize, cols: usize) -> TensorArg {
+        assert_eq!(data.len(), rows * cols);
+        TensorArg { data, dims: vec![rows as i64, cols as i64] }
+    }
+
+    pub fn vector(data: Vec<f32>) -> TensorArg {
+        let n = data.len() as i64;
+        TensorArg { data, dims: vec![n] }
+    }
+
+    pub fn scalar1(v: f32) -> TensorArg {
+        TensorArg { data: vec![v], dims: vec![1] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&self.data).reshape(&self.dims)?)
+    }
+}
+
+impl Executable {
+    /// Execute with f32 tensor inputs; returns each tuple element flattened
+    /// to a f32 vec (artifacts are lowered with return_tuple=True).
+    pub fn run_f32(&self, args: &[TensorArg]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.n_outputs,
+            "expected {} outputs, got {}",
+            self.n_outputs,
+            parts.len()
+        );
+        parts.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end in rust/tests/runtime_artifacts.rs (needs built
+    // artifacts); unit-level smoke lives here so `cargo test --lib` still
+    // covers the literal marshalling.
+    use super::*;
+
+    #[test]
+    fn tensor_arg_shapes() {
+        let m = TensorArg::matrix(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        assert_eq!(m.dims, vec![2, 2]);
+        let v = TensorArg::vector(vec![1.0, 2.0]);
+        assert_eq!(v.dims, vec![2]);
+        let s = TensorArg::scalar1(0.5);
+        assert_eq!(s.dims, vec![1]);
+        assert!(m.to_literal().is_ok());
+    }
+}

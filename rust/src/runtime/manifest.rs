@@ -1,0 +1,165 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parses `artifacts/manifest.json`.
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Kind of AOT computation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    GlassoBlock,
+    ThresholdMask,
+    Gram,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        Ok(match s {
+            "glasso_block" => ArtifactKind::GlassoBlock,
+            "threshold_mask" => ArtifactKind::ThresholdMask,
+            "gram" => ArtifactKind::Gram,
+            other => bail!("unknown artifact kind '{other}'"),
+        })
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// absolute path to the .hlo.txt file
+    pub path: PathBuf,
+    /// block/bucket size (glasso_block, threshold_mask)
+    pub bucket: Option<usize>,
+    /// input shapes [(dtype, dims)]
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<(String, Vec<usize>)>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+fn parse_shapes(v: &Json) -> Result<Vec<(String, Vec<usize>)>> {
+    let mut out = Vec::new();
+    for item in v.items() {
+        let parts = item.items();
+        if parts.len() != 2 {
+            bail!("shape entry must be [dtype, dims]");
+        }
+        let dtype = parts[0].as_str().context("dtype must be a string")?.to_string();
+        let dims = parts[1]
+            .items()
+            .iter()
+            .map(|d| d.as_f64().map(|f| f as usize))
+            .collect::<Option<Vec<_>>>()
+            .context("dims must be numbers")?;
+        out.push((dtype, dims));
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load from `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let doc = json::parse(&text).map_err(|e| anyhow::anyhow!("parsing manifest: {e}"))?;
+
+        let format = doc.get("format").and_then(|f| f.as_str()).unwrap_or("");
+        if format != "hlo-text" {
+            bail!("unsupported manifest format '{format}' (expected 'hlo-text')");
+        }
+
+        let mut artifacts = Vec::new();
+        for a in doc.get("artifacts").context("manifest missing 'artifacts'")?.items() {
+            let name = a.get("name").and_then(|v| v.as_str()).context("artifact name")?;
+            let kind =
+                ArtifactKind::parse(a.get("kind").and_then(|v| v.as_str()).context("kind")?)?;
+            let rel = a.get("path").and_then(|v| v.as_str()).context("path")?;
+            let full = dir.join(rel);
+            if !full.exists() {
+                bail!("artifact file missing: {}", full.display());
+            }
+            artifacts.push(ArtifactEntry {
+                name: name.to_string(),
+                kind,
+                path: full,
+                bucket: a.get("bucket").and_then(|v| v.as_f64()).map(|f| f as usize),
+                inputs: parse_shapes(a.get("inputs").context("inputs")?)?,
+                outputs: parse_shapes(a.get("outputs").context("outputs")?)?,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Buckets available for a kind, ascending.
+    pub fn buckets(&self, kind: ArtifactKind) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.artifacts.iter().filter(|a| a.kind == kind).filter_map(|a| a.bucket).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Entry for a kind at an exact bucket.
+    pub fn entry(&self, kind: ArtifactKind, bucket: usize) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.kind == kind && a.bucket == Some(bucket))
+    }
+
+    /// Smallest bucket ≥ n for a kind.
+    pub fn bucket_for(&self, kind: ArtifactKind, n: usize) -> Option<usize> {
+        self.buckets(kind).into_iter().find(|&b| b >= n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_manifest() -> Option<Manifest> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let Some(m) = repo_manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert!(!m.artifacts.is_empty());
+        let buckets = m.buckets(ArtifactKind::GlassoBlock);
+        assert!(buckets.contains(&16));
+        assert_eq!(m.bucket_for(ArtifactKind::GlassoBlock, 10), Some(16));
+        assert_eq!(m.bucket_for(ArtifactKind::GlassoBlock, 17), Some(32));
+        assert_eq!(m.bucket_for(ArtifactKind::GlassoBlock, 100_000), None);
+        let e = m.entry(ArtifactKind::GlassoBlock, 16).unwrap();
+        assert_eq!(e.inputs[0].1, vec![16, 16]);
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(Manifest::load("/nonexistent/dir").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let dir = std::env::temp_dir().join("covthresh_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format":"protobuf","artifacts":[]}"#)
+            .unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("format"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas
+//! artifacts (`artifacts/*.hlo.txt`) from the Rust hot path.
+//!
+//! `manifest` parses the artifact contract emitted by `python/compile/
+//! aot.py`; `client` wraps the `xla` crate (HLO text → compile → execute);
+//! `backend` adapts the `glasso_block` artifacts to the coordinator's
+//! `BlockSolver` trait with bucket-padding (lossless by Theorem 1 — see
+//! module docs).
+
+pub mod backend;
+pub mod client;
+pub mod manifest;
+
+pub use backend::XlaBackend;
+pub use client::{compile_hlo_text, Executable, TensorArg};
+pub use manifest::{ArtifactKind, Manifest};

@@ -1,0 +1,120 @@
+//! λ-grid construction policies used by the paper's experiments.
+//!
+//! - Table 1: λ_I = (λ_min + λ_max)/2 and λ_II = λ_max over the interval
+//!   where the thresholded graph has exactly K components.
+//! - Figure 1: a grid from max|S_ij| down to λ'_min, the smallest λ whose
+//!   maximal component stays ≤ a cap (1500 in the paper).
+//! - Table 3: "the 100 λ values correspond to the top 2% sorted absolute
+//!   values of the off-diagonal entries in S below λ_500".
+
+use super::profile::{lambda_for_capacity, lambda_interval_for_k, WEdge};
+
+/// λ_I and λ_II of Table 1: the midpoint and right end of the exact-K
+/// interval. Returns None if no λ yields exactly k components.
+pub fn table1_lambdas(p: usize, edges: Vec<WEdge>, k: usize) -> Option<(f64, f64)> {
+    let (lo, hi) = lambda_interval_for_k(p, edges, k)?;
+    let hi = if hi.is_finite() { hi } else { 1.0f64.max(2.0 * lo) };
+    Some(((lo + hi) / 2.0, hi))
+}
+
+/// Uniform grid of `count` values from `hi` DOWN to `lo` (inclusive ends).
+pub fn uniform_grid_desc(hi: f64, lo: f64, count: usize) -> Vec<f64> {
+    assert!(count >= 2 && hi >= lo);
+    (0..count)
+        .map(|t| {
+            if t == count - 1 {
+                // pin the endpoint: interpolation can undershoot `lo` by an
+                // ulp, which would activate the tie-group exactly at `lo`
+                // (edges are strict `w > λ`) and break capacity guarantees.
+                lo
+            } else {
+                hi - (hi - lo) * t as f64 / (count - 1) as f64
+            }
+        })
+        .collect()
+}
+
+/// Figure-1 grid: `count` λ values from the largest magnitude down to
+/// λ'_cap = smallest λ with max component ≤ cap.
+pub fn figure1_grid(p: usize, edges: &[WEdge], cap: usize, count: usize) -> Vec<f64> {
+    let top = edges.iter().map(|e| e.w).fold(0.0f64, f64::max);
+    let floor = lambda_for_capacity(p, edges.to_vec(), cap);
+    uniform_grid_desc(top, floor, count)
+}
+
+/// Table-3 grid: the top `frac` quantile of sorted magnitudes strictly
+/// below `lambda_start`, subsampled to `count` values, descending.
+/// (The paper: top 2% of |S_ij| below λ_500, 100 values.)
+pub fn quantile_grid_below(
+    edges: &[WEdge],
+    lambda_start: f64,
+    frac: f64,
+    count: usize,
+) -> Vec<f64> {
+    let mut mags: Vec<f64> = edges.iter().map(|e| e.w).filter(|&w| w < lambda_start).collect();
+    mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let keep = ((mags.len() as f64) * frac).ceil() as usize;
+    let top = &mags[..keep.min(mags.len())];
+    if top.is_empty() {
+        return Vec::new();
+    }
+    // Subsample `count` evenly spaced entries of the sorted-descending list.
+    let mut out = Vec::with_capacity(count);
+    for t in 0..count {
+        let idx = t * (top.len() - 1) / count.max(1).saturating_sub(1).max(1);
+        out.push(top[idx.min(top.len() - 1)]);
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screen::profile::weighted_edges;
+    use crate::screen::threshold::threshold_partition;
+
+    #[test]
+    fn uniform_grid_endpoints() {
+        let g = uniform_grid_desc(1.0, 0.0, 5);
+        assert_eq!(g, vec![1.0, 0.75, 0.5, 0.25, 0.0]);
+    }
+
+    #[test]
+    fn table1_lambdas_give_k_components() {
+        let inst = crate::datasets::synthetic::block_instance(3, 10, 21);
+        let edges = weighted_edges(&inst.s, 0.0);
+        let (li, lii) = table1_lambdas(inst.s.rows(), edges, 3).unwrap();
+        assert!(li < lii);
+        let pi = threshold_partition(&inst.s, li);
+        assert_eq!(pi.n_components(), 3, "λ_I");
+        // λ_II is the right endpoint: components = 3 just below it;
+        // the partition AT λ_II has ≥ 3 components (edge of the interval).
+        let pii = threshold_partition(&inst.s, lii * 0.999);
+        assert_eq!(pii.n_components(), 3, "λ_II−ε");
+    }
+
+    #[test]
+    fn figure1_grid_respects_cap() {
+        let inst = crate::datasets::synthetic::block_instance(2, 12, 33);
+        let p = inst.s.rows();
+        let edges = weighted_edges(&inst.s, 0.0);
+        let grid = figure1_grid(p, &edges, 6, 10);
+        assert_eq!(grid.len(), 10);
+        // grid is descending and its floor keeps max comp ≤ 6
+        assert!(grid.windows(2).all(|w| w[0] >= w[1]));
+        let part = threshold_partition(&inst.s, grid[grid.len() - 1]);
+        assert!(part.max_component_size() <= 6, "max={}", part.max_component_size());
+    }
+
+    #[test]
+    fn quantile_grid_strictly_below_start() {
+        let inst = crate::datasets::synthetic::block_instance(2, 8, 55);
+        let edges = weighted_edges(&inst.s, 0.0);
+        let start = 0.5;
+        let g = quantile_grid_below(&edges, start, 0.1, 20);
+        assert!(!g.is_empty());
+        assert!(g.iter().all(|&l| l < start));
+        assert!(g.windows(2).all(|w| w[0] >= w[1]));
+    }
+}

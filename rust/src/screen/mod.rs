@@ -1,0 +1,17 @@
+//! The screening engine — the paper's §2 methodology as a subsystem.
+//!
+//! `threshold` — exact covariance thresholding (eq. 4) and partition
+//! extraction for both sides of Theorem 1; `profile` — the incremental
+//! downward-λ sweep (Figure 1, λ_{p_max}, exact-K intervals); `grid` —
+//! the λ-grid policies of Tables 1–3; `stream` — the O(p·b) -memory screen
+//! straight from a standardized data matrix (example (C) scale).
+
+pub mod grid;
+pub mod profile;
+pub mod stream;
+pub mod threshold;
+
+pub use profile::{lambda_for_capacity, profile_grid, LambdaSweep, WEdge};
+pub use threshold::{
+    concentration_partition, threshold_edges, threshold_graph, threshold_partition,
+};

@@ -1,0 +1,333 @@
+//! Incremental component profile along the λ path — the Figure 1 engine.
+//!
+//! "The connected components change only at the absolute values of the
+//! entries of S" (§4.2). So instead of recomputing components per λ, we
+//! sort the off-diagonal magnitudes once and sweep λ downward, activating
+//! edges into a union-find as λ crosses each magnitude (Kruskal-style).
+//! Equal magnitudes are activated as a group (edges exist iff |S_ij| > λ,
+//! strictly). Component-size histograms are maintained incrementally in
+//! O(1) per merge, so profiling an entire grid costs O(|E| α(p) + p + grid).
+//!
+//! The same sweep answers the §2-consequence-5 query: the smallest λ such
+//! that no component exceeds a machine capacity p_max (λ_{p_max}).
+
+use crate::graph::{Partition, UnionFind};
+use crate::linalg::Mat;
+use std::collections::BTreeMap;
+
+/// A weighted undirected edge (|S_ij|, i < j).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WEdge {
+    pub i: u32,
+    pub j: u32,
+    pub w: f64,
+}
+
+/// Extract all off-diagonal weighted edges with |S_ij| > floor.
+pub fn weighted_edges(s: &Mat, floor: f64) -> Vec<WEdge> {
+    assert!(s.is_square());
+    let p = s.rows();
+    let mut edges = Vec::new();
+    for i in 0..p {
+        let row = s.row(i);
+        for j in (i + 1)..p {
+            let w = row[j].abs();
+            if w > floor {
+                edges.push(WEdge { i: i as u32, j: j as u32, w });
+            }
+        }
+    }
+    edges
+}
+
+/// Downward λ sweep over a fixed edge set.
+pub struct LambdaSweep {
+    uf: UnionFind,
+    edges: Vec<WEdge>, // sorted by weight descending
+    cursor: usize,
+    /// histogram: component size -> count, maintained incrementally
+    hist: BTreeMap<usize, usize>,
+    lambda: f64,
+}
+
+impl LambdaSweep {
+    /// Create a sweep over p vertices. Edges need not be pre-sorted.
+    pub fn new(p: usize, mut edges: Vec<WEdge>) -> LambdaSweep {
+        edges.sort_by(|a, b| b.w.partial_cmp(&a.w).unwrap());
+        let mut hist = BTreeMap::new();
+        if p > 0 {
+            hist.insert(1, p);
+        }
+        LambdaSweep { uf: UnionFind::new(p), edges, cursor: 0, hist, lambda: f64::INFINITY }
+    }
+
+    /// Lower λ to `lambda`, activating every edge with w > lambda.
+    /// λ must be non-increasing across calls.
+    pub fn advance_to(&mut self, lambda: f64) {
+        assert!(
+            lambda <= self.lambda,
+            "LambdaSweep must move downward (was {}, got {lambda})",
+            self.lambda
+        );
+        self.lambda = lambda;
+        while self.cursor < self.edges.len() && self.edges[self.cursor].w > lambda {
+            let e = self.edges[self.cursor];
+            self.cursor += 1;
+            self.merge(e.i as usize, e.j as usize);
+        }
+    }
+
+    fn merge(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.uf.find(a), self.uf.find(b));
+        if ra == rb {
+            return;
+        }
+        let sa = self.uf.component_size(ra);
+        let sb = self.uf.component_size(rb);
+        self.uf.union(ra, rb);
+        // histogram: remove sa and sb, add sa+sb
+        for s in [sa, sb] {
+            let c = self.hist.get_mut(&s).expect("histogram invariant");
+            *c -= 1;
+            if *c == 0 {
+                self.hist.remove(&s);
+            }
+        }
+        *self.hist.entry(sa + sb).or_insert(0) += 1;
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.uf.n_components()
+    }
+
+    pub fn max_component_size(&self) -> usize {
+        self.uf.max_component_size()
+    }
+
+    /// (size, count) snapshot — one horizontal slice of Figure 1.
+    pub fn histogram(&self) -> Vec<(usize, usize)> {
+        self.hist.iter().map(|(&s, &c)| (s, c)).collect()
+    }
+
+    /// Materialize the current partition.
+    pub fn partition(&mut self) -> Partition {
+        Partition::from_labels(&self.uf.labels())
+    }
+}
+
+/// One grid point of the profile.
+#[derive(Clone, Debug)]
+pub struct ProfilePoint {
+    pub lambda: f64,
+    pub n_components: usize,
+    pub max_size: usize,
+    pub n_isolated: usize,
+    /// (size, count) pairs ascending by size
+    pub histogram: Vec<(usize, usize)>,
+}
+
+/// Profile the component structure over a DESCENDING λ grid in one sweep.
+pub fn profile_grid(p: usize, edges: Vec<WEdge>, lambdas_desc: &[f64]) -> Vec<ProfilePoint> {
+    let mut sweep = LambdaSweep::new(p, edges);
+    let mut out = Vec::with_capacity(lambdas_desc.len());
+    for &lam in lambdas_desc {
+        sweep.advance_to(lam);
+        let histogram = sweep.histogram();
+        let n_isolated = histogram.first().filter(|(s, _)| *s == 1).map(|(_, c)| *c).unwrap_or(0);
+        out.push(ProfilePoint {
+            lambda: lam,
+            n_components: sweep.n_components(),
+            max_size: sweep.max_component_size(),
+            n_isolated,
+            histogram,
+        });
+    }
+    out
+}
+
+/// Smallest λ such that the thresholded graph has no component larger than
+/// `p_max` (§2 consequence 5). Returns the weight of the first edge whose
+/// activation would overflow the capacity (ties activated together), or
+/// 0.0 if even the full graph fits.
+pub fn lambda_for_capacity(p: usize, edges: Vec<WEdge>, p_max: usize) -> f64 {
+    assert!(p_max >= 1);
+    let mut edges = edges;
+    edges.sort_by(|a, b| b.w.partial_cmp(&a.w).unwrap());
+    let mut uf = UnionFind::new(p);
+    let mut idx = 0usize;
+    while idx < edges.len() {
+        // activate the whole tie-group [idx, end)
+        let w = edges[idx].w;
+        let mut end = idx;
+        while end < edges.len() && edges[end].w == w {
+            end += 1;
+        }
+        // trial: apply group, check capacity
+        let snapshot = uf.clone();
+        for e in &edges[idx..end] {
+            uf.union(e.i as usize, e.j as usize);
+        }
+        if uf.max_component_size() > p_max {
+            // activating edges of weight w overflows ⇒ λ must keep them
+            // inactive ⇒ λ ≥ w; smallest such λ is w itself (strict >).
+            let _ = snapshot; // (snapshot kept for clarity; uf is discarded)
+            return w;
+        }
+        idx = end;
+    }
+    0.0
+}
+
+/// Interval [λ_min, λ_max) over which the thresholded graph has exactly k
+/// components, if such an interval exists. λ_max is the largest magnitude
+/// whose activation first yields k components; λ_min the magnitude whose
+/// activation drops the count below k.
+pub fn lambda_interval_for_k(p: usize, edges: Vec<WEdge>, k: usize) -> Option<(f64, f64)> {
+    let mut edges = edges;
+    edges.sort_by(|a, b| b.w.partial_cmp(&a.w).unwrap());
+    let mut uf = UnionFind::new(p);
+    let mut upper: Option<f64> = if p == k { Some(f64::INFINITY) } else { None };
+    let mut idx = 0usize;
+    while idx < edges.len() {
+        let w = edges[idx].w;
+        let mut end = idx;
+        while end < edges.len() && edges[end].w == w {
+            uf.union(edges[end].i as usize, edges[end].j as usize);
+            end += 1;
+        }
+        let n = uf.n_components();
+        // component count after activation, i.e. at λ just below w
+        if n == k && upper.is_none() {
+            upper = Some(w);
+        }
+        if n < k {
+            return upper.map(|u| (w, u));
+        }
+        idx = end;
+    }
+    // never dropped below k: interval extends to 0
+    upper.map(|u| (0.0, u))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screen::threshold::threshold_partition;
+    use crate::util::rng::Xoshiro256;
+
+    fn demo_s() -> Mat {
+        let mut s = Mat::eye(5);
+        let pairs = [(0, 1, 0.9), (1, 2, 0.7), (3, 4, 0.5), (2, 3, 0.2)];
+        for &(i, j, v) in &pairs {
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+        s
+    }
+
+    #[test]
+    fn sweep_matches_direct_thresholding() {
+        let s = demo_s();
+        let edges = weighted_edges(&s, 0.0);
+        let mut sweep = LambdaSweep::new(5, edges);
+        for lam in [1.0, 0.8, 0.6, 0.4, 0.1] {
+            sweep.advance_to(lam);
+            let direct = threshold_partition(&s, lam);
+            let swept = sweep.partition();
+            assert!(swept.equals(&direct), "λ={lam}");
+            assert_eq!(sweep.n_components(), direct.n_components(), "λ={lam}");
+            assert_eq!(sweep.max_component_size(), direct.max_component_size());
+        }
+    }
+
+    #[test]
+    fn histogram_incremental_matches_partition() {
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        let p = 40;
+        let mut s = Mat::eye(p);
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let v = rng.gaussian() * 0.3;
+                s.set(i, j, v);
+                s.set(j, i, v);
+            }
+        }
+        let edges = weighted_edges(&s, 0.0);
+        let mut sweep = LambdaSweep::new(p, edges);
+        for lam in [0.8, 0.5, 0.3, 0.2, 0.1, 0.05] {
+            sweep.advance_to(lam);
+            let part = sweep.partition();
+            assert_eq!(sweep.histogram(), part.size_histogram(), "λ={lam}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn sweep_upward_panics() {
+        let mut sweep = LambdaSweep::new(3, vec![]);
+        sweep.advance_to(0.5);
+        sweep.advance_to(0.6);
+    }
+
+    #[test]
+    fn profile_grid_monotonicity() {
+        let s = demo_s();
+        let grid = [0.95, 0.8, 0.6, 0.4, 0.1];
+        let prof = profile_grid(5, weighted_edges(&s, 0.0), &grid);
+        assert_eq!(prof.len(), 5);
+        // components non-increasing, max size non-decreasing as λ falls
+        for w in prof.windows(2) {
+            assert!(w[1].n_components <= w[0].n_components);
+            assert!(w[1].max_size >= w[0].max_size);
+        }
+        assert_eq!(prof[0].n_components, 5);
+        assert_eq!(prof[4].n_components, 1);
+    }
+
+    #[test]
+    fn capacity_lambda_exact() {
+        let s = demo_s();
+        let edges = weighted_edges(&s, 0.0);
+        // p_max = 2: activating 0.7 would make {0,1,2} (size 3) ⇒ λ = 0.7
+        assert_eq!(lambda_for_capacity(5, edges.clone(), 2), 0.7);
+        // p_max = 1: even the first edge (0.9) overflows ⇒ λ = 0.9
+        assert_eq!(lambda_for_capacity(5, edges.clone(), 1), 0.9);
+        // p_max = 5: everything fits ⇒ 0
+        assert_eq!(lambda_for_capacity(5, edges, 5), 0.0);
+        // verify the returned λ actually satisfies the capacity
+        let lam = 0.7;
+        let part = threshold_partition(&s, lam);
+        assert!(part.max_component_size() <= 2);
+    }
+
+    #[test]
+    fn interval_for_k() {
+        let s = demo_s();
+        let edges = weighted_edges(&s, 0.0);
+        // counts as λ falls: 5 (λ≥0.9), 4 (0.7≤λ<0.9), 3 (0.5≤λ<0.7),
+        // 2 (0.2≤λ<0.5), 1 (λ<0.2)
+        let (lo, hi) = lambda_interval_for_k(5, edges.clone(), 3).unwrap();
+        assert_eq!((lo, hi), (0.5, 0.7));
+        for lam in [0.5, 0.6, 0.69] {
+            assert_eq!(threshold_partition(&s, lam).n_components(), 3, "λ={lam}");
+        }
+        let (lo2, hi2) = lambda_interval_for_k(5, edges.clone(), 1).unwrap();
+        assert_eq!((lo2, hi2), (0.0, 0.2));
+        // k=5: all isolated for λ ≥ 0.9
+        let (_, hi5) = lambda_interval_for_k(5, edges, 5).unwrap();
+        assert!(hi5.is_infinite());
+    }
+
+    #[test]
+    fn empty_graph_profile() {
+        let prof = profile_grid(4, vec![], &[0.5, 0.1]);
+        assert_eq!(prof[0].n_components, 4);
+        assert_eq!(prof[1].n_components, 4);
+        assert_eq!(prof[0].histogram, vec![(1, 4)]);
+        assert_eq!(prof[0].n_isolated, 4);
+    }
+}

@@ -1,0 +1,124 @@
+//! Streaming screen over a raw data matrix — never materializing the p×p
+//! covariance.
+//!
+//! For example (C) (p = 24,481) the dense S is ~5 GB; the screen only needs
+//! edges with |corr| above a floor. With standardized columns Z (n×p,
+//! XᵀX/n = correlation), the screen computes Gram blocks ZᵀZ tile by tile
+//! and keeps only the surviving edges: O(n·p²) compute, O(p·b + |E|) memory.
+//! This mirrors the L1 `gram` + `threshold_mask` Pallas fusion (§5 of
+//! DESIGN.md) and the paper's remark that the screen is "off-line and
+//! amenable to parallel computation" (§3).
+
+use super::profile::WEdge;
+use crate::linalg::Mat;
+
+/// Compute all edges {(i,j,|corr_ij|) : |corr_ij| > floor} from a
+/// column-standardized data matrix `z` (n×p, Zᵀ Z / n = correlation),
+/// streaming over `block`-column tiles.
+pub fn edges_above_from_standardized(z: &Mat, floor: f64, block: usize) -> Vec<WEdge> {
+    let (n, p) = (z.rows(), z.cols());
+    assert!(block > 0);
+    let inv_n = 1.0 / n as f64;
+    let mut edges = Vec::new();
+
+    let n_blocks = p.div_ceil(block);
+    // Pre-extract column blocks transposed: zt[b] is (bsize × n) row-major,
+    // so Gram tiles are plain row-dot-products (cache friendly).
+    let mut zt: Vec<Mat> = Vec::with_capacity(n_blocks);
+    for b in 0..n_blocks {
+        let lo = b * block;
+        let hi = ((b + 1) * block).min(p);
+        let mut t = Mat::zeros(hi - lo, n);
+        for r in 0..n {
+            let zr = z.row(r);
+            for (c, col) in (lo..hi).enumerate() {
+                t.set(c, r, zr[col]);
+            }
+        }
+        zt.push(t);
+    }
+
+    for bi in 0..n_blocks {
+        let ti = &zt[bi];
+        let ilo = bi * block;
+        for bj in bi..n_blocks {
+            let tj = &zt[bj];
+            let jlo = bj * block;
+            for a in 0..ti.rows() {
+                let ra = ti.row(a);
+                let jstart = if bi == bj { a + 1 } else { 0 };
+                for b2 in jstart..tj.rows() {
+                    let w = crate::linalg::dot(ra, tj.row(b2)).abs() * inv_n;
+                    if w > floor {
+                        edges.push(WEdge {
+                            i: (ilo + a) as u32,
+                            j: (jlo + b2) as u32,
+                            w,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// Count of off-diagonal pairs with |corr| > floor (no edge materialization).
+pub fn count_above_from_standardized(z: &Mat, floor: f64, block: usize) -> usize {
+    // Reuse the edge extraction; counting saves only the Vec push.
+    edges_above_from_standardized(z, floor, block).len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::covariance::{sample_correlation, standardize_columns};
+    use crate::screen::profile::weighted_edges;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn streaming_matches_dense_screen() {
+        let mut rng = Xoshiro256::seed_from_u64(44);
+        let x = Mat::from_fn(25, 37, |_, _| rng.gaussian());
+        let s = sample_correlation(&x);
+        let mut z = x.clone();
+        standardize_columns(&mut z);
+        let floor = 0.2;
+        let mut dense: Vec<(u32, u32)> =
+            weighted_edges(&s, floor).iter().map(|e| (e.i, e.j)).collect();
+        for block in [1usize, 5, 16, 37, 64] {
+            let mut streamed: Vec<(u32, u32)> =
+                edges_above_from_standardized(&z, floor, block)
+                    .iter()
+                    .map(|e| (e.i, e.j))
+                    .collect();
+            streamed.sort_unstable();
+            dense.sort_unstable();
+            assert_eq!(streamed, dense, "block={block}");
+        }
+    }
+
+    #[test]
+    fn streaming_weights_match_correlations() {
+        let mut rng = Xoshiro256::seed_from_u64(45);
+        let x = Mat::from_fn(30, 12, |_, _| rng.gaussian());
+        let s = sample_correlation(&x);
+        let mut z = x.clone();
+        standardize_columns(&mut z);
+        let edges = edges_above_from_standardized(&z, 0.0, 4);
+        assert_eq!(edges.len(), 12 * 11 / 2);
+        for e in &edges {
+            let expect = s.get(e.i as usize, e.j as usize).abs();
+            assert!((e.w - expect).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn high_floor_empty() {
+        let mut rng = Xoshiro256::seed_from_u64(46);
+        let x = Mat::from_fn(40, 10, |_, _| rng.gaussian());
+        let mut z = x;
+        standardize_columns(&mut z);
+        assert_eq!(count_above_from_standardized(&z, 1.0, 8), 0);
+    }
+}

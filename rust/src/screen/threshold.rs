@@ -1,0 +1,152 @@
+//! Exact covariance thresholding — eq. (4) of the paper.
+//!
+//! Builds the thresholded sample covariance graph E(λ) and its connected
+//! components. This is the entire screening rule: by Theorem 1 its vertex
+//! partition equals the partition of the glasso concentration graph at the
+//! same λ, at O(p²) cost instead of O(p³⁺).
+
+use crate::graph::{components_bfs, CsrGraph, Partition};
+use crate::linalg::Mat;
+
+/// Edge list of the thresholded graph: {(i,j) : |S_ij| > λ, i < j}.
+pub fn threshold_edges(s: &Mat, lambda: f64) -> Vec<(u32, u32)> {
+    assert!(s.is_square());
+    let p = s.rows();
+    let mut edges = Vec::new();
+    for i in 0..p {
+        let row = s.row(i);
+        for j in (i + 1)..p {
+            if row[j].abs() > lambda {
+                edges.push((i as u32, j as u32));
+            }
+        }
+    }
+    edges
+}
+
+/// The thresholded sample covariance graph G(λ).
+pub fn threshold_graph(s: &Mat, lambda: f64) -> CsrGraph {
+    let edges = threshold_edges(s, lambda);
+    CsrGraph::from_edges(s.rows(), &edges)
+}
+
+/// Vertex partition of G(λ) — the left-hand side of Theorem 1.
+pub fn threshold_partition(s: &Mat, lambda: f64) -> Partition {
+    components_bfs(&threshold_graph(s, lambda))
+}
+
+/// Partition induced by the nonzero pattern of an estimated Θ̂ — the
+/// estimated concentration graph (eq. 2/3), right-hand side of Theorem 1.
+/// `zero_tol` declares |Θ_ij| ≤ zero_tol structurally zero (solvers are
+/// iterative; exact zeros only from GLASSO/ADMM soft-thresholding).
+pub fn concentration_partition(theta: &Mat, zero_tol: f64) -> Partition {
+    assert!(theta.is_square());
+    let p = theta.rows();
+    let g = CsrGraph::from_dense(p, |i, j| theta.get(i, j).abs() > zero_tol);
+    components_bfs(&g)
+}
+
+/// Number of edges |E(λ)| without materializing them.
+pub fn count_edges(s: &Mat, lambda: f64) -> usize {
+    let p = s.rows();
+    let mut cnt = 0usize;
+    for i in 0..p {
+        let row = s.row(i);
+        for j in (i + 1)..p {
+            if row[j].abs() > lambda {
+                cnt += 1;
+            }
+        }
+    }
+    cnt
+}
+
+/// All distinct off-diagonal magnitudes |S_ij| sorted DESCENDING — the
+/// candidate set where components can change ("the connected components
+/// change only at the absolute values of the entries of S", §4.2).
+pub fn sorted_offdiag_magnitudes(s: &Mat) -> Vec<f64> {
+    assert!(s.is_square());
+    let p = s.rows();
+    let mut vals = Vec::with_capacity(p * (p - 1) / 2);
+    for i in 0..p {
+        let row = s.row(i);
+        for j in (i + 1)..p {
+            vals.push(row[j].abs());
+        }
+    }
+    vals.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    vals.dedup();
+    vals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_s() -> Mat {
+        // 4 nodes: strong pair (0,1) at 0.9, weak pair (2,3) at 0.3
+        let mut s = Mat::eye(4);
+        s.set(0, 1, 0.9);
+        s.set(1, 0, 0.9);
+        s.set(2, 3, -0.3);
+        s.set(3, 2, -0.3);
+        s
+    }
+
+    #[test]
+    fn edges_strictly_above_lambda() {
+        let s = demo_s();
+        assert_eq!(threshold_edges(&s, 0.5), vec![(0, 1)]);
+        assert_eq!(threshold_edges(&s, 0.2).len(), 2);
+        // boundary: |S_ij| == λ is NOT an edge (strict inequality in (4))
+        assert_eq!(threshold_edges(&s, 0.9), Vec::<(u32, u32)>::new());
+        assert_eq!(threshold_edges(&s, 0.3).len(), 1);
+        assert_eq!(count_edges(&s, 0.2), 2);
+    }
+
+    #[test]
+    fn partitions_at_levels() {
+        let s = demo_s();
+        let high = threshold_partition(&s, 0.95);
+        assert_eq!(high.n_components(), 4);
+        let mid = threshold_partition(&s, 0.5);
+        assert_eq!(mid.n_components(), 3);
+        assert_eq!(mid.label_of(0), mid.label_of(1));
+        let low = threshold_partition(&s, 0.1);
+        assert_eq!(low.n_components(), 2);
+    }
+
+    #[test]
+    fn negative_entries_use_magnitude() {
+        let s = demo_s();
+        let part = threshold_partition(&s, 0.25);
+        assert_eq!(part.label_of(2), part.label_of(3));
+    }
+
+    #[test]
+    fn concentration_partition_from_theta() {
+        let mut theta = Mat::eye(4);
+        theta.set(0, 2, -0.4);
+        theta.set(2, 0, -0.4);
+        let part = concentration_partition(&theta, 1e-8);
+        assert_eq!(part.n_components(), 3);
+        assert_eq!(part.label_of(0), part.label_of(2));
+    }
+
+    #[test]
+    fn sorted_magnitudes() {
+        let s = demo_s();
+        let v = sorted_offdiag_magnitudes(&s);
+        assert_eq!(v, vec![0.9, 0.3, 0.0]);
+    }
+
+    #[test]
+    fn nesting_in_lambda_on_thresholded_graph() {
+        // G(λ) components nest as λ decreases — the covariance-graph half
+        // of Theorem 2.
+        let s = demo_s();
+        let coarse = threshold_partition(&s, 0.1);
+        let fine = threshold_partition(&s, 0.5);
+        assert!(fine.is_refinement_of(&coarse));
+    }
+}

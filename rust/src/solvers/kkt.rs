@@ -1,0 +1,146 @@
+//! KKT certification for problem (1) — the optimality system (11)–(12) of
+//! Appendix A.1:
+//!
+//!   |S_ij − Ŵ_ij| ≤ λ          for Θ̂_ij = 0
+//!   Ŵ_ij = S_ij + λ·sign(Θ̂_ij) for Θ̂_ij ≠ 0     (Ŵ = Θ̂⁻¹)
+//!   Ŵ_ii = S_ii + λ
+//!
+//! Every solver's output is certified against this system in tests; the
+//! theorem-level property tests build on it (an exactly-solved Θ̂ must have
+//! the thresholded-S component structure — Theorem 1).
+
+use crate::linalg::{inverse_spd, Mat};
+
+/// Result of a KKT check.
+#[derive(Clone, Debug)]
+pub struct KktReport {
+    /// max over zero entries of (|S_ij − W_ij| − λ)₊
+    pub zero_violation: f64,
+    /// max over nonzero entries of |W_ij − S_ij − λ·sign(Θ_ij)|
+    pub sign_violation: f64,
+    /// max over diagonal of |W_ii − S_ii − λ|
+    pub diag_violation: f64,
+    /// all three below tolerance?
+    pub satisfied: bool,
+    /// tolerance used
+    pub tol: f64,
+    /// |Θ_ij| below this counts as structurally zero
+    pub zero_tol: f64,
+}
+
+/// Certify Θ̂ against the KKT system. `tol` bounds allowed violation;
+/// entries with |Θ_ij| ≤ tol are treated as zeros.
+pub fn check_kkt(s: &Mat, theta: &Mat, lambda: f64, tol: f64) -> KktReport {
+    check_kkt_with_zero_tol(s, theta, lambda, tol, tol)
+}
+
+/// Variant with an explicit structural-zero threshold.
+pub fn check_kkt_with_zero_tol(
+    s: &Mat,
+    theta: &Mat,
+    lambda: f64,
+    tol: f64,
+    zero_tol: f64,
+) -> KktReport {
+    let p = s.rows();
+    assert_eq!(theta.rows(), p);
+    let w = match inverse_spd(theta) {
+        Ok(w) => w,
+        Err(_) => {
+            return KktReport {
+                zero_violation: f64::INFINITY,
+                sign_violation: f64::INFINITY,
+                diag_violation: f64::INFINITY,
+                satisfied: false,
+                tol,
+                zero_tol,
+            }
+        }
+    };
+
+    let mut zero_v = 0.0f64;
+    let mut sign_v = 0.0f64;
+    let mut diag_v = 0.0f64;
+    for i in 0..p {
+        diag_v = diag_v.max((w.get(i, i) - s.get(i, i) - lambda).abs());
+        for j in 0..p {
+            if i == j {
+                continue;
+            }
+            let t = theta.get(i, j);
+            let resid = s.get(i, j) - w.get(i, j);
+            if t.abs() <= zero_tol {
+                zero_v = zero_v.max(resid.abs() - lambda);
+            } else {
+                // W_ij − S_ij = λ sign(Θ_ij)
+                sign_v = sign_v.max((-resid - lambda * t.signum()).abs());
+            }
+        }
+    }
+    let zero_v = zero_v.max(0.0);
+    KktReport {
+        zero_violation: zero_v,
+        sign_violation: sign_v,
+        diag_violation: diag_v,
+        satisfied: zero_v <= tol && sign_v <= tol && diag_v <= tol,
+        tol,
+        zero_tol,
+    }
+}
+
+/// The Witten–Friedman isolated-node set C (paper eq. 7):
+/// C = { i : |S_ij| ≤ λ ∀ j ≠ i }.
+pub fn witten_friedman_isolated(s: &Mat, lambda: f64) -> Vec<usize> {
+    let p = s.rows();
+    (0..p)
+        .filter(|&i| (0..p).all(|j| j == i || s.get(i, j).abs() <= lambda))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_diagonal_solution_passes() {
+        // S diagonal: Θ̂ = diag(1/(S_ii+λ)) is exact.
+        let s = Mat::diag(&[1.0, 2.0]);
+        let lambda = 0.3;
+        let theta = Mat::diag(&[1.0 / 1.3, 1.0 / 2.3]);
+        let r = check_kkt(&s, &theta, lambda, 1e-10);
+        assert!(r.satisfied, "{r:?}");
+    }
+
+    #[test]
+    fn wrong_solution_fails() {
+        let s = Mat::diag(&[1.0, 2.0]);
+        let theta = Mat::eye(2); // not the solution for λ=0.3
+        let r = check_kkt(&s, &theta, 0.3, 1e-8);
+        assert!(!r.satisfied);
+        assert!(r.diag_violation > 0.1);
+    }
+
+    #[test]
+    fn indefinite_theta_rejected() {
+        let s = Mat::eye(2);
+        let theta = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]);
+        let r = check_kkt(&s, &theta, 0.1, 1e-8);
+        assert!(!r.satisfied);
+        assert!(r.zero_violation.is_infinite());
+    }
+
+    #[test]
+    fn wf_isolated_set() {
+        let mut s = Mat::eye(4);
+        s.set(0, 1, 0.9);
+        s.set(1, 0, 0.9);
+        s.set(2, 3, 0.2);
+        s.set(3, 2, 0.2);
+        // λ=0.5: nodes 2,3 have all |offdiag| ≤ 0.5 → isolated
+        assert_eq!(witten_friedman_isolated(&s, 0.5), vec![2, 3]);
+        // λ=1.0: everything isolated
+        assert_eq!(witten_friedman_isolated(&s, 1.0), vec![0, 1, 2, 3]);
+        // λ=0.1: none
+        assert!(witten_friedman_isolated(&s, 0.1).is_empty());
+    }
+}

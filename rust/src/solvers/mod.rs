@@ -1,0 +1,223 @@
+//! Graphical-lasso solvers.
+//!
+//! The screening wrapper (coordinator) is solver-agnostic — exactly the
+//! paper's framing ("this simple rule, when used as a wrapper around
+//! existing algorithms"). Three independent solver families are provided,
+//! mirroring the paper's §4 comparison:
+//!
+//! - [`glasso`]: block coordinate descent on W = Θ⁻¹ (Friedman et al. 2007)
+//!   — the paper's GLASSO, with the node-screening check (10) available as
+//!   a flag (§2.1 shows it is a consequence of the BCD update).
+//! - [`smacs`]: accelerated projected gradient on the box-constrained dual
+//!   (Lu 2009/2010's smooth-optimization family), duality-gap stopping.
+//! - [`admm`]: alternating direction method of multipliers (Yuan 2009 /
+//!   Scheinberg et al. 2010) — spectral Θ-step + soft-threshold Z-step.
+//!
+//! All solve problem (1) of the paper: minimize_{Θ≻0}
+//! `-log det Θ + tr(SΘ) + λ Σ_ij |Θ_ij|` (diagonal penalized).
+
+pub mod admm;
+pub mod glasso;
+pub mod kkt;
+pub mod lasso_cd;
+pub mod selection;
+pub mod smacs;
+
+use crate::linalg::{Cholesky, Mat};
+use anyhow::Result;
+
+/// Which algorithm solves a (sub-)problem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    Glasso,
+    Smacs,
+    Admm,
+}
+
+impl SolverKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Glasso => "GLASSO",
+            SolverKind::Smacs => "SMACS",
+            SolverKind::Admm => "ADMM",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SolverKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "glasso" => Some(SolverKind::Glasso),
+            "smacs" => Some(SolverKind::Smacs),
+            "admm" => Some(SolverKind::Admm),
+            _ => None,
+        }
+    }
+}
+
+/// Solver options. Defaults mirror the paper's §4.1 settings
+/// (tol 1e-5, max 1000 iterations).
+#[derive(Clone, Debug)]
+pub struct SolverOptions {
+    pub tol: f64,
+    pub max_iter: usize,
+    /// GLASSO: perform the ‖s₁₂‖∞ ≤ λ node-screening check (10) before the
+    /// inner lasso. §2.1 notes CRAN glasso 1.4 omitted it; flag kept for
+    /// the ablation bench.
+    pub node_screen_check: bool,
+    /// Inner lasso CD tolerance (GLASSO).
+    pub inner_tol: f64,
+    pub inner_max_iter: usize,
+    /// Penalize the diagonal of Θ (problem (1); the paper's §1 also names
+    /// the unpenalized-diagonal "related criterion" — GLASSO supports it).
+    /// Theorem-1 screening remains exact either way: the proof only uses
+    /// the off-diagonal KKT conditions.
+    pub penalize_diagonal: bool,
+}
+
+impl Default for SolverOptions {
+    fn default() -> Self {
+        SolverOptions {
+            tol: 1e-5,
+            max_iter: 1000,
+            node_screen_check: true,
+            inner_tol: 1e-7,
+            inner_max_iter: 200,
+            penalize_diagonal: true,
+        }
+    }
+}
+
+/// Warm-start state: previous solution on the same vertex set.
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    pub theta: Mat,
+    pub w: Mat,
+}
+
+/// Solution of (a block of) problem (1).
+#[derive(Clone, Debug)]
+pub struct Solution {
+    /// Estimated precision matrix Θ̂.
+    pub theta: Mat,
+    /// Estimated covariance Ŵ = Θ̂⁻¹ (as maintained by the solver).
+    pub w: Mat,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Final primal objective value.
+    pub objective: f64,
+}
+
+/// Primal objective: -log det Θ + tr(SΘ) + λ Σ|Θ_ij| (diagonal included).
+pub fn objective(s: &Mat, theta: &Mat, lambda: f64) -> Result<f64> {
+    let chol = Cholesky::new(theta)?;
+    let mut tr = 0.0;
+    let p = s.rows();
+    for i in 0..p {
+        tr += crate::linalg::dot(s.row(i), theta.row(i));
+    }
+    Ok(-chol.logdet() + tr + lambda * theta.abs_sum())
+}
+
+/// Dual objective for a feasible dual point U (|U_ij| ≤ λ, S+U ≻ 0):
+/// log det(S+U) + p.
+pub fn dual_objective(s: &Mat, u: &Mat) -> Result<f64> {
+    let p = s.rows();
+    let mut su = s.clone();
+    su.axpy(1.0, u);
+    Ok(Cholesky::new(&su)?.logdet() + p as f64)
+}
+
+/// Dispatch a solve by kind.
+pub fn solve(
+    kind: SolverKind,
+    s: &Mat,
+    lambda: f64,
+    opts: &SolverOptions,
+    warm: Option<&WarmStart>,
+) -> Result<Solution> {
+    match kind {
+        SolverKind::Glasso => glasso::solve(s, lambda, opts, warm),
+        SolverKind::Smacs => smacs::solve(s, lambda, opts, warm),
+        SolverKind::Admm => admm::solve(s, lambda, opts, warm),
+    }
+}
+
+/// Soft-threshold operator S(x, t) = sign(x)·max(|x|−t, 0).
+#[inline]
+pub fn soft_threshold(x: f64, t: f64) -> f64 {
+    if x > t {
+        x - t
+    } else if x < -t {
+        x + t
+    } else {
+        0.0
+    }
+}
+
+/// Closed-form solution for p = 1: Θ = 1/(S₁₁+λ), W = S₁₁+λ.
+/// (W₁₁ = S₁₁ + λ from the KKT diagonal condition.)
+pub fn solve_1x1(s11: f64, lambda: f64) -> Solution {
+    let w = s11 + lambda;
+    assert!(w > 0.0, "S_11 + lambda must be positive (S PSD, lambda > 0)");
+    Solution {
+        theta: Mat::from_vec(1, 1, vec![1.0 / w]),
+        w: Mat::from_vec(1, 1, vec![w]),
+        iterations: 0,
+        converged: true,
+        // −ln(1/w) + (s+λ)/w = ln w + 1
+        objective: w.ln() + 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn objective_identity() {
+        // S = I, Θ = I, λ=0.1: obj = 0 + p + 0.1·p
+        let s = Mat::eye(3);
+        let th = Mat::eye(3);
+        let o = objective(&s, &th, 0.1).unwrap();
+        assert!((o - (3.0 + 0.3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_1x1_kkt() {
+        let sol = solve_1x1(2.0, 0.5);
+        assert!((sol.theta.get(0, 0) - 1.0 / 2.5).abs() < 1e-12);
+        assert!((sol.w.get(0, 0) - 2.5).abs() < 1e-12);
+        // objective matches generic evaluation
+        let s = Mat::from_vec(1, 1, vec![2.0]);
+        let o = objective(&s, &sol.theta, 0.5).unwrap();
+        assert!((o - sol.objective).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solver_kind_parse() {
+        assert_eq!(SolverKind::parse("glasso"), Some(SolverKind::Glasso));
+        assert_eq!(SolverKind::parse("SMACS"), Some(SolverKind::Smacs));
+        assert_eq!(SolverKind::parse("AdMm"), Some(SolverKind::Admm));
+        assert_eq!(SolverKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn dual_never_exceeds_primal() {
+        // weak duality sanity: U = 0 feasible when S ≻ 0
+        let s = Mat::from_vec(2, 2, vec![2.0, 0.3, 0.3, 1.5]);
+        let u = Mat::zeros(2, 2);
+        let d = dual_objective(&s, &u).unwrap();
+        // primal at Θ = S⁻¹ with λ=0.1
+        let theta = crate::linalg::inverse_spd(&s).unwrap();
+        let pobj = objective(&s, &theta, 0.1).unwrap();
+        assert!(d <= pobj + 1e-9);
+    }
+}

@@ -1,0 +1,166 @@
+//! Wall-clock timing utilities used by the coordinator, benches and reports.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let sw = Stopwatch::start();
+    let out = f();
+    (out, sw.elapsed_secs())
+}
+
+/// Accumulates named phase timings (screen / partition / solve / assemble…).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimings {
+    entries: Vec<(String, f64)>,
+}
+
+impl PhaseTimings {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `secs` to phase `name` (accumulating across calls).
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|(n, _)| n == name) {
+            e.1 += secs;
+        } else {
+            self.entries.push((name.to_string(), secs));
+        }
+    }
+
+    /// Time a closure under phase `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let (out, secs) = timed(f);
+        self.add(name, secs);
+        out
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.entries.iter().map(|(n, s)| (n.as_str(), *s))
+    }
+
+    /// Merge another set of timings into this one.
+    pub fn merge(&mut self, other: &PhaseTimings) {
+        for (n, s) in other.iter() {
+            self.add(n, s);
+        }
+    }
+
+    /// Render as a single human-readable line.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .entries
+            .iter()
+            .map(|(n, s)| format!("{n}={s:.4}s"))
+            .collect();
+        parts.join(" ")
+    }
+}
+
+/// Format seconds the way the paper's tables do (sub-second precision for
+/// small numbers, seconds otherwise).
+pub fn fmt_secs(s: f64) -> String {
+    if s == 0.0 {
+        "0".to_string()
+    } else if s < 0.001 {
+        format!("{:.2e}", s)
+    } else if s < 1.0 {
+        format!("{:.4}", s)
+    } else if s < 100.0 {
+        format!("{:.2}", s)
+    } else {
+        format!("{:.1}", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed_secs();
+        let b = sw.elapsed_secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn phase_timings_accumulate() {
+        let mut t = PhaseTimings::new();
+        t.add("solve", 1.0);
+        t.add("solve", 2.0);
+        t.add("screen", 0.5);
+        assert_eq!(t.get("solve"), 3.0);
+        assert_eq!(t.get("screen"), 0.5);
+        assert_eq!(t.get("absent"), 0.0);
+        assert!((t.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_timings_merge() {
+        let mut a = PhaseTimings::new();
+        a.add("x", 1.0);
+        let mut b = PhaseTimings::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 3.0);
+        assert_eq!(a.get("y"), 3.0);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(0.0), "0");
+        assert!(fmt_secs(1e-5).contains('e'));
+        assert_eq!(fmt_secs(0.25), "0.2500");
+        assert_eq!(fmt_secs(12.345), "12.35");
+        assert_eq!(fmt_secs(1234.5), "1234.5");
+    }
+}

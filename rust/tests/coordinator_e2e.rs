@@ -1,0 +1,132 @@
+//! Coordinator end-to-end behaviours: failure injection, capacity
+//! negotiation, parallel dispatch determinism, serving-loop invariants.
+
+use covthresh::coordinator::solver_backend::FailInjectBackend;
+use covthresh::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::synthetic::{block_instance, block_instance_sizes};
+use covthresh::proptest_lite::{check_property, CaseResult, PropConfig};
+use covthresh::screen::profile::weighted_edges;
+
+#[test]
+fn failure_in_one_block_fails_the_request_with_context() {
+    let inst = block_instance_sizes(&[4, 7, 3], 21);
+    let backend = FailInjectBackend { inner: NativeBackend::glasso(), fail_sizes: vec![7] };
+    let coord = Coordinator::new(backend, CoordinatorConfig::default());
+    let err = coord.solve_screened(&inst.s, 0.9).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("size 7"), "{msg}");
+    assert!(msg.contains("injected failure"), "{msg}");
+}
+
+#[test]
+fn capacity_negotiation_loop() {
+    let inst = block_instance_sizes(&[30, 10, 5], 33);
+    let p = inst.s.rows();
+    let coord = Coordinator::new(
+        NativeBackend::glasso(),
+        CoordinatorConfig { capacity: 12, ..Default::default() },
+    );
+    // initial λ leaves a 30-block: rejected
+    assert!(coord.solve_screened(&inst.s, 0.9).is_err());
+    // negotiate up
+    let lam = covthresh::screen::lambda_for_capacity(p, weighted_edges(&inst.s, 0.0), 12);
+    let report = coord.solve_screened(&inst.s, lam).unwrap();
+    assert!(report.global.partition.max_component_size() <= 12);
+    assert!(report.global.all_converged());
+}
+
+#[test]
+fn parallel_dispatch_is_deterministic() {
+    let inst = block_instance(6, 8, 44);
+    let make = |machines: usize, parallel: bool| {
+        Coordinator::new(
+            NativeBackend::glasso(),
+            CoordinatorConfig { n_machines: machines, parallel, ..Default::default() },
+        )
+        .solve_screened(&inst.s, 0.9)
+        .unwrap()
+        .global
+        .theta_dense()
+    };
+    let base = make(1, false);
+    for machines in [2usize, 4, 8] {
+        let got = make(machines, true);
+        assert!(
+            got.max_abs_diff(&base) < 1e-12,
+            "machines={machines} changed the solution"
+        );
+    }
+}
+
+#[test]
+fn serving_loop_many_requests_stay_certified() {
+    // A miniature of examples/e2e_serving.rs on the native backend.
+    check_property(
+        "serving loop: all responses certified",
+        &PropConfig { cases: 10, min_size: 2, max_size: 5, base_seed: 0xE2E },
+        |seed, size, rng| {
+            let sizes: Vec<usize> = (0..size).map(|_| 2 + rng.uniform_usize(8)).collect();
+            let inst = block_instance_sizes(&sizes, seed);
+            let coord =
+                Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default());
+            for lam in [0.95, 0.88] {
+                let report = match coord.solve_screened(&inst.s, lam) {
+                    Ok(r) => r,
+                    Err(e) => return CaseResult::Fail(format!("seed={seed}: {e}")),
+                };
+                let kkt = covthresh::solvers::kkt::check_kkt(
+                    &inst.s,
+                    &report.global.theta_dense(),
+                    lam,
+                    1e-4,
+                );
+                if !kkt.satisfied {
+                    return CaseResult::Fail(format!("seed={seed} λ={lam}: {kkt:?}"));
+                }
+                if !report
+                    .global
+                    .concentration_partition(1e-7)
+                    .is_refinement_of(&report.global.partition)
+                {
+                    return CaseResult::Fail(format!("seed={seed}: partition escape"));
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn schedule_covers_all_blocks_and_respects_machines() {
+    let inst = block_instance_sizes(&[9, 8, 7, 6, 5, 4, 3, 2], 55);
+    let coord = Coordinator::new(
+        NativeBackend::glasso(),
+        CoordinatorConfig { n_machines: 3, ..Default::default() },
+    );
+    let report = coord.solve_screened(&inst.s, 0.9).unwrap();
+    assert_eq!(report.schedule.machine_of.len(), report.global.blocks.len());
+    for b in &report.global.blocks {
+        assert!(b.machine < 3);
+    }
+    // LPT: no machine holds everything when 3 are available and 8 blocks exist
+    let loads: Vec<usize> =
+        report.schedule.per_machine.iter().map(|m| m.len()).collect();
+    assert!(loads.iter().all(|&l| l > 0), "all machines used: {loads:?}");
+}
+
+#[test]
+fn isolated_only_request() {
+    // λ above every |S_ij|: all nodes isolated, no blocks dispatched.
+    let inst = block_instance(2, 6, 66);
+    let coord = Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default());
+    let lam = inst.s.max_abs_offdiag() * 1.01;
+    let report = coord.solve_screened(&inst.s, lam).unwrap();
+    assert!(report.global.blocks.is_empty());
+    assert_eq!(report.global.isolated.len(), 12);
+    assert_eq!(report.n_edges, 0);
+    // closed-form diagonal solution
+    for i in 0..12 {
+        let expect = 1.0 / (inst.s.get(i, i) + lam);
+        assert!((report.global.theta(i, i) - expect).abs() < 1e-12);
+    }
+}

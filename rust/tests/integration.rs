@@ -1,0 +1,151 @@
+//! Cross-module integration tests: datasets → screen → solvers → report,
+//! exercising realistic small workloads end to end (native backend).
+
+use covthresh::config::RunConfig;
+use covthresh::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::covariance::{sample_correlation, standardize_columns};
+use covthresh::datasets::microarray;
+use covthresh::datasets::synthetic::block_instance;
+use covthresh::screen::grid::{figure1_grid, table1_lambdas};
+use covthresh::screen::profile::{lambda_for_capacity, profile_grid, weighted_edges};
+use covthresh::screen::stream::edges_above_from_standardized;
+use covthresh::screen::threshold_partition;
+use covthresh::solvers::{SolverKind, SolverOptions};
+
+#[test]
+fn table1_protocol_on_small_instance() {
+    // The full Table-1 protocol at toy scale: exact-K interval, λ_I/λ_II,
+    // both solvers, screening exactness.
+    let (k, p1) = (3usize, 12usize);
+    let inst = block_instance(k, p1, 77);
+    let p = k * p1;
+    let edges = weighted_edges(&inst.s, 0.0);
+    let (lam_i, lam_ii) = table1_lambdas(p, edges, k).unwrap();
+    let lam_ii = lam_ii * (1.0 - 1e-9);
+    for lambda in [lam_i, lam_ii] {
+        let part = threshold_partition(&inst.s, lambda);
+        assert_eq!(part.n_components(), k, "λ={lambda}");
+        assert!(part.equals(&inst.planted));
+        for kind in [SolverKind::Glasso, SolverKind::Smacs] {
+            let coord = Coordinator::new(
+                NativeBackend::new(kind, SolverOptions::default()),
+                CoordinatorConfig::default(),
+            );
+            let screened = coord.solve_screened(&inst.s, lambda).unwrap();
+            let (unscreened, _) = coord.solve_unscreened(&inst.s, lambda).unwrap();
+            let diff = screened.global.theta_dense().max_abs_diff(&unscreened.theta);
+            // SMACS is a first-order method: looser agreement than GLASSO
+            let tol = if kind == SolverKind::Glasso { 1e-4 } else { 5e-2 };
+            assert!(diff < tol, "{} λ={lambda}: diff={diff}", kind.name());
+        }
+    }
+}
+
+#[test]
+fn microarray_figure1_protocol() {
+    let cfg = microarray::scaled(&microarray::example_a(5), 200, 40);
+    let study = microarray::generate(&cfg);
+    let edges = weighted_edges(&study.s, 0.0);
+    let cap = 50;
+    let grid = figure1_grid(cfg.p, &edges, cap, 12);
+    let profile = profile_grid(cfg.p, edges, &grid);
+    // monotone trajectories + cap respected at the floor
+    for w in profile.windows(2) {
+        assert!(w[1].n_components <= w[0].n_components);
+        assert!(w[1].max_size >= w[0].max_size);
+    }
+    assert!(profile.last().unwrap().max_size <= cap);
+    // histogram counts always total the component count
+    for pt in &profile {
+        let total: usize = pt.histogram.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, pt.n_components);
+    }
+}
+
+#[test]
+fn streaming_screen_consistent_with_dense_on_microarray() {
+    let cfg = microarray::scaled(&microarray::example_b(9), 150, 60);
+    let (x, _, _) = microarray::generate_data(&cfg);
+    let s = sample_correlation(&x);
+    let mut z = x.clone();
+    standardize_columns(&mut z);
+    let floor = 0.3;
+    let streamed = edges_above_from_standardized(&z, floor, 64);
+    let dense = weighted_edges(&s, floor);
+    assert_eq!(streamed.len(), dense.len());
+    let lam = lambda_for_capacity(cfg.p, streamed, 25);
+    // λ comes from streamed Gram arithmetic; the dense correlation of the
+    // same pair can differ in the last ulp, so nudge λ above the boundary
+    // before thresholding the dense matrix.
+    let lam = lam * (1.0 + 1e-9);
+    let part = threshold_partition(&s, lam.max(floor));
+    assert!(part.max_component_size() <= 25);
+}
+
+#[test]
+fn capacity_pipeline_solves_whole_study() {
+    let cfg = microarray::scaled(&microarray::example_a(13), 120, 40);
+    let study = microarray::generate(&cfg);
+    let edges = weighted_edges(&study.s, 0.0);
+    let p_max = 20usize;
+    let lam = lambda_for_capacity(cfg.p, edges, p_max).max(0.3);
+    let coord = Coordinator::new(
+        NativeBackend::glasso(),
+        CoordinatorConfig { capacity: p_max, n_machines: 3, parallel: true, ..Default::default() },
+    );
+    let report = coord.solve_screened(&study.s, lam).unwrap();
+    assert!(report.global.all_converged());
+    assert!(report.global.partition.max_component_size() <= p_max);
+    // every vertex accounted for exactly once
+    let covered: usize = report.global.blocks.iter().map(|b| b.indices.len()).sum();
+    assert_eq!(covered + report.global.isolated.len(), cfg.p);
+    // solution certifies globally
+    let kkt = covthresh::solvers::kkt::check_kkt(
+        &study.s,
+        &report.global.theta_dense(),
+        lam,
+        1e-4,
+    );
+    assert!(kkt.satisfied, "{kkt:?}");
+}
+
+#[test]
+fn config_driven_coordinator() {
+    let cfg = RunConfig::from_toml(
+        "[solver]\nkind = \"glasso\"\ntol = 1e-6\n[coordinator]\nn_machines = 2\nparallel = true\n",
+    )
+    .unwrap();
+    let inst = block_instance(2, 8, 3);
+    let coord = Coordinator::new(
+        NativeBackend::new(cfg.solver, cfg.solver_opts.clone()),
+        cfg.coordinator.clone(),
+    );
+    let report = coord.solve_screened(&inst.s, 0.9).unwrap();
+    assert_eq!(report.schedule.n_machines(), 2);
+    assert!(report.global.all_converged());
+}
+
+#[test]
+fn modeled_speedup_tracks_measured_ordering() {
+    // The §3 cost model (Σ p_i³ vs p³) should rank configurations the same
+    // way measured times do: more blocks ⇒ bigger speedup.
+    let few = block_instance(2, 24, 1);
+    let many = block_instance(8, 6, 1);
+    let coord = Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default());
+
+    let mut measured = Vec::new();
+    let mut modeled = Vec::new();
+    for inst in [&few, &many] {
+        let lambda = 0.9;
+        let screened = coord.solve_screened(&inst.s, lambda).unwrap();
+        let (_, unscreened_secs) = coord.solve_unscreened(&inst.s, lambda).unwrap();
+        measured.push(unscreened_secs / screened.solve_secs_serial().max(1e-12));
+        let parts = covthresh::coordinator::partition_problem(&inst.s, lambda);
+        modeled.push(parts.modeled_speedup(3.0));
+    }
+    assert!(modeled[1] > modeled[0], "modeled: {modeled:?}");
+    assert!(
+        measured[1] > measured[0],
+        "measured ordering should match modeled: {measured:?}"
+    );
+}

@@ -1,0 +1,164 @@
+//! Integration: the PJRT runtime executing real AOT artifacts.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! works on a fresh checkout, but CI always builds artifacts first).
+
+use covthresh::coordinator::{BlockSolver, Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::synthetic::block_instance;
+use covthresh::linalg::Mat;
+use covthresh::runtime::{ArtifactKind, Manifest, XlaBackend};
+use covthresh::solvers::kkt::check_kkt;
+use covthresh::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn backend() -> Option<XlaBackend> {
+    match XlaBackend::load(artifacts_dir()) {
+        Ok(b) => Some(b),
+        Err(e) => {
+            eprintln!("skipping runtime tests (artifacts not built): {e}");
+            None
+        }
+    }
+}
+
+fn random_cov(p: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let x = Mat::from_fn(3 * p, p, |_, _| rng.gaussian());
+    let mut s = covthresh::linalg::syrk_t(&x);
+    s.scale(1.0 / (3 * p) as f64);
+    s
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Ok(m) = Manifest::load(artifacts_dir()) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    assert!(!m.buckets(ArtifactKind::GlassoBlock).is_empty());
+    assert!(m.entry(ArtifactKind::ThresholdMask, 256).is_some());
+}
+
+#[test]
+fn xla_block_solve_matches_native_glasso() {
+    let Some(xla) = backend() else { return };
+    let native = NativeBackend::glasso();
+    for (p, seed) in [(4usize, 1u64), (9, 2), (16, 3), (23, 4)] {
+        let s = random_cov(p, seed);
+        let lambda = 0.1;
+        let a = xla.solve_block(&s, lambda, None).unwrap();
+        let b = native.solve_block(&s, lambda, None).unwrap();
+        let diff = a.theta.max_abs_diff(&b.theta);
+        // f32 artifact + fixed sweeps vs f64 tol-converged native
+        assert!(diff < 5e-3, "p={p}: xla vs native diff {diff}");
+        assert!((a.objective - b.objective).abs() < 1e-3, "p={p}");
+    }
+}
+
+#[test]
+fn xla_solution_satisfies_kkt() {
+    let Some(xla) = backend() else { return };
+    let s = random_cov(12, 7);
+    let lambda = 0.15;
+    let sol = xla.solve_block(&s, lambda, None).unwrap();
+    let report = check_kkt(&s, &sol.theta, lambda, 5e-3);
+    assert!(report.satisfied, "{report:?}");
+}
+
+#[test]
+fn bucket_padding_is_lossless() {
+    // Same S solved at sizes that map to different buckets must agree on
+    // the real sub-block: pad nodes are isolated (Theorem-1 argument).
+    let Some(xla) = backend() else { return };
+    let s = random_cov(10, 9);
+    let lambda = 0.12;
+    let sol10 = xla.solve_block(&s, lambda, None).unwrap(); // bucket 16
+    // embed in an 18-node problem (bucket 32) with explicit isolated pads
+    let mut s_big = Mat::eye(18);
+    for i in 0..10 {
+        for j in 0..10 {
+            s_big.set(i, j, s.get(i, j));
+        }
+    }
+    let sol18 = xla.solve_block(&s_big, lambda, None).unwrap();
+    let mut max_diff = 0.0f64;
+    for i in 0..10 {
+        for j in 0..10 {
+            max_diff = max_diff.max((sol18.theta.get(i, j) - sol10.theta.get(i, j)).abs());
+        }
+    }
+    assert!(max_diff < 1e-5, "padding changed the solution by {max_diff}");
+    // pad nodes: θ_ii = 1/(1+λ), off-diagonal 0
+    for i in 10..18 {
+        assert!((sol18.theta.get(i, i) - 1.0 / (1.0 + lambda)).abs() < 1e-5);
+        for j in 0..10 {
+            assert!(sol18.theta.get(i, j).abs() < 1e-7);
+        }
+    }
+}
+
+#[test]
+fn oversized_block_is_rejected() {
+    let Some(xla) = backend() else { return };
+    let max = xla.max_bucket();
+    let s = Mat::eye(max + 1);
+    let err = xla.solve_block(&s, 0.1, None).unwrap_err();
+    assert!(err.to_string().contains("bucket"), "{err}");
+}
+
+#[test]
+fn coordinator_with_xla_backend_end_to_end() {
+    let Some(xla) = backend() else { return };
+    let inst = block_instance(3, 6, 21);
+    let lambda = 0.9;
+    let coord = Coordinator::new(xla, CoordinatorConfig::default());
+    let report = coord.solve_screened(&inst.s, lambda).unwrap();
+    assert_eq!(report.global.partition.n_components(), 3);
+    let dense = report.global.theta_dense();
+    let kkt = check_kkt(&inst.s, &dense, lambda, 5e-3);
+    assert!(kkt.satisfied, "{kkt:?}");
+    // the xla backend actually executed (bucket 16 fits blocks of 6)
+    assert!(!coord.backend.execution_counts().is_empty());
+}
+
+#[test]
+fn threshold_mask_artifact_matches_rust_screen() {
+    let Ok(m) = Manifest::load(artifacts_dir()) else { return };
+    let Some(entry) = m.entry(ArtifactKind::ThresholdMask, 256) else {
+        panic!("threshold_mask_256 missing from manifest");
+    };
+    let exe = covthresh::runtime::compile_hlo_text(&entry.path, 2).unwrap();
+    // random sparse symmetric S, unit diagonal
+    let mut rng = Xoshiro256::seed_from_u64(31);
+    let p = 256usize;
+    let mut s = Mat::eye(p);
+    for _ in 0..800 {
+        let i = rng.uniform_usize(p);
+        let j = rng.uniform_usize(p);
+        if i != j {
+            let v = rng.gaussian() * 0.4;
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+    }
+    let lambda = 0.3;
+    let flat: Vec<f32> = s.as_slice().iter().map(|&v| v as f32).collect();
+    let out = exe
+        .run_f32(&[
+            covthresh::runtime::TensorArg::matrix(flat, p, p),
+            covthresh::runtime::TensorArg::scalar1(lambda as f32),
+        ])
+        .unwrap();
+    let mask = &out[0];
+    let n_edges = out[1][0] as usize;
+    let rust_edges = covthresh::screen::threshold_edges(&s, lambda);
+    assert_eq!(n_edges, rust_edges.len(), "edge count mismatch");
+    for &(i, j) in &rust_edges {
+        assert_eq!(mask[i as usize * p + j as usize], 1.0, "edge ({i},{j}) missing");
+    }
+    let total_mask: f32 = mask.iter().sum();
+    assert_eq!(total_mask as usize, 2 * rust_edges.len());
+}

@@ -1,0 +1,256 @@
+//! Property tests for the paper's theorems, via `proptest_lite`.
+//!
+//! Theorem 1: for random S and λ, the vertex-partition of the thresholded
+//! sample covariance graph equals the partition induced by the nonzero
+//! pattern of the exactly-solved Θ̂(λ).
+//! Theorem 2: partitions nest along descending λ.
+//! Eq. (7)/(10): the Witten–Friedman isolated-node screen is the size-1
+//! special case.
+
+use covthresh::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::covariance::sample_covariance;
+use covthresh::graph::Partition;
+use covthresh::linalg::Mat;
+use covthresh::proptest_lite::{check_property, CaseResult, PropConfig};
+use covthresh::screen::{concentration_partition, threshold_partition};
+use covthresh::solvers::kkt::{check_kkt, witten_friedman_isolated};
+use covthresh::solvers::{glasso, SolverOptions};
+use covthresh::util::rng::Xoshiro256;
+
+/// Random covariance with planted sparse structure so thresholding at a
+/// random λ produces non-trivial component splits.
+fn random_structured_cov(size: usize, rng: &mut Xoshiro256) -> Mat {
+    let n_samples = 2 * size + 4;
+    // latent 2-3 factors over subsets of variables → varied |S_ij| spectrum
+    let n_factors = 1 + rng.uniform_usize(3);
+    let mut x = Mat::from_fn(n_samples, size, |_, _| rng.gaussian() * 0.6);
+    for _ in 0..n_factors {
+        let k = 2 + rng.uniform_usize(size.max(3) - 2);
+        let members = rng.sample_indices(size, k);
+        let f: Vec<f64> = (0..n_samples).map(|_| rng.gaussian()).collect();
+        for &j in &members {
+            let w = rng.uniform_range(0.5, 1.2);
+            for i in 0..n_samples {
+                let v = x.get(i, j) + w * f[i];
+                x.set(i, j, v);
+            }
+        }
+    }
+    sample_covariance(&x)
+}
+
+fn tight_opts() -> SolverOptions {
+    SolverOptions { tol: 1e-9, inner_tol: 1e-11, ..Default::default() }
+}
+
+#[test]
+fn theorem1_partition_equality() {
+    check_property(
+        "theorem1: screen partition == concentration partition",
+        &PropConfig { cases: 20, min_size: 3, max_size: 16, base_seed: 0x71 },
+        |seed, size, rng| {
+            let s = random_structured_cov(size, rng);
+            // λ chosen inside the observed |S_ij| spectrum so the graph
+            // is neither complete nor empty most of the time.
+            let max_off = s.max_abs_offdiag();
+            let lambda = (0.2 + 0.6 * rng.uniform()) * max_off.max(1e-6);
+            let sol = match glasso::solve(&s, lambda, &tight_opts(), None) {
+                Ok(sol) => sol,
+                Err(e) => return CaseResult::Fail(format!("solver error: {e}")),
+            };
+            if !sol.converged {
+                return CaseResult::Fail("did not converge".into());
+            }
+            let screen = threshold_partition(&s, lambda);
+            let conc = concentration_partition(&sol.theta, 1e-7);
+            CaseResult::from_bool(
+                conc.equals(&screen),
+                &format!(
+                    "seed={seed}: screen has {} comps, concentration {} (λ={lambda:.4})",
+                    screen.n_components(),
+                    conc.n_components()
+                ),
+            )
+        },
+    );
+}
+
+#[test]
+fn theorem2_nesting_along_path() {
+    check_property(
+        "theorem2: partitions nest with decreasing lambda",
+        &PropConfig { cases: 15, min_size: 4, max_size: 18, base_seed: 0x7E0 },
+        |seed, size, rng| {
+            let s = random_structured_cov(size, rng);
+            let max_off = s.max_abs_offdiag().max(1e-6);
+            let mut lambdas: Vec<f64> =
+                (0..5).map(|_| rng.uniform_range(0.05, 1.0) * max_off).collect();
+            lambdas.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            lambdas.dedup();
+            let mut prev: Option<Partition> = None;
+            for &lam in &lambdas {
+                let part = threshold_partition(&s, lam);
+                if let Some(prev) = &prev {
+                    if !prev.is_refinement_of(&part) {
+                        return CaseResult::Fail(format!(
+                            "seed={seed}: partition at larger λ not a refinement"
+                        ));
+                    }
+                }
+                prev = Some(part);
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn witten_friedman_isolated_nodes_special_case() {
+    check_property(
+        "eq (7): WF isolated set == size-1 components of both partitions",
+        &PropConfig { cases: 20, min_size: 3, max_size: 14, base_seed: 0x3F },
+        |seed, size, rng| {
+            let s = random_structured_cov(size, rng);
+            let max_off = s.max_abs_offdiag().max(1e-6);
+            let lambda = rng.uniform_range(0.3, 0.9) * max_off;
+            let wf: Vec<usize> = witten_friedman_isolated(&s, lambda);
+            let screen = threshold_partition(&s, lambda);
+            let screen_isolated: Vec<usize> = screen
+                .groups()
+                .iter()
+                .filter(|g| g.len() == 1)
+                .map(|g| g[0])
+                .collect();
+            if wf != screen_isolated {
+                return CaseResult::Fail(format!(
+                    "seed={seed}: WF {wf:?} != screen isolated {screen_isolated:?}"
+                ));
+            }
+            // and against the actual solve
+            let sol = match glasso::solve(&s, lambda, &tight_opts(), None) {
+                Ok(sol) if sol.converged => sol,
+                _ => return CaseResult::Pass, // solver edge; theorem-1 test covers it
+            };
+            let conc = concentration_partition(&sol.theta, 1e-7);
+            let conc_isolated: Vec<usize> = conc
+                .groups()
+                .iter()
+                .filter(|g| g.len() == 1)
+                .map(|g| g[0])
+                .collect();
+            CaseResult::from_bool(
+                wf == conc_isolated,
+                &format!("seed={seed}: WF {wf:?} != Θ̂ isolated {conc_isolated:?}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn screened_equals_unscreened_property() {
+    check_property(
+        "wrapper exactness: screened == unscreened solve",
+        &PropConfig { cases: 12, min_size: 4, max_size: 14, base_seed: 0x5C12EE },
+        |seed, size, rng| {
+            let s = random_structured_cov(size, rng);
+            let max_off = s.max_abs_offdiag().max(1e-6);
+            let lambda = rng.uniform_range(0.3, 0.8) * max_off;
+            let coord = Coordinator::new(
+                NativeBackend::new(covthresh::solvers::SolverKind::Glasso, tight_opts()),
+                CoordinatorConfig::default(),
+            );
+            let screened = match coord.solve_screened(&s, lambda) {
+                Ok(r) => r,
+                Err(e) => return CaseResult::Fail(format!("screened: {e}")),
+            };
+            let (unscreened, _) = match coord.solve_unscreened(&s, lambda) {
+                Ok(r) => r,
+                Err(e) => return CaseResult::Fail(format!("unscreened: {e}")),
+            };
+            let diff = screened.global.theta_dense().max_abs_diff(&unscreened.theta);
+            CaseResult::from_bool(
+                diff < 1e-4,
+                &format!("seed={seed}: screened vs unscreened diff {diff:.2e}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn kkt_certifies_all_solvers() {
+    use covthresh::solvers::SolverKind;
+    check_property(
+        "kkt: every solver's solution satisfies (11)-(12)",
+        &PropConfig { cases: 8, min_size: 3, max_size: 10, base_seed: 0x4B4B },
+        |seed, size, rng| {
+            let s = random_structured_cov(size, rng);
+            let max_off = s.max_abs_offdiag().max(1e-6);
+            let lambda = rng.uniform_range(0.2, 0.7) * max_off;
+            for (kind, opts, tol) in [
+                (SolverKind::Glasso, tight_opts(), 1e-4),
+                (
+                    SolverKind::Smacs,
+                    SolverOptions { tol: 1e-8, max_iter: 3000, ..Default::default() },
+                    5e-3,
+                ),
+                (
+                    SolverKind::Admm,
+                    SolverOptions { tol: 1e-7, max_iter: 5000, ..Default::default() },
+                    5e-3,
+                ),
+            ] {
+                let sol = match covthresh::solvers::solve(kind, &s, lambda, &opts, None) {
+                    Ok(sol) => sol,
+                    Err(e) => {
+                        return CaseResult::Fail(format!("seed={seed} {}: {e}", kind.name()))
+                    }
+                };
+                // SMACS/ADMM don't produce exact zeros: use a loose zero_tol
+                let report =
+                    covthresh::solvers::kkt::check_kkt_with_zero_tol(&s, &sol.theta, lambda, tol, 1e-4);
+                if !report.satisfied {
+                    return CaseResult::Fail(format!(
+                        "seed={seed} {}: {report:?}",
+                        kind.name()
+                    ));
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn kkt_along_solution_path_with_warm_starts() {
+    use covthresh::coordinator::path::solve_path;
+    check_property(
+        "path: every grid point is KKT-certified",
+        &PropConfig { cases: 8, min_size: 4, max_size: 12, base_seed: 0xBA7 },
+        |seed, size, rng| {
+            let s = random_structured_cov(size, rng);
+            let max_off = s.max_abs_offdiag().max(1e-6);
+            let hi = 0.9 * max_off;
+            let lo = 0.4 * max_off;
+            let grid: Vec<f64> = (0..4).map(|t| hi - (hi - lo) * t as f64 / 3.0).collect();
+            let coord = Coordinator::new(
+                NativeBackend::new(covthresh::solvers::SolverKind::Glasso, tight_opts()),
+                CoordinatorConfig::default(),
+            );
+            let path = match solve_path(&coord, &s, &grid, true) {
+                Ok(p) => p,
+                Err(e) => return CaseResult::Fail(format!("seed={seed}: {e}")),
+            };
+            for pt in &path.points {
+                let dense = pt.report.global.theta_dense();
+                let kkt = check_kkt(&s, &dense, pt.lambda, 1e-4);
+                if !kkt.satisfied {
+                    return CaseResult::Fail(format!(
+                        "seed={seed} λ={:.4}: {kkt:?}",
+                        pt.lambda
+                    ));
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
