@@ -8,25 +8,35 @@
 //!
 //! The workload: a queue of 60 graphical-lasso requests — 20 synthetic
 //! studies × a 3-point λ grid each (the shape of an exploratory
-//! regularization sweep a genomics user would run). Every response is
-//! KKT-certified online; the run reports latency percentiles, throughput,
-//! bucket-utilization, and the screened-vs-unscreened comparison on a
-//! sample, then writes `e2e_serving_report.json`.
+//! regularization sweep a genomics user would run). Each study's
+//! covariance is screened ONCE into a `ScreenIndex`; the serving loop
+//! routes every request through a `ScreenSession` (index + partition
+//! LRU), so per-request screening is two binary searches and a cache
+//! lookup — never an O(p²) rescan. Every response is KKT-certified
+//! online; the run reports latency percentiles, throughput,
+//! bucket-utilization, cache hits, and the screened-vs-unscreened
+//! comparison on a sample, then writes `e2e_serving_report.json`.
 //!
 //! Run: `make artifacts && cargo run --release --example e2e_serving`
 
-use covthresh::coordinator::{Coordinator, CoordinatorConfig};
+use covthresh::coordinator::{Coordinator, CoordinatorConfig, ScreenSession};
 use covthresh::datasets::synthetic::block_instance_sizes;
 use covthresh::runtime::XlaBackend;
+use covthresh::screen::index::ScreenIndex;
 use covthresh::solvers::kkt::check_kkt;
 use covthresh::util::json::Json;
 use covthresh::util::rng::Xoshiro256;
 use covthresh::util::timer::{fmt_secs, Stopwatch};
 use covthresh::util::{mean, quantile};
 
+struct Study {
+    s: covthresh::linalg::Mat,
+    index: ScreenIndex,
+}
+
 struct Request {
     id: usize,
-    s: covthresh::linalg::Mat,
+    study: usize,
     lambda: f64,
 }
 
@@ -44,22 +54,35 @@ fn main() -> anyhow::Result<()> {
         fmt_secs(sw.elapsed_secs())
     );
 
-    // ---- build the request queue ---------------------------------------
+    // ---- ingest studies: screen each covariance ONCE into an index ------
     let mut rng = Xoshiro256::seed_from_u64(2026);
+    let ingest_sw = Stopwatch::start();
+    let studies: Vec<Study> = (0..20)
+        .map(|study| {
+            // blocks sized within the largest bucket (128): realistic post-
+            // screen component spectra
+            let n_blocks = 2 + rng.uniform_usize(4);
+            let sizes: Vec<usize> = (0..n_blocks).map(|_| 2 + rng.uniform_usize(30)).collect();
+            let inst = block_instance_sizes(&sizes, 3000 + study as u64);
+            let index = ScreenIndex::from_dense(&inst.s);
+            Study { s: inst.s, index }
+        })
+        .collect();
+    let ingest_secs = ingest_sw.elapsed_secs();
+    let sessions: Vec<ScreenSession<'_>> =
+        studies.iter().map(|st| ScreenSession::new(&st.index)).collect();
+    println!("ingested 20 studies (screen indexes built) in {}", fmt_secs(ingest_secs));
+
+    // ---- build the request queue ---------------------------------------
     let mut queue: Vec<Request> = Vec::new();
     let mut id = 0;
-    for study in 0..20 {
-        // blocks sized within the largest bucket (128): realistic post-
-        // screen component spectra
-        let n_blocks = 2 + rng.uniform_usize(4);
-        let sizes: Vec<usize> = (0..n_blocks).map(|_| 2 + rng.uniform_usize(30)).collect();
-        let inst = block_instance_sizes(&sizes, 3000 + study as u64);
+    for study in 0..studies.len() {
         for lam in [0.95, 0.9, 0.85] {
-            queue.push(Request { id, s: inst.s.clone(), lambda: lam });
+            queue.push(Request { id, study, lambda: lam });
             id += 1;
         }
     }
-    println!("queue: {} requests across 20 studies", queue.len());
+    println!("queue: {} requests across {} studies", queue.len(), studies.len());
 
     // ---- serve -----------------------------------------------------------
     let coord = Coordinator::new(
@@ -70,14 +93,15 @@ fn main() -> anyhow::Result<()> {
     let mut certified = 0usize;
     let total_sw = Stopwatch::start();
     for req in &queue {
+        let study = &studies[req.study];
         let sw = Stopwatch::start();
-        let report = coord.solve_screened(&req.s, req.lambda)?;
+        let report = coord.solve_screened_indexed(&study.s, &sessions[req.study], req.lambda)?;
         let latency = sw.elapsed_secs();
         latencies.push(latency);
 
         // online verification (Theorem 1 + KKT) on every response
         let dense = report.global.theta_dense();
-        let kkt = check_kkt(&req.s, &dense, req.lambda, 5e-3);
+        let kkt = check_kkt(&study.s, &dense, req.lambda, 5e-3);
         assert!(kkt.satisfied, "request {}: KKT violated: {kkt:?}", req.id);
         let conc = report.global.concentration_partition(1e-6);
         assert!(
@@ -88,6 +112,8 @@ fn main() -> anyhow::Result<()> {
         certified += 1;
     }
     let wall = total_sw.elapsed_secs();
+    let cache_hits: usize = sessions.iter().map(|s| s.cache_hits()).sum();
+    let cache_misses: usize = sessions.iter().map(|s| s.cache_misses()).sum();
 
     // ---- report ----------------------------------------------------------
     let p50 = quantile(&latencies, 0.5);
@@ -103,11 +129,16 @@ fn main() -> anyhow::Result<()> {
         queue.len() as f64 / wall
     );
     println!("bucket executions: {:?}", coord.backend.execution_counts());
+    println!(
+        "partition cache: {cache_hits} hits / {cache_misses} misses across {} sessions",
+        sessions.len()
+    );
 
     // screened vs unscreened on one sampled request (the paper's headline)
     let sample = &queue[0];
-    let screened = coord.solve_screened(&sample.s, sample.lambda)?;
-    let (un, un_secs) = coord.solve_unscreened(&sample.s, sample.lambda)?;
+    let sample_s = &studies[sample.study].s;
+    let screened = coord.solve_screened(sample_s, sample.lambda)?;
+    let (un, un_secs) = coord.solve_unscreened(sample_s, sample.lambda)?;
     let diff = screened.global.theta_dense().max_abs_diff(&un.theta);
     println!(
         "\nsample request: screened={} unscreened={} (speedup {:.1}x, max|Δθ|={diff:.2e})",
@@ -119,6 +150,9 @@ fn main() -> anyhow::Result<()> {
     let mut out = Json::obj();
     out.set("requests", queue.len().into())
         .set("certified", certified.into())
+        .set("screen_index_ingest_s", ingest_secs.into())
+        .set("partition_cache_hits", cache_hits.into())
+        .set("partition_cache_misses", cache_misses.into())
         .set("wall_secs", wall.into())
         .set("throughput_rps", (queue.len() as f64 / wall).into())
         .set("latency_mean_s", mean(&latencies).into())

@@ -13,8 +13,7 @@
 use covthresh::datasets::covariance::standardize_columns;
 use covthresh::datasets::microarray;
 use covthresh::report::render_figure1;
-use covthresh::screen::profile::{lambda_for_capacity, profile_grid};
-use covthresh::screen::stream::edges_above_from_standardized;
+use covthresh::screen::index::ScreenIndex;
 use covthresh::util::timer::{fmt_secs, Stopwatch};
 
 fn main() -> anyhow::Result<()> {
@@ -42,32 +41,32 @@ fn main() -> anyhow::Result<()> {
         standardize_columns(&mut z);
         println!("data generated in {} ({n_imputed} imputed)", fmt_secs(sw.elapsed_secs()));
 
-        // Screen straight from the data matrix. The profile floor is the
-        // λ at which the largest component reaches the cap — found on a
-        // coarse pre-pass, then edges above a slightly lower floor are kept.
+        // Screen straight from the data matrix into a build-once index:
+        // the parallel streamed Gram scan, sort, and checkpoint sweep all
+        // happen here; every query below is a cheap index read.
         let sw = Stopwatch::start();
         let probe_floor = 0.3; // comfortably below any cap-λ for these studies
-        let edges = edges_above_from_standardized(&z, probe_floor, 768);
+        let index = ScreenIndex::from_standardized(&z, probe_floor, 768);
         let screen_secs = sw.elapsed_secs();
         println!(
-            "streamed screen: {} edges with |corr| > {probe_floor} in {}",
-            edges.len(),
+            "streamed screen+index: {} edges with |corr| > {probe_floor} in {}",
+            index.n_edges(),
             fmt_secs(screen_secs)
         );
 
         let sw = Stopwatch::start();
-        let lam_cap = lambda_for_capacity(cfg.p, edges.clone(), cap);
+        let lam_cap = index.lambda_for_capacity(cap);
         println!(
             "λ'_min (max component ≤ {cap}) = {:.4} found in {}",
             lam_cap,
             fmt_secs(sw.elapsed_secs())
         );
         let floor = lam_cap.max(probe_floor);
-        let top = edges.iter().map(|e| e.w).fold(0.0f64, f64::max);
+        let top = index.max_magnitude();
         let grid = covthresh::screen::grid::uniform_grid_desc(top, floor, 25);
 
         let sw = Stopwatch::start();
-        let profile = profile_grid(cfg.p, edges, &grid);
+        let profile = index.profile(&grid);
         println!("profile over {} λ values in {}", grid.len(), fmt_secs(sw.elapsed_secs()));
         print!("{}", render_figure1(&profile, cap));
 

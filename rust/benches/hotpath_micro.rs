@@ -7,11 +7,14 @@
 //! Run: `cargo bench --bench hotpath_micro` (BENCH_FILTER=<substr> to pick)
 
 use covthresh::bench_harness::BenchRunner;
-use covthresh::coordinator::{partition_with, Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::coordinator::{
+    partition_with, Coordinator, CoordinatorConfig, NativeBackend, ScreenSession,
+};
 use covthresh::datasets::microarray;
 use covthresh::datasets::synthetic::block_instance;
 use covthresh::graph::{components_bfs, components_union_find, CsrGraph};
 use covthresh::linalg::{gemm, syrk_t, Cholesky, Mat};
+use covthresh::screen::index::ScreenIndex;
 use covthresh::screen::profile::{profile_grid, weighted_edges};
 use covthresh::screen::threshold_edges;
 use covthresh::solvers::lasso_cd::solve_lasso_cd;
@@ -41,6 +44,20 @@ fn main() -> anyhow::Result<()> {
         let grid: Vec<f64> = (0..25).map(|t| 0.9 - 0.55 * t as f64 / 24.0).collect();
         profile_grid(p, wedges.clone(), &grid)
     });
+
+    // --- build-once screening index vs per-λ rescans
+    r.run("screen_index/build p=2000 floor=0.3", 3.0, || {
+        ScreenIndex::from_dense_above(&study.s, 0.3)
+    });
+    let index = ScreenIndex::from_dense_above(&study.s, 0.3);
+    r.run("screen_index/partition_at (random access)", 2.0, || index.partition_at(lambda));
+    r.run("screen_index/edge_count", 2.0, || index.edge_count(lambda));
+    r.run("screen_index/profile 25λ", 2.0, || {
+        let grid: Vec<f64> = (0..25).map(|t| 0.9 - 0.55 * t as f64 / 24.0).collect();
+        index.profile(&grid)
+    });
+    let session = ScreenSession::new(&index);
+    r.run("screen_index/session_partition (LRU hit)", 2.0, || session.partition_at(lambda));
 
     // --- block extraction
     let partition = components_union_find(p, &edges);

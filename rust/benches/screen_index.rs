@@ -1,0 +1,108 @@
+//! ScreenIndex micro-bench — the perf trajectory anchor for the screening
+//! subsystem.
+//!
+//! Measures, on one random p×p covariance:
+//!   1. index build (one parallel O(p²) scan + sort + checkpoint sweep);
+//!   2. a 100-point λ grid screened entirely from the index — partitions
+//!      at every grid point with ZERO per-λ dense rescans;
+//!   3. the same grid via the naive oracle (`threshold_partition`), which
+//!      rescans S at O(p²) per λ — the pre-index behavior;
+//!   4. single random-access queries (partition / edge count).
+//!
+//! Output: human summary on stdout plus `bench_out/BENCH_screen.json`.
+//!
+//! Run: `cargo bench --bench screen_index` (SCREEN_P=<p> to resize).
+
+use covthresh::bench_harness::{bench_auto, fmt_time, BenchStats};
+use covthresh::linalg::Mat;
+use covthresh::screen::grid::uniform_grid_desc;
+use covthresh::screen::index::ScreenIndex;
+use covthresh::screen::threshold_partition;
+use covthresh::util::json::Json;
+use covthresh::util::rng::Xoshiro256;
+
+fn random_cov(p: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let x = Mat::from_fn(2 * p, p, |_, _| rng.gaussian());
+    let mut s = covthresh::linalg::syrk_t(&x);
+    s.scale(1.0 / (2 * p) as f64);
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let p: usize = std::env::var("SCREEN_P").ok().and_then(|v| v.parse().ok()).unwrap_or(1200);
+    let s = random_cov(p, 7);
+    let max_off = s.max_abs_offdiag();
+    // 100 λ values spanning the interesting regime (sparse → dense graph).
+    let grid = uniform_grid_desc(0.9 * max_off, 0.05 * max_off, 100);
+
+    println!("== screen_index bench: p={p}, 100-λ grid ==");
+
+    // 1. build once.
+    let build = bench_auto("screen_index/build", 3.0, || ScreenIndex::from_dense(&s));
+    println!("{}", build.summary());
+    let index = ScreenIndex::from_dense(&s);
+    println!(
+        "  (index: {} edges, {} tie groups, {} checkpoints, K={})",
+        index.n_edges(),
+        index.distinct_magnitudes().len(),
+        index.n_checkpoints(),
+        index.checkpoint_every()
+    );
+
+    // 2. full grid from the index — random-access partitions, no rescans.
+    let grid_index = bench_auto("screen_index/grid100_partitions", 3.0, || {
+        grid.iter().map(|&lam| index.partition_at(lam).n_components()).sum::<usize>()
+    });
+    println!("{}", grid_index.summary());
+
+    // 3. the naive oracle: a fresh O(p²) rescan of S at every grid point.
+    let grid_naive = bench_auto("naive/grid100_partitions", 3.0, || {
+        grid.iter().map(|&lam| threshold_partition(&s, lam).n_components()).sum::<usize>()
+    });
+    println!("{}", grid_naive.summary());
+
+    // 4. single random-access queries.
+    let mid = 0.4 * max_off;
+    let q_partition = bench_auto("screen_index/partition_at", 2.0, || index.partition_at(mid));
+    println!("{}", q_partition.summary());
+    let q_edges = bench_auto("screen_index/edge_count", 2.0, || index.edge_count(mid));
+    println!("{}", q_edges.summary());
+    let q_naive = bench_auto("naive/threshold_partition", 2.0, || threshold_partition(&s, mid));
+    println!("{}", q_naive.summary());
+
+    let speedup = grid_naive.median_s / grid_index.median_s.max(1e-12);
+    println!(
+        "\n100-λ grid: index {} vs naive {} — {speedup:.1}x; \
+         build amortizes after {:.1} grid points",
+        fmt_time(grid_index.median_s),
+        fmt_time(grid_naive.median_s),
+        build.median_s / (grid_naive.median_s / 100.0).max(1e-12)
+    );
+
+    let mut out = Json::obj();
+    out.set("p", p.into())
+        .set("grid_points", grid.len().into())
+        .set("n_edges", index.n_edges().into())
+        .set("n_tie_groups", index.distinct_magnitudes().len().into())
+        .set("n_checkpoints", index.n_checkpoints().into())
+        .set("checkpoint_every", index.checkpoint_every().into())
+        // The index serves every per-λ query from its own structures; the
+        // only dense pass over S is the single build-time scan.
+        .set("dense_scans_at_build", 1usize.into())
+        .set("dense_rescans_per_query", 0usize.into())
+        .set("grid100_speedup_vs_naive", speedup.into())
+        .set(
+            "benches",
+            Json::Arr(
+                [&build, &grid_index, &grid_naive, &q_partition, &q_edges, &q_naive]
+                    .iter()
+                    .map(|b: &&BenchStats| b.to_json())
+                    .collect(),
+            ),
+        );
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/BENCH_screen.json", out.to_string())?;
+    println!("wrote bench_out/BENCH_screen.json");
+    Ok(())
+}

@@ -11,8 +11,8 @@
 use covthresh::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
 use covthresh::datasets::synthetic::block_instance;
 use covthresh::report::Table;
-use covthresh::screen::grid::table1_lambdas;
-use covthresh::screen::profile::weighted_edges;
+use covthresh::screen::grid::table1_lambdas_indexed;
+use covthresh::screen::index::ScreenIndex;
 use covthresh::solvers::{SolverKind, SolverOptions};
 use covthresh::util::timer::fmt_secs;
 
@@ -41,11 +41,14 @@ fn main() -> anyhow::Result<()> {
     for &(k, p1) in configs {
         let inst = block_instance(k, p1, 1000 + (k * p1) as u64);
         let p = k * p1;
-        let edges = weighted_edges(&inst.s, 0.0);
-        let (lam_i, lam_ii) = table1_lambdas(p, edges, k).expect("exact-K interval exists");
+        // Build the screening index once per instance; both λ policies and
+        // the screened solves below read from it.
+        let index = ScreenIndex::from_dense(&inst.s);
+        let (lam_i, lam_ii) = table1_lambdas_indexed(&index, k).expect("exact-K interval exists");
         // λ_II is the open right end of the exact-K interval; step just
         // inside it so the thresholded graph has exactly K components.
         let lam_ii = lam_ii * (1.0 - 1e-9);
+        let session = covthresh::coordinator::ScreenSession::new(&index);
 
         for (label, lambda) in [("l_I", lam_i), ("l_II", lam_ii)] {
             for kind in [SolverKind::Glasso, SolverKind::Smacs] {
@@ -53,7 +56,7 @@ fn main() -> anyhow::Result<()> {
                     NativeBackend::new(kind, opts.clone()),
                     CoordinatorConfig::default(),
                 );
-                let report = coord.solve_screened(&inst.s, lambda)?;
+                let report = coord.solve_screened_indexed(&inst.s, &session, lambda)?;
                 assert_eq!(
                     report.global.partition.n_components(),
                     k,

@@ -22,6 +22,21 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// JSON object for machine-readable bench artifacts
+    /// (e.g. `bench_out/BENCH_screen.json`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("name", self.name.as_str().into())
+            .set("iters", self.iters.into())
+            .set("mean_s", self.mean_s.into())
+            .set("median_s", self.median_s.into())
+            .set("stddev_s", self.stddev_s.into())
+            .set("p95_s", self.p95_s.into())
+            .set("min_s", self.min_s.into())
+            .set("max_s", self.max_s.into());
+        o
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "{:<44} {:>5} iters  mean {:>12}  median {:>12}  p95 {:>12}  σ {:>10}",
@@ -167,6 +182,16 @@ mod tests {
         assert!(fmt_time(5e-6).ends_with("µs"));
         assert!(fmt_time(5e-3).ends_with("ms"));
         assert!(fmt_time(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn stats_serialize_to_json() {
+        let stats = bench("json", 0, 3, || 1 + 1);
+        let j = stats.to_json();
+        let text = j.to_string();
+        assert!(text.contains("\"name\":\"json\""), "{text}");
+        assert!(text.contains("\"iters\":3"), "{text}");
+        assert!(j.get("mean_s").is_some());
     }
 
     #[test]

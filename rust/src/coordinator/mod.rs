@@ -13,6 +13,13 @@
 //!
 //! `solve_unscreened` runs the same backend on the whole p×p problem — the
 //! paper's "without screening" baseline column in Tables 1–2.
+//!
+//! **Serving (multi-λ) path**: `solve_screened` re-screens S on every
+//! call. When many λ land on the same S — the production scenario — build
+//! a `ScreenIndex` once, wrap it in a [`ScreenSession`] (index + a small
+//! partition LRU keyed by the tie group each λ falls into), and call
+//! `solve_screened_indexed`: the screen phase becomes two binary searches
+//! plus, on a cache miss, a checkpoint replay. Zero O(p²) rescans per λ.
 
 pub mod assemble;
 pub mod partitioner;
@@ -22,14 +29,21 @@ pub mod solver_backend;
 pub mod worker;
 
 pub use assemble::{GlobalSolution, SolvedBlock};
-pub use partitioner::{partition_problem, partition_with, Partitioned, SubProblem};
+pub use partitioner::{
+    partition_indexed, partition_problem, partition_with, partition_with_ref, Partitioned,
+    SubProblem,
+};
 pub use scheduler::{schedule_lpt, CostModel, Schedule};
 pub use solver_backend::{BlockSolver, NativeBackend};
 
+use crate::graph::Partition;
 use crate::linalg::Mat;
+use crate::screen::index::ScreenIndex;
 use crate::solvers::WarmStart;
 use crate::util::timer::{PhaseTimings, Stopwatch};
-use anyhow::Result;
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Coordinator configuration (the simulated distributed fabric).
 #[derive(Clone, Debug)]
@@ -77,6 +91,80 @@ impl ScreenReport {
     }
 }
 
+/// One covariance source prepared for many-λ serving: a screening index
+/// plus a small LRU of materialized partitions, keyed by the tie group a λ
+/// falls into (all λ between two adjacent |S_ij| magnitudes share one
+/// partition, so the key collapses an interval of λ to one entry).
+///
+/// Shared-state is interior (`Mutex`/atomics), so one session can serve
+/// concurrent requests behind `&self`.
+pub struct ScreenSession<'a> {
+    index: &'a ScreenIndex,
+    /// MRU-first list of (tie group, partition); tiny, so linear scan wins.
+    cache: Mutex<Vec<(usize, Arc<Partition>)>>,
+    capacity: usize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl<'a> ScreenSession<'a> {
+    /// Default cache: 16 tie groups — covers a typical exploratory λ grid
+    /// re-visited out of order.
+    pub fn new(index: &'a ScreenIndex) -> ScreenSession<'a> {
+        ScreenSession::with_cache_capacity(index, 16)
+    }
+
+    pub fn with_cache_capacity(index: &'a ScreenIndex, capacity: usize) -> ScreenSession<'a> {
+        ScreenSession {
+            index,
+            cache: Mutex::new(Vec::new()),
+            capacity: capacity.max(1),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn index(&self) -> &'a ScreenIndex {
+        self.index
+    }
+
+    /// Partition at λ, served from the LRU when this λ's tie group was
+    /// seen before; otherwise a checkpoint replay on the index.
+    pub fn partition_at(&self, lambda: f64) -> Arc<Partition> {
+        let key = self.index.tie_group_of(lambda);
+        {
+            let mut cache = self.cache.lock().unwrap();
+            if let Some(pos) = cache.iter().position(|(k, _)| *k == key) {
+                let entry = cache.remove(pos);
+                let part = entry.1.clone();
+                cache.insert(0, entry);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return part;
+            }
+        }
+        // Replay outside the lock: misses on distinct tie groups proceed
+        // in parallel (duplicated work on a race, never a wrong answer).
+        let part = Arc::new(self.index.partition_at(lambda));
+        let mut cache = self.cache.lock().unwrap();
+        if !cache.iter().any(|(k, _)| *k == key) {
+            cache.insert(0, (key, part.clone()));
+            if cache.len() > self.capacity {
+                cache.pop();
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        part
+    }
+
+    pub fn cache_hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
 /// The coordinator: a backend plus fabric configuration.
 pub struct Coordinator<B: BlockSolver> {
     pub backend: B,
@@ -115,6 +203,56 @@ impl<B: BlockSolver> Coordinator<B> {
         let g = crate::graph::CsrGraph::from_edges(s.rows(), &edges);
         let partition = crate::graph::components_bfs(&g);
         let parts = partition_with(s, partition);
+        timings.add("partition", sw.elapsed_secs());
+
+        self.finish_solve(s, lambda, parts, warm, timings, n_edges)
+    }
+
+    /// Screened solve routed through a [`ScreenSession`] — the serving
+    /// path. The screen phase is two binary searches on the index (edge
+    /// count + tie group) and a cache lookup / checkpoint replay for the
+    /// partition; S is never rescanned.
+    pub fn solve_screened_indexed(
+        &self,
+        s: &Mat,
+        session: &ScreenSession<'_>,
+        lambda: f64,
+    ) -> Result<ScreenReport> {
+        self.solve_screened_indexed_warm(s, session, lambda, &[])
+    }
+
+    /// [`Coordinator::solve_screened_indexed`] with warm starts.
+    pub fn solve_screened_indexed_warm(
+        &self,
+        s: &Mat,
+        session: &ScreenSession<'_>,
+        lambda: f64,
+        warm: &[Option<WarmStart>],
+    ) -> Result<ScreenReport> {
+        ensure!(
+            s.rows() == session.index().p(),
+            "session index built for p={}, request has p={}",
+            session.index().p(),
+            s.rows()
+        );
+        // A request below the index floor must be a clean serving error,
+        // not the index's internal panic.
+        ensure!(
+            lambda >= session.index().floor(),
+            "request λ={lambda} below the session index floor {}",
+            session.index().floor()
+        );
+        let mut timings = PhaseTimings::new();
+
+        // 1. screen: O(log) reads on the index.
+        let sw = Stopwatch::start();
+        let n_edges = session.index().edge_count(lambda);
+        timings.add("screen", sw.elapsed_secs());
+
+        // 2. partition: LRU hit or checkpoint replay + block extraction.
+        let sw = Stopwatch::start();
+        let partition = session.partition_at(lambda);
+        let parts = partition_with_ref(s, &partition);
         timings.add("partition", sw.elapsed_secs());
 
         self.finish_solve(s, lambda, parts, warm, timings, n_edges)
@@ -263,6 +401,54 @@ mod tests {
         }
         assert!(report.partition_secs() >= 0.0);
         assert!(report.n_edges > 0);
+    }
+
+    #[test]
+    fn indexed_solve_matches_direct() {
+        let inst = block_instance(3, 8, 42);
+        let index = ScreenIndex::from_dense(&inst.s);
+        let session = ScreenSession::new(&index);
+        let coord = Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default());
+        for lambda in [1.1, 0.9, 0.85, 0.9] {
+            let a = coord.solve_screened_indexed(&inst.s, &session, lambda).unwrap();
+            let b = coord.solve_screened(&inst.s, lambda).unwrap();
+            assert!(a.global.partition.equals(&b.global.partition), "λ={lambda}");
+            assert_eq!(a.n_edges, b.n_edges, "λ={lambda}");
+            let diff = a.global.theta_dense().max_abs_diff(&b.global.theta_dense());
+            assert!(diff < 1e-12, "λ={lambda} diff={diff}");
+        }
+        // λ=0.9 was requested twice: second hit came from the LRU.
+        assert!(session.cache_hits() >= 1);
+        assert_eq!(session.cache_hits() + session.cache_misses(), 4);
+    }
+
+    #[test]
+    fn session_cache_keys_by_tie_group() {
+        let inst = block_instance(2, 5, 3);
+        let index = ScreenIndex::from_dense(&inst.s);
+        let session = ScreenSession::with_cache_capacity(&index, 4);
+        // Two λ in the same inter-magnitude interval share a tie group:
+        // the second must be a hit even though the λ differ.
+        let mags = index.distinct_magnitudes();
+        assert!(mags.len() >= 2);
+        let (a, b) = (mags[0], mags[1]);
+        let lam1 = a - (a - b) * 0.25;
+        let lam2 = a - (a - b) * 0.75;
+        let p1 = session.partition_at(lam1);
+        let p2 = session.partition_at(lam2);
+        assert!(p1.equals(&p2));
+        assert_eq!(session.cache_hits(), 1);
+        assert_eq!(session.cache_misses(), 1);
+    }
+
+    #[test]
+    fn session_rejects_mismatched_request() {
+        let inst = block_instance(2, 4, 5);
+        let index = ScreenIndex::from_dense(&inst.s);
+        let session = ScreenSession::new(&index);
+        let coord = Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default());
+        let other = Mat::eye(3);
+        assert!(coord.solve_screened_indexed(&other, &session, 0.5).is_err());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use crate::graph::Partition;
 use crate::linalg::Mat;
+use crate::screen::index::ScreenIndex;
 use crate::screen::threshold_partition;
 
 /// One independent sub-problem: global indices + the S block on them.
@@ -62,14 +63,39 @@ impl Partitioned {
 }
 
 /// Threshold S at λ and slice it into sub-problems.
+///
+/// Oracle path: re-walks S at O(p²). Serving code should hold a
+/// `ScreenIndex` and call [`partition_indexed`] instead.
 pub fn partition_problem(s: &Mat, lambda: f64) -> Partitioned {
     let partition = threshold_partition(s, lambda);
     partition_with(s, partition)
 }
 
+/// Slice S at λ using a prebuilt screening index: the partition comes from
+/// a checkpoint replay, never an O(p²) rescan of S.
+pub fn partition_indexed(s: &Mat, index: &ScreenIndex, lambda: f64) -> Partitioned {
+    assert_eq!(s.rows(), index.p(), "index built for a different S");
+    partition_with(s, index.partition_at(lambda))
+}
+
 /// Slice S by an externally computed partition (e.g. from a `LambdaSweep`
 /// mid-path, or from the streaming screen).
 pub fn partition_with(s: &Mat, partition: Partition) -> Partitioned {
+    let (subproblems, isolated) = split_blocks(s, &partition);
+    Partitioned { partition, subproblems, isolated }
+}
+
+/// [`partition_with`] from a borrowed partition (e.g. one held by the
+/// coordinator's partition cache); the partition is cloned into the
+/// result.
+pub fn partition_with_ref(s: &Mat, partition: &Partition) -> Partitioned {
+    let (subproblems, isolated) = split_blocks(s, partition);
+    Partitioned { partition: partition.clone(), subproblems, isolated }
+}
+
+/// The shared block/isolated extraction behind both `partition_with`
+/// flavors.
+fn split_blocks(s: &Mat, partition: &Partition) -> (Vec<SubProblem>, Vec<(usize, f64)>) {
     let mut subproblems = Vec::new();
     let mut isolated = Vec::new();
     for (label, group) in partition.groups().iter().enumerate() {
@@ -83,7 +109,7 @@ pub fn partition_with(s: &Mat, partition: Partition) -> Partitioned {
             });
         }
     }
-    Partitioned { partition, subproblems, isolated }
+    (subproblems, isolated)
 }
 
 #[cfg(test)]
@@ -142,6 +168,24 @@ mod tests {
         assert!((coarse.modeled_speedup(3.0) - 125.0 / 35.0).abs() < 1e-12);
         // isolated nodes cost nothing in the model: 5³/2³
         assert!((fine.modeled_speedup(3.0) - 125.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn indexed_partition_matches_rescan() {
+        let s = demo_s();
+        let index = ScreenIndex::from_dense(&s);
+        for lam in [0.8, 0.4, 0.1] {
+            let a = partition_problem(&s, lam);
+            let b = partition_indexed(&s, &index, lam);
+            assert!(a.partition.equals(&b.partition), "λ={lam}");
+            assert_eq!(a.subproblems.len(), b.subproblems.len());
+            for (x, y) in a.subproblems.iter().zip(&b.subproblems) {
+                assert_eq!(x.component, y.component);
+                assert_eq!(x.indices, y.indices);
+                assert!(x.s_block == y.s_block);
+            }
+            assert_eq!(a.isolated, b.isolated);
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@
 use super::solver_backend::BlockSolver;
 use super::{partition_with, Coordinator, ScreenReport};
 use crate::linalg::Mat;
-use crate::screen::profile::{weighted_edges, LambdaSweep};
+use crate::screen::index::ScreenIndex;
 use crate::solvers::WarmStart;
 use crate::util::timer::Stopwatch;
 use anyhow::{ensure, Result};
@@ -57,15 +57,37 @@ pub fn solve_path<B: BlockSolver>(
     warm_start: bool,
 ) -> Result<PathResult> {
     ensure!(!lambdas.is_empty(), "empty lambda grid");
+    // One-time screen at the path floor (parallel edge extraction + sort).
+    let floor = *lambdas.last().unwrap();
+    let index = ScreenIndex::from_dense_above(s, floor);
+    solve_path_with_index(coord, s, &index, lambdas, warm_start)
+}
+
+/// [`solve_path`] over a prebuilt index — the serving path when the same S
+/// takes several grids: the O(p²) screen and the edge sort are paid once
+/// at index build, never per path.
+pub fn solve_path_with_index<B: BlockSolver>(
+    coord: &Coordinator<B>,
+    s: &Mat,
+    index: &ScreenIndex,
+    lambdas: &[f64],
+    warm_start: bool,
+) -> Result<PathResult> {
+    ensure!(!lambdas.is_empty(), "empty lambda grid");
     ensure!(
         lambdas.windows(2).all(|w| w[0] > w[1]),
         "lambda grid must be strictly descending"
     );
     let p = s.rows();
+    ensure!(index.p() == p, "index built for p={}, S has p={p}", index.p());
+    ensure!(
+        *lambdas.last().unwrap() >= index.floor(),
+        "grid floor {} below index floor {}",
+        lambdas.last().unwrap(),
+        index.floor()
+    );
 
-    // One-time edge extraction at the path floor.
-    let floor = *lambdas.last().unwrap();
-    let mut sweep = LambdaSweep::new(p, weighted_edges(s, floor));
+    let mut sweep = index.sweep();
 
     let mut points: Vec<PathPoint> = Vec::with_capacity(lambdas.len());
     let mut prev: Option<ScreenReport> = None;
@@ -232,6 +254,26 @@ mod tests {
                 .partition
                 .is_refinement_of(&w[1].report.global.partition));
         }
+    }
+
+    #[test]
+    fn indexed_path_equals_rebuilt_path() {
+        let inst = block_instance(3, 5, 12);
+        let c = coord();
+        let grid = [1.0, 0.9, 0.8];
+        let index = ScreenIndex::from_dense_above(&inst.s, 0.8);
+        let a = solve_path(&c, &inst.s, &grid, true).unwrap();
+        let b = solve_path_with_index(&c, &inst.s, &index, &grid, true).unwrap();
+        for (x, y) in a.points.iter().zip(b.points.iter()) {
+            assert!(x.report.global.partition.equals(&y.report.global.partition));
+            let diff = x.report.global.theta_dense().max_abs_diff(&y.report.global.theta_dense());
+            assert!(diff < 1e-12, "λ={} diff={diff}", x.lambda);
+        }
+        // Reusing the same index for a second (sub-)grid is fine.
+        let again = solve_path_with_index(&c, &inst.s, &index, &[0.95, 0.85], true).unwrap();
+        assert_eq!(again.points.len(), 2);
+        // A grid dipping below the index floor is rejected.
+        assert!(solve_path_with_index(&c, &inst.s, &index, &[0.9, 0.5], true).is_err());
     }
 
     #[test]

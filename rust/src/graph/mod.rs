@@ -10,4 +10,4 @@ pub mod union_find;
 pub use adjacency::CsrGraph;
 pub use components::{components_bfs, components_dfs, components_union_find};
 pub use partition::Partition;
-pub use union_find::UnionFind;
+pub use union_find::{UfSnapshot, UnionFind};

@@ -14,6 +14,35 @@ pub struct UnionFind {
     max_size: u32,
 }
 
+/// A frozen copy of a `UnionFind` state — O(p) to take, O(p) to restore.
+///
+/// `ScreenIndex` checkpoints one of these every K edge activations along
+/// the descending-λ sweep, so a random-access `partition_at(λ)` replays at
+/// most K unions from the nearest snapshot instead of resweeping the whole
+/// edge list.
+#[derive(Clone, Debug)]
+pub struct UfSnapshot {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+    n_components: usize,
+    max_size: u32,
+}
+
+impl UfSnapshot {
+    /// Vertices covered by the snapshot.
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    pub fn n_components(&self) -> usize {
+        self.n_components
+    }
+}
+
 impl UnionFind {
     pub fn new(n: usize) -> UnionFind {
         assert!(n <= u32::MAX as usize);
@@ -96,6 +125,35 @@ impl UnionFind {
         label
     }
 
+    /// Freeze the current state into a compact snapshot.
+    pub fn snapshot(&self) -> UfSnapshot {
+        UfSnapshot {
+            parent: self.parent.clone(),
+            size: self.size.clone(),
+            n_components: self.n_components,
+            max_size: self.max_size,
+        }
+    }
+
+    /// Rewind this forest to a previously taken snapshot (same n).
+    pub fn restore(&mut self, snap: &UfSnapshot) {
+        assert_eq!(self.parent.len(), snap.parent.len(), "snapshot size mismatch");
+        self.parent.clone_from(&snap.parent);
+        self.size.clone_from(&snap.size);
+        self.n_components = snap.n_components;
+        self.max_size = snap.max_size;
+    }
+
+    /// Materialize a fresh forest from a snapshot.
+    pub fn from_snapshot(snap: &UfSnapshot) -> UnionFind {
+        UnionFind {
+            parent: snap.parent.clone(),
+            size: snap.size.clone(),
+            n_components: snap.n_components,
+            max_size: snap.max_size,
+        }
+    }
+
     /// Members of each component, ordered by canonical label.
     pub fn groups(&mut self) -> Vec<Vec<usize>> {
         let labels = self.labels();
@@ -174,6 +232,44 @@ mod tests {
         assert_eq!(uf.max_component_size(), 0);
         assert!(uf.groups().is_empty());
         assert!(uf.is_empty());
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut uf = UnionFind::new(8);
+        uf.union(0, 1);
+        uf.union(2, 3);
+        let snap = uf.snapshot();
+        assert_eq!(snap.len(), 8);
+        assert_eq!(snap.n_components(), 6);
+
+        uf.union(0, 2);
+        uf.union(4, 5);
+        assert_eq!(uf.n_components(), 4);
+        assert_eq!(uf.max_component_size(), 4);
+
+        // A fresh forest from the snapshot sees the pre-divergence state.
+        let mut fresh = UnionFind::from_snapshot(&snap);
+        assert_eq!(fresh.n_components(), 6);
+        assert!(fresh.connected(0, 1));
+        assert!(!fresh.connected(0, 2));
+        assert_eq!(fresh.max_component_size(), 2);
+
+        // Restoring rewinds in place; both forests then evolve identically.
+        uf.restore(&snap);
+        assert_eq!(uf.labels(), fresh.labels());
+        uf.union(6, 7);
+        fresh.union(6, 7);
+        assert_eq!(uf.n_components(), 5);
+        assert_eq!(uf.labels(), fresh.labels());
+    }
+
+    #[test]
+    fn snapshot_of_empty_forest() {
+        let uf = UnionFind::new(0);
+        let snap = uf.snapshot();
+        assert!(snap.is_empty());
+        assert_eq!(UnionFind::from_snapshot(&snap).n_components(), 0);
     }
 
     #[test]

@@ -6,17 +6,33 @@
 //!
 //! The library proves out the paper's central result in systems form: the
 //! vertex-partition induced by the connected components of the thresholded
-//! sample covariance graph (`|S_ij| > λ`) equals the partition induced by
-//! the nonzero pattern of the graphical-lasso solution `Θ̂(λ)` (Theorem 1),
-//! and these partitions are nested along the λ path (Theorem 2). The
-//! `screen` module implements exact thresholding and the incremental
-//! component profile; `coordinator` turns it into a scheduling wrapper that
-//! splits one intractable glasso problem into many small independent ones;
-//! `solvers` provides the GLASSO/SMACS/ADMM sub-problem solvers; `runtime`
-//! executes AOT-compiled JAX/Pallas artifacts via PJRT on the hot path.
+//! sample covariance graph (`|S_ij| > λ`, strictly) equals the partition
+//! induced by the nonzero pattern of the graphical-lasso solution `Θ̂(λ)`
+//! (Theorem 1), and these partitions are nested along the λ path
+//! (Theorem 2).
+//!
+//! Screening is **build-once, query-many**: `screen::index::ScreenIndex`
+//! is constructed once per covariance source (dense S in parallel over
+//! row bands, or the streaming Gram path in `screen::stream`) and holds
+//! the weight-sorted edge list, per-tie-group component summaries, and
+//! checkpointed union-find snapshots. Every λ query — edge sets, counts,
+//! random-access partitions, capacity/interval searches, descending
+//! sweeps — is answered from the index without touching S again; the
+//! naive per-λ O(p²) scans survive only as property-test oracles. All
+//! edges sharing one magnitude (a tie group) activate together as λ drops
+//! below it.
+//!
+//! `coordinator` turns the screen into a scheduling wrapper that splits
+//! one intractable glasso problem into many small independent ones; its
+//! `ScreenSession` (index + tie-group-keyed partition LRU) serves repeated
+//! multi-λ traffic on one S. `solvers` provides the GLASSO/SMACS/ADMM
+//! sub-problem solvers; `runtime` executes AOT-compiled JAX/Pallas
+//! artifacts via PJRT on the hot path (stubbed when the PJRT binding is
+//! not vendored).
 //!
 //! Layering (Python never runs at request time):
-//! - L3: this crate — screening, partitioning, scheduling, serving.
+//! - L3: this crate — screening (`ScreenIndex`), partitioning, scheduling,
+//!   serving.
 //! - L2: `python/compile/model.py` — JAX block-solver graphs, AOT → HLO text.
 //! - L1: `python/compile/kernels/` — Pallas kernels (threshold mask, lasso
 //!   coordinate descent, Gram), correctness-checked against `ref.py`.

@@ -2,10 +2,11 @@
 //! artifacts (`artifacts/*.hlo.txt`) from the Rust hot path.
 //!
 //! `manifest` parses the artifact contract emitted by `python/compile/
-//! aot.py`; `client` wraps the `xla` crate (HLO text → compile → execute);
-//! `backend` adapts the `glasso_block` artifacts to the coordinator's
-//! `BlockSolver` trait with bucket-padding (lossless by Theorem 1 — see
-//! module docs).
+//! aot.py`; `client` is the PJRT surface (HLO text → compile → execute) —
+//! a graceful stub unless the vendored `xla` binding is present (see its
+//! module docs); `backend` adapts the `glasso_block` artifacts to the
+//! coordinator's `BlockSolver` trait with bucket-padding (lossless by
+//! Theorem 1 — see module docs).
 
 pub mod backend;
 pub mod client;

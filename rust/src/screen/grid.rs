@@ -7,12 +7,20 @@
 //! - Table 3: "the 100 λ values correspond to the top 2% sorted absolute
 //!   values of the off-diagonal entries in S below λ_500".
 
-use super::profile::{lambda_for_capacity, lambda_interval_for_k, WEdge};
+use super::index::ScreenIndex;
+use super::profile::WEdge;
 
 /// λ_I and λ_II of Table 1: the midpoint and right end of the exact-K
 /// interval. Returns None if no λ yields exactly k components.
+/// (Edge-list entry point; builds a throwaway index. Callers holding a
+/// `ScreenIndex` should use [`table1_lambdas_indexed`].)
 pub fn table1_lambdas(p: usize, edges: Vec<WEdge>, k: usize) -> Option<(f64, f64)> {
-    let (lo, hi) = lambda_interval_for_k(p, edges, k)?;
+    table1_lambdas_indexed(&ScreenIndex::from_edges(p, edges), k)
+}
+
+/// [`table1_lambdas`] answered from a prebuilt index — O(#tie-groups).
+pub fn table1_lambdas_indexed(index: &ScreenIndex, k: usize) -> Option<(f64, f64)> {
+    let (lo, hi) = index.lambda_interval_for_k(k)?;
     let hi = if hi.is_finite() { hi } else { 1.0f64.max(2.0 * lo) };
     Some(((lo + hi) / 2.0, hi))
 }
@@ -37,8 +45,14 @@ pub fn uniform_grid_desc(hi: f64, lo: f64, count: usize) -> Vec<f64> {
 /// Figure-1 grid: `count` λ values from the largest magnitude down to
 /// λ'_cap = smallest λ with max component ≤ cap.
 pub fn figure1_grid(p: usize, edges: &[WEdge], cap: usize, count: usize) -> Vec<f64> {
-    let top = edges.iter().map(|e| e.w).fold(0.0f64, f64::max);
-    let floor = lambda_for_capacity(p, edges.to_vec(), cap);
+    figure1_grid_indexed(&ScreenIndex::from_edges(p, edges.to_vec()), cap, count)
+}
+
+/// [`figure1_grid`] from a prebuilt index: both endpoints are O(#groups)
+/// reads, no edge resweep.
+pub fn figure1_grid_indexed(index: &ScreenIndex, cap: usize, count: usize) -> Vec<f64> {
+    let top = index.max_magnitude();
+    let floor = index.lambda_for_capacity(cap);
     uniform_grid_desc(top, floor, count)
 }
 
@@ -53,12 +67,32 @@ pub fn quantile_grid_below(
 ) -> Vec<f64> {
     let mut mags: Vec<f64> = edges.iter().map(|e| e.w).filter(|&w| w < lambda_start).collect();
     mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    subsample_desc(&mags, frac, count)
+}
+
+/// [`quantile_grid_below`] from a prebuilt index: the suffix of the
+/// index's weight-descending edge list below `lambda_start` is already
+/// sorted, so no re-sort is needed.
+pub fn quantile_grid_below_indexed(
+    index: &ScreenIndex,
+    lambda_start: f64,
+    frac: f64,
+    count: usize,
+) -> Vec<f64> {
+    let edges = index.edges();
+    let cut = edges.partition_point(|e| e.w >= lambda_start);
+    let mags: Vec<f64> = edges[cut..].iter().map(|e| e.w).collect();
+    subsample_desc(&mags, frac, count)
+}
+
+/// Subsample `count` evenly spaced entries from the top `frac` quantile of
+/// a descending magnitude list.
+fn subsample_desc(mags: &[f64], frac: f64, count: usize) -> Vec<f64> {
     let keep = ((mags.len() as f64) * frac).ceil() as usize;
     let top = &mags[..keep.min(mags.len())];
     if top.is_empty() {
         return Vec::new();
     }
-    // Subsample `count` evenly spaced entries of the sorted-descending list.
     let mut out = Vec::with_capacity(count);
     for t in 0..count {
         let idx = t * (top.len() - 1) / count.max(1).saturating_sub(1).max(1);
@@ -116,5 +150,20 @@ mod tests {
         assert!(!g.is_empty());
         assert!(g.iter().all(|&l| l < start));
         assert!(g.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn indexed_grids_match_edge_list_grids() {
+        let inst = crate::datasets::synthetic::block_instance(2, 10, 77);
+        let p = inst.s.rows();
+        let edges = weighted_edges(&inst.s, 0.0);
+        let index = ScreenIndex::from_dense(&inst.s);
+
+        assert_eq!(table1_lambdas(p, edges.clone(), 2), table1_lambdas_indexed(&index, 2));
+        assert_eq!(figure1_grid(p, &edges, 8, 12), figure1_grid_indexed(&index, 8, 12));
+        assert_eq!(
+            quantile_grid_below(&edges, 0.5, 0.1, 20),
+            quantile_grid_below_indexed(&index, 0.5, 0.1, 20)
+        );
     }
 }

@@ -1,0 +1,564 @@
+//! `ScreenIndex` — the build-once, query-many screening subsystem.
+//!
+//! The paper frames the screen as "off-line and amenable to parallel
+//! computation" (§3): thresholding is cheap relative to solving, so it
+//! should be paid ONCE per covariance source and amortized across every λ
+//! a caller asks about. Before this index existed, each screening query
+//! (`threshold_edges`, `count_edges`, `threshold_partition`, capacity
+//! search…) re-walked the dense S at O(p²). The index inverts that:
+//!
+//! - **Build once** (parallel over row bands / Gram tiles): extract all
+//!   off-diagonal edges above a floor, sort by |S_ij| descending, group
+//!   ties, and run ONE Kruskal sweep recording (a) per-tie-group component
+//!   count and max component size, and (b) union-find snapshots every K
+//!   edge activations.
+//! - **Query many** without ever touching S again:
+//!   - `edges_above(λ)` / `edge_count(λ)`: binary search on the sorted
+//!     weights — the active edges are a prefix.
+//!   - `partition_at(λ)` for RANDOM-ACCESS λ: restore the nearest
+//!     checkpoint ≤ λ's tie group and replay at most K unions,
+//!     O(p + K α(p)) instead of a full O(p²) rescan.
+//!   - `lambda_for_capacity(p_max)` / `lambda_interval_for_k(k)`: read
+//!     straight off the per-tie-group summaries, O(#groups).
+//!   - `sweep()` / `profile(grid)`: the descending-path engine, skipping
+//!     the sort.
+//!
+//! Boundary semantics: edges are strict `|S_ij| > λ`; a tie group (all
+//! edges sharing one magnitude) activates together the moment λ drops
+//! below its weight. `partition_at` is bit-identical to the naive
+//! `threshold_partition` oracle (both canonicalize labels by first
+//! appearance) — property-tested in `tests/screen_index_properties.rs`.
+
+use super::profile::{profile_with_sweep, LambdaSweep, ProfilePoint, WEdge};
+use crate::graph::{Partition, UfSnapshot, UnionFind};
+use crate::linalg::Mat;
+
+/// Union-find state after activating the first `groups_applied` tie groups.
+#[derive(Clone, Debug)]
+struct Checkpoint {
+    groups_applied: usize,
+    snap: UfSnapshot,
+}
+
+/// Build-once screening index over one covariance source.
+#[derive(Clone, Debug)]
+pub struct ScreenIndex {
+    p: usize,
+    /// Smallest magnitude retained at build time; queries must satisfy
+    /// λ ≥ floor (below it the index would be missing edges).
+    floor: f64,
+    /// All edges with w > floor, sorted by (w desc, i asc, j asc).
+    edges: Vec<WEdge>,
+    /// group_start[g]..group_start[g+1] slices the g-th tie group out of
+    /// `edges`; length n_groups + 1 (sentinel = edges.len()).
+    group_start: Vec<usize>,
+    /// Distinct magnitudes, strictly descending; length n_groups.
+    group_w: Vec<f64>,
+    /// Component count after activating groups 0..=g.
+    group_n_components: Vec<usize>,
+    /// Max component size after activating groups 0..=g.
+    group_max_size: Vec<usize>,
+    /// Snapshots at tie-group boundaries, ascending in `groups_applied`;
+    /// always starts with the empty-graph state.
+    checkpoints: Vec<Checkpoint>,
+    /// Edge-activation budget between checkpoints (the K of "snapshot
+    /// every K").
+    checkpoint_every: usize,
+}
+
+fn default_checkpoint_every(n_edges: usize) -> usize {
+    // ≤ ~33 snapshots; replay between checkpoints bounded by this many
+    // unions. Small inputs keep one snapshot and replay from scratch.
+    (n_edges / 32).max(1024)
+}
+
+impl ScreenIndex {
+    /// Build from a dense covariance/correlation matrix, keeping every
+    /// edge with |S_ij| > 0 (valid for any query λ ≥ 0).
+    pub fn from_dense(s: &Mat) -> ScreenIndex {
+        ScreenIndex::from_dense_above(s, 0.0)
+    }
+
+    /// Build from a dense matrix keeping edges with |S_ij| > floor.
+    /// Construction parallelizes the O(p²) scan over row bands.
+    pub fn from_dense_above(s: &Mat, floor: f64) -> ScreenIndex {
+        let threads = available_threads();
+        let edges = super::threshold::par_dense_edges_above(s, floor, threads);
+        ScreenIndex::build(s.rows(), edges, floor, None)
+    }
+
+    /// Build from a column-standardized data matrix via the streaming Gram
+    /// screen (`screen::stream`) — never materializing the p×p covariance.
+    pub fn from_standardized(z: &Mat, floor: f64, block: usize) -> ScreenIndex {
+        let edges = super::stream::edges_above_from_standardized(z, floor, block);
+        ScreenIndex::build(z.cols(), edges, floor, None)
+    }
+
+    /// Build from a pre-extracted edge list (any order). The index trusts
+    /// the list to be complete for queries at λ ≥ 0.
+    pub fn from_edges(p: usize, edges: Vec<WEdge>) -> ScreenIndex {
+        ScreenIndex::build(p, edges, f64::NEG_INFINITY, None)
+    }
+
+    /// `from_edges` with an explicit checkpoint spacing (in edge
+    /// activations) — exposed for tests and tuning.
+    pub fn from_edges_with_checkpoints(
+        p: usize,
+        edges: Vec<WEdge>,
+        checkpoint_every: usize,
+    ) -> ScreenIndex {
+        ScreenIndex::build(p, edges, f64::NEG_INFINITY, Some(checkpoint_every.max(1)))
+    }
+
+    fn build(
+        p: usize,
+        mut edges: Vec<WEdge>,
+        floor: f64,
+        checkpoint_every: Option<usize>,
+    ) -> ScreenIndex {
+        // Deterministic total order regardless of how construction was
+        // parallelized: weight descending, then (i, j) ascending.
+        edges.sort_unstable_by(|a, b| {
+            b.w.partial_cmp(&a.w)
+                .expect("NaN magnitude in screen edges")
+                .then(a.i.cmp(&b.i))
+                .then(a.j.cmp(&b.j))
+        });
+        let checkpoint_every =
+            checkpoint_every.unwrap_or_else(|| default_checkpoint_every(edges.len()));
+
+        let mut group_start = Vec::new();
+        let mut group_w = Vec::new();
+        let mut group_n_components = Vec::new();
+        let mut group_max_size = Vec::new();
+        let mut uf = UnionFind::new(p);
+        let mut checkpoints = vec![Checkpoint { groups_applied: 0, snap: uf.snapshot() }];
+        let mut since_checkpoint = 0usize;
+
+        let mut idx = 0usize;
+        while idx < edges.len() {
+            let w = edges[idx].w;
+            group_start.push(idx);
+            group_w.push(w);
+            let mut end = idx;
+            while end < edges.len() && edges[end].w == w {
+                uf.union(edges[end].i as usize, edges[end].j as usize);
+                end += 1;
+            }
+            since_checkpoint += end - idx;
+            group_n_components.push(uf.n_components());
+            group_max_size.push(uf.max_component_size());
+            if since_checkpoint >= checkpoint_every {
+                checkpoints
+                    .push(Checkpoint { groups_applied: group_w.len(), snap: uf.snapshot() });
+                since_checkpoint = 0;
+            }
+            idx = end;
+        }
+        group_start.push(edges.len());
+
+        ScreenIndex {
+            p,
+            floor,
+            edges,
+            group_start,
+            group_w,
+            group_n_components,
+            group_max_size,
+            checkpoints,
+            checkpoint_every,
+        }
+    }
+
+    // ---- shape accessors -------------------------------------------------
+
+    /// Number of vertices (columns of the source matrix).
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Build-time floor: queries must use λ ≥ floor.
+    pub fn floor(&self) -> f64 {
+        self.floor
+    }
+
+    /// Total edges retained at build time.
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// All retained edges, weight-descending (ties contiguous).
+    pub fn edges(&self) -> &[WEdge] {
+        &self.edges
+    }
+
+    /// Distinct |S_ij| magnitudes above the floor, strictly descending —
+    /// the only λ values where the partition can change (§4.2).
+    pub fn distinct_magnitudes(&self) -> &[f64] {
+        &self.group_w
+    }
+
+    /// Largest off-diagonal magnitude (0.0 when no edges survive).
+    pub fn max_magnitude(&self) -> f64 {
+        self.group_w.first().copied().unwrap_or(0.0)
+    }
+
+    /// Number of union-find snapshots held.
+    pub fn n_checkpoints(&self) -> usize {
+        self.checkpoints.len()
+    }
+
+    /// Edge-activation spacing between checkpoints.
+    pub fn checkpoint_every(&self) -> usize {
+        self.checkpoint_every
+    }
+
+    // ---- queries (never touch S) ----------------------------------------
+
+    fn assert_query(&self, lambda: f64) {
+        assert!(
+            lambda >= self.floor,
+            "query λ={lambda} below the index floor {} — rebuild with a lower floor",
+            self.floor
+        );
+    }
+
+    /// Guard for answers that extend all the way down to λ = 0: a floored
+    /// index (floor > 0) never saw the edges below its floor and cannot
+    /// certify them.
+    fn assert_complete_to_zero(&self) {
+        assert!(
+            self.floor <= 0.0,
+            "answer depends on edges below the index floor {} — rebuild with floor ≤ 0",
+            self.floor
+        );
+    }
+
+    /// The tie group λ falls into: the number of tie groups active at λ.
+    /// All λ in one inter-magnitude interval share this value, which makes
+    /// it the natural cache key for per-λ artifacts (partitions, plans).
+    pub fn tie_group_of(&self, lambda: f64) -> usize {
+        self.assert_query(lambda);
+        self.group_w.partition_point(|&w| w > lambda)
+    }
+
+    /// |E(λ)| via binary search — O(log |E|).
+    pub fn edge_count(&self, lambda: f64) -> usize {
+        self.assert_query(lambda);
+        self.edges.partition_point(|e| e.w > lambda)
+    }
+
+    /// The active edges at λ: a prefix of the weight-descending list.
+    pub fn edges_above(&self, lambda: f64) -> &[WEdge] {
+        &self.edges[..self.edge_count(lambda)]
+    }
+
+    /// Component count at λ — O(log #groups), from the per-group summary.
+    pub fn n_components_at(&self, lambda: f64) -> usize {
+        let m = self.tie_group_of(lambda);
+        if m == 0 {
+            self.p
+        } else {
+            self.group_n_components[m - 1]
+        }
+    }
+
+    /// Max component size at λ — O(log #groups).
+    pub fn max_component_size_at(&self, lambda: f64) -> usize {
+        let m = self.tie_group_of(lambda);
+        if m == 0 {
+            usize::from(self.p > 0)
+        } else {
+            self.group_max_size[m - 1]
+        }
+    }
+
+    /// Vertex partition of the thresholded graph at an ARBITRARY λ —
+    /// restore the nearest checkpoint, replay ≤ K unions. Bit-identical to
+    /// `threshold_partition(S, λ)` (canonical first-appearance labels).
+    pub fn partition_at(&self, lambda: f64) -> Partition {
+        let m = self.tie_group_of(lambda);
+        let mut uf = self.replay_to(m);
+        Partition::from_labels(&uf.labels())
+    }
+
+    /// Union-find with the first `m` tie groups applied.
+    fn replay_to(&self, m: usize) -> UnionFind {
+        let ci = self.checkpoints.partition_point(|c| c.groups_applied <= m) - 1;
+        let ck = &self.checkpoints[ci];
+        let mut uf = UnionFind::from_snapshot(&ck.snap);
+        for e in &self.edges[self.group_start[ck.groups_applied]..self.group_start[m]] {
+            uf.union(e.i as usize, e.j as usize);
+        }
+        uf
+    }
+
+    /// Smallest λ with no component above `p_max` (§2 consequence 5):
+    /// the weight of the first tie group whose activation overflows, or
+    /// 0.0 if the whole graph fits. O(#groups).
+    ///
+    /// If no retained tie group overflows, the answer depends on edges
+    /// below the build floor, so a floored index (floor > 0) panics
+    /// rather than understate λ.
+    pub fn lambda_for_capacity(&self, p_max: usize) -> f64 {
+        assert!(p_max >= 1);
+        for g in 0..self.group_w.len() {
+            if self.group_max_size[g] > p_max {
+                return self.group_w[g];
+            }
+        }
+        self.assert_complete_to_zero();
+        0.0
+    }
+
+    /// Interval [λ_min, λ_max) with exactly k components, if it exists.
+    /// O(#groups). Like [`ScreenIndex::lambda_for_capacity`], panics on a
+    /// floored index when the answer would extend below the floor.
+    pub fn lambda_interval_for_k(&self, k: usize) -> Option<(f64, f64)> {
+        let mut upper: Option<f64> = if self.p == k { Some(f64::INFINITY) } else { None };
+        for g in 0..self.group_w.len() {
+            let n = self.group_n_components[g];
+            if n == k && upper.is_none() {
+                upper = Some(self.group_w[g]);
+            }
+            if n < k {
+                return upper.map(|u| (self.group_w[g], u));
+            }
+        }
+        // The component count never dropped below k within the retained
+        // edges: both the "interval reaches 0" and the "no such interval"
+        // conclusions hinge on the edges below the floor.
+        self.assert_complete_to_zero();
+        upper.map(|u| (0.0, u))
+    }
+
+    /// A fresh descending-λ sweep over the (already sorted) edge list —
+    /// the Figure-1 / path-driver engine, minus the sort.
+    pub fn sweep(&self) -> LambdaSweep {
+        LambdaSweep::from_sorted(self.p, self.edges.clone())
+    }
+
+    /// Component-size profile over a DESCENDING λ grid in one sweep.
+    /// Grid values must satisfy λ ≥ floor.
+    pub fn profile(&self, lambdas_desc: &[f64]) -> Vec<ProfilePoint> {
+        if let Some(&last) = lambdas_desc.last() {
+            self.assert_query(last);
+        }
+        profile_with_sweep(self.sweep(), lambdas_desc)
+    }
+}
+
+fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::screen::profile::weighted_edges;
+    use crate::screen::threshold::{threshold_edges, threshold_partition};
+    use crate::util::rng::Xoshiro256;
+
+    fn demo_s() -> Mat {
+        // Same 5-node chain as the profile tests: magnitudes .9 .7 .5 .2.
+        let mut s = Mat::eye(5);
+        for &(i, j, v) in &[(0, 1, 0.9), (1, 2, 0.7), (3, 4, 0.5), (2, 3, 0.2)] {
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+        s
+    }
+
+    fn ties_s() -> Mat {
+        // Two edges share magnitude 0.5 — one tie group.
+        let mut s = Mat::eye(4);
+        for &(i, j, v) in &[(0, 1, 0.5), (2, 3, -0.5), (1, 2, 0.9)] {
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+        s
+    }
+
+    #[test]
+    fn edge_prefix_and_counts() {
+        let s = demo_s();
+        let idx = ScreenIndex::from_dense(&s);
+        assert_eq!(idx.p(), 5);
+        assert_eq!(idx.n_edges(), 4);
+        assert_eq!(idx.distinct_magnitudes(), &[0.9, 0.7, 0.5, 0.2]);
+        assert_eq!(idx.max_magnitude(), 0.9);
+        for lam in [1.0, 0.9, 0.75, 0.5, 0.3, 0.1, 0.0] {
+            assert_eq!(idx.edge_count(lam), threshold_edges(&s, lam).len(), "λ={lam}");
+            let prefix = idx.edges_above(lam);
+            assert!(prefix.iter().all(|e| e.w > lam));
+            assert_eq!(prefix.len(), idx.edge_count(lam));
+        }
+    }
+
+    #[test]
+    fn partition_matches_naive_random_access() {
+        let s = demo_s();
+        let idx = ScreenIndex::from_dense(&s);
+        // Deliberately NOT descending: random access.
+        for lam in [0.1, 0.95, 0.5, 0.0, 0.7, 0.2, 0.69] {
+            let naive = threshold_partition(&s, lam);
+            let fast = idx.partition_at(lam);
+            assert_eq!(fast.labels(), naive.labels(), "λ={lam}");
+        }
+    }
+
+    #[test]
+    fn summary_queries_match_partitions() {
+        let s = demo_s();
+        let idx = ScreenIndex::from_dense(&s);
+        for lam in [1.0, 0.8, 0.6, 0.4, 0.1] {
+            let part = threshold_partition(&s, lam);
+            assert_eq!(idx.n_components_at(lam), part.n_components(), "λ={lam}");
+            assert_eq!(idx.max_component_size_at(lam), part.max_component_size(), "λ={lam}");
+        }
+    }
+
+    #[test]
+    fn tie_groups_activate_together() {
+        let s = ties_s();
+        let idx = ScreenIndex::from_dense(&s);
+        assert_eq!(idx.distinct_magnitudes(), &[0.9, 0.5]);
+        // λ = 0.5 sits ON the tie: strict > keeps both inactive.
+        assert_eq!(idx.tie_group_of(0.5), 1);
+        assert_eq!(idx.edge_count(0.5), 1);
+        assert_eq!(idx.n_components_at(0.5), 3);
+        // Just below, BOTH activate at once.
+        assert_eq!(idx.tie_group_of(0.49), 2);
+        assert_eq!(idx.edge_count(0.49), 3);
+        assert_eq!(idx.n_components_at(0.49), 1);
+        assert_eq!(idx.partition_at(0.49).labels(), threshold_partition(&s, 0.49).labels());
+    }
+
+    #[test]
+    fn tie_group_is_stable_within_interval() {
+        let idx = ScreenIndex::from_dense(&demo_s());
+        // Any λ strictly inside (0.5, 0.7) shares a tie group.
+        assert_eq!(idx.tie_group_of(0.51), idx.tie_group_of(0.69));
+        assert_ne!(idx.tie_group_of(0.51), idx.tie_group_of(0.71));
+        // λ exactly at a magnitude belongs with the interval above it.
+        assert_eq!(idx.tie_group_of(0.7), idx.tie_group_of(0.75));
+    }
+
+    #[test]
+    fn capacity_and_interval_queries() {
+        let s = demo_s();
+        let idx = ScreenIndex::from_dense(&s);
+        assert_eq!(idx.lambda_for_capacity(2), 0.7);
+        assert_eq!(idx.lambda_for_capacity(1), 0.9);
+        assert_eq!(idx.lambda_for_capacity(5), 0.0);
+        assert_eq!(idx.lambda_interval_for_k(3), Some((0.5, 0.7)));
+        assert_eq!(idx.lambda_interval_for_k(1), Some((0.0, 0.2)));
+        let (_, hi5) = idx.lambda_interval_for_k(5).unwrap();
+        assert!(hi5.is_infinite());
+    }
+
+    #[test]
+    fn dense_checkpoint_density_is_behavior_invariant() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let p = 30;
+        let mut s = Mat::eye(p);
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let v = rng.gaussian() * 0.3;
+                s.set(i, j, v);
+                s.set(j, i, v);
+            }
+        }
+        let default_idx = ScreenIndex::from_dense(&s);
+        for every in [1usize, 2, 7, 100_000] {
+            let idx = ScreenIndex::from_edges_with_checkpoints(p, weighted_edges(&s, 0.0), every);
+            for lam in [0.9, 0.4, 0.2, 0.1, 0.05, 0.0] {
+                assert_eq!(
+                    idx.partition_at(lam).labels(),
+                    default_idx.partition_at(lam).labels(),
+                    "every={every} λ={lam}"
+                );
+            }
+        }
+        // Dense checkpoints really were taken.
+        let dense_ck = ScreenIndex::from_edges_with_checkpoints(p, weighted_edges(&s, 0.0), 1);
+        assert!(dense_ck.n_checkpoints() > default_idx.n_checkpoints());
+    }
+
+    #[test]
+    fn from_edges_matches_from_dense() {
+        let s = demo_s();
+        let a = ScreenIndex::from_dense(&s);
+        let b = ScreenIndex::from_edges(5, weighted_edges(&s, 0.0));
+        assert_eq!(a.n_edges(), b.n_edges());
+        for lam in [0.8, 0.4, 0.1] {
+            assert_eq!(a.partition_at(lam).labels(), b.partition_at(lam).labels());
+        }
+    }
+
+    #[test]
+    fn sweep_and_profile_agree_with_partition_at() {
+        let s = demo_s();
+        let idx = ScreenIndex::from_dense(&s);
+        let grid = [0.95, 0.8, 0.6, 0.4, 0.1];
+        let prof = idx.profile(&grid);
+        assert_eq!(prof.len(), grid.len());
+        for pt in &prof {
+            assert_eq!(pt.n_components, idx.n_components_at(pt.lambda), "λ={}", pt.lambda);
+            assert_eq!(pt.max_size, idx.max_component_size_at(pt.lambda));
+        }
+        let mut sweep = idx.sweep();
+        sweep.advance_to(0.4);
+        assert_eq!(sweep.partition().labels(), idx.partition_at(0.4).labels());
+    }
+
+    #[test]
+    fn empty_and_edgeless_sources() {
+        let empty = ScreenIndex::from_dense(&Mat::eye(0));
+        assert_eq!(empty.p(), 0);
+        assert_eq!(empty.partition_at(0.5).n_components(), 0);
+        assert_eq!(empty.max_component_size_at(0.5), 0);
+
+        let loose = ScreenIndex::from_dense(&Mat::eye(3));
+        assert_eq!(loose.n_edges(), 0);
+        assert_eq!(loose.n_components_at(0.1), 3);
+        assert_eq!(loose.max_component_size_at(0.1), 1);
+        assert_eq!(loose.lambda_for_capacity(1), 0.0);
+        assert_eq!(loose.partition_at(0.0).n_components(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn query_below_floor_panics() {
+        let idx = ScreenIndex::from_dense_above(&demo_s(), 0.4);
+        let _ = idx.partition_at(0.3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn floored_capacity_refuses_incomplete_answer() {
+        let idx = ScreenIndex::from_dense_above(&demo_s(), 0.4);
+        // No retained tie group overflows p_max=5, so the "fits at any λ"
+        // conclusion would hinge on the edges dropped below the floor.
+        let _ = idx.lambda_for_capacity(5);
+    }
+
+    #[test]
+    fn floored_capacity_still_answers_above_floor() {
+        let idx = ScreenIndex::from_dense_above(&demo_s(), 0.4);
+        // Overflow happens within retained groups: complete answer.
+        assert_eq!(idx.lambda_for_capacity(2), 0.7);
+        assert_eq!(idx.lambda_interval_for_k(3), Some((0.5, 0.7)));
+    }
+
+    #[test]
+    fn floored_index_valid_at_or_above_floor() {
+        let s = demo_s();
+        let idx = ScreenIndex::from_dense_above(&s, 0.4);
+        assert_eq!(idx.n_edges(), 3); // .9 .7 .5 survive, .2 dropped
+        for lam in [0.4, 0.5, 0.65, 0.9] {
+            assert_eq!(idx.partition_at(lam).labels(), threshold_partition(&s, lam).labels());
+            assert_eq!(idx.edge_count(lam), threshold_edges(&s, lam).len());
+        }
+    }
+}

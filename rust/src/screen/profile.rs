@@ -24,20 +24,9 @@ pub struct WEdge {
 }
 
 /// Extract all off-diagonal weighted edges with |S_ij| > floor.
+/// (Thin alias of the shared dense scan in `threshold`.)
 pub fn weighted_edges(s: &Mat, floor: f64) -> Vec<WEdge> {
-    assert!(s.is_square());
-    let p = s.rows();
-    let mut edges = Vec::new();
-    for i in 0..p {
-        let row = s.row(i);
-        for j in (i + 1)..p {
-            let w = row[j].abs();
-            if w > floor {
-                edges.push(WEdge { i: i as u32, j: j as u32, w });
-            }
-        }
-    }
-    edges
+    super::threshold::dense_edges_above(s, floor)
 }
 
 /// Downward λ sweep over a fixed edge set.
@@ -54,6 +43,16 @@ impl LambdaSweep {
     /// Create a sweep over p vertices. Edges need not be pre-sorted.
     pub fn new(p: usize, mut edges: Vec<WEdge>) -> LambdaSweep {
         edges.sort_by(|a, b| b.w.partial_cmp(&a.w).unwrap());
+        LambdaSweep::from_sorted(p, edges)
+    }
+
+    /// Create a sweep over edges ALREADY sorted by weight descending —
+    /// the `ScreenIndex` fast path (its edge list is kept sorted).
+    pub fn from_sorted(p: usize, edges: Vec<WEdge>) -> LambdaSweep {
+        debug_assert!(
+            edges.windows(2).all(|w| w[0].w >= w[1].w),
+            "from_sorted requires weight-descending edges"
+        );
         let mut hist = BTreeMap::new();
         if p > 0 {
             hist.insert(1, p);
@@ -130,9 +129,12 @@ pub struct ProfilePoint {
     pub histogram: Vec<(usize, usize)>,
 }
 
-/// Profile the component structure over a DESCENDING λ grid in one sweep.
-pub fn profile_grid(p: usize, edges: Vec<WEdge>, lambdas_desc: &[f64]) -> Vec<ProfilePoint> {
-    let mut sweep = LambdaSweep::new(p, edges);
+/// Shared grid loop over any prepared sweep (used by `profile_grid` and
+/// `ScreenIndex::profile`).
+pub(crate) fn profile_with_sweep(
+    mut sweep: LambdaSweep,
+    lambdas_desc: &[f64],
+) -> Vec<ProfilePoint> {
     let mut out = Vec::with_capacity(lambdas_desc.len());
     for &lam in lambdas_desc {
         sweep.advance_to(lam);
@@ -149,68 +151,31 @@ pub fn profile_grid(p: usize, edges: Vec<WEdge>, lambdas_desc: &[f64]) -> Vec<Pr
     out
 }
 
+/// Profile the component structure over a DESCENDING λ grid in one sweep.
+pub fn profile_grid(p: usize, edges: Vec<WEdge>, lambdas_desc: &[f64]) -> Vec<ProfilePoint> {
+    profile_with_sweep(LambdaSweep::new(p, edges), lambdas_desc)
+}
+
 /// Smallest λ such that the thresholded graph has no component larger than
-/// `p_max` (§2 consequence 5). Returns the weight of the first edge whose
-/// activation would overflow the capacity (ties activated together), or
-/// 0.0 if even the full graph fits.
+/// `p_max` (§2 consequence 5). Returns the weight of the first tie group
+/// whose activation would overflow the capacity (ties activated together),
+/// or 0.0 if even the full graph fits.
+///
+/// Thin view over `ScreenIndex`: builds the index from the edge list and
+/// reads the answer off its per-tie-group summaries. Callers holding an
+/// index should query it directly.
 pub fn lambda_for_capacity(p: usize, edges: Vec<WEdge>, p_max: usize) -> f64 {
-    assert!(p_max >= 1);
-    let mut edges = edges;
-    edges.sort_by(|a, b| b.w.partial_cmp(&a.w).unwrap());
-    let mut uf = UnionFind::new(p);
-    let mut idx = 0usize;
-    while idx < edges.len() {
-        // activate the whole tie-group [idx, end)
-        let w = edges[idx].w;
-        let mut end = idx;
-        while end < edges.len() && edges[end].w == w {
-            end += 1;
-        }
-        // trial: apply group, check capacity
-        let snapshot = uf.clone();
-        for e in &edges[idx..end] {
-            uf.union(e.i as usize, e.j as usize);
-        }
-        if uf.max_component_size() > p_max {
-            // activating edges of weight w overflows ⇒ λ must keep them
-            // inactive ⇒ λ ≥ w; smallest such λ is w itself (strict >).
-            let _ = snapshot; // (snapshot kept for clarity; uf is discarded)
-            return w;
-        }
-        idx = end;
-    }
-    0.0
+    super::index::ScreenIndex::from_edges(p, edges).lambda_for_capacity(p_max)
 }
 
 /// Interval [λ_min, λ_max) over which the thresholded graph has exactly k
 /// components, if such an interval exists. λ_max is the largest magnitude
 /// whose activation first yields k components; λ_min the magnitude whose
 /// activation drops the count below k.
+///
+/// Thin view over `ScreenIndex` (see `lambda_for_capacity`).
 pub fn lambda_interval_for_k(p: usize, edges: Vec<WEdge>, k: usize) -> Option<(f64, f64)> {
-    let mut edges = edges;
-    edges.sort_by(|a, b| b.w.partial_cmp(&a.w).unwrap());
-    let mut uf = UnionFind::new(p);
-    let mut upper: Option<f64> = if p == k { Some(f64::INFINITY) } else { None };
-    let mut idx = 0usize;
-    while idx < edges.len() {
-        let w = edges[idx].w;
-        let mut end = idx;
-        while end < edges.len() && edges[end].w == w {
-            uf.union(edges[end].i as usize, edges[end].j as usize);
-            end += 1;
-        }
-        let n = uf.n_components();
-        // component count after activation, i.e. at λ just below w
-        if n == k && upper.is_none() {
-            upper = Some(w);
-        }
-        if n < k {
-            return upper.map(|u| (w, u));
-        }
-        idx = end;
-    }
-    // never dropped below k: interval extends to 0
-    upper.map(|u| (0.0, u))
+    super::index::ScreenIndex::from_edges(p, edges).lambda_interval_for_k(k)
 }
 
 #[cfg(test)]

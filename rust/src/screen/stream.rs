@@ -14,12 +14,24 @@ use crate::linalg::Mat;
 
 /// Compute all edges {(i,j,|corr_ij|) : |corr_ij| > floor} from a
 /// column-standardized data matrix `z` (n×p, Zᵀ Z / n = correlation),
-/// streaming over `block`-column tiles.
+/// streaming over `block`-column tiles. Tile pairs are scanned in
+/// parallel (`std::thread`), one chunk of pairs per core; chunks are
+/// concatenated in order so the output matches the sequential scan.
 pub fn edges_above_from_standardized(z: &Mat, floor: f64, block: usize) -> Vec<WEdge> {
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    par_edges_above_from_standardized(z, floor, block, threads)
+}
+
+/// [`edges_above_from_standardized`] with an explicit thread count.
+pub fn par_edges_above_from_standardized(
+    z: &Mat,
+    floor: f64,
+    block: usize,
+    n_threads: usize,
+) -> Vec<WEdge> {
     let (n, p) = (z.rows(), z.cols());
     assert!(block > 0);
     let inv_n = 1.0 / n as f64;
-    let mut edges = Vec::new();
 
     let n_blocks = p.div_ceil(block);
     // Pre-extract column blocks transposed: zt[b] is (bsize × n) row-major,
@@ -38,29 +50,73 @@ pub fn edges_above_from_standardized(z: &Mat, floor: f64, block: usize) -> Vec<W
         zt.push(t);
     }
 
-    for bi in 0..n_blocks {
-        let ti = &zt[bi];
-        let ilo = bi * block;
-        for bj in bi..n_blocks {
-            let tj = &zt[bj];
-            let jlo = bj * block;
-            for a in 0..ti.rows() {
-                let ra = ti.row(a);
-                let jstart = if bi == bj { a + 1 } else { 0 };
-                for b2 in jstart..tj.rows() {
-                    let w = crate::linalg::dot(ra, tj.row(b2)).abs() * inv_n;
-                    if w > floor {
-                        edges.push(WEdge {
-                            i: (ilo + a) as u32,
-                            j: (jlo + b2) as u32,
-                            w,
-                        });
+    // Upper-triangular tile pairs in deterministic order.
+    let pairs: Vec<(usize, usize)> = (0..n_blocks)
+        .flat_map(|bi| (bi..n_blocks).map(move |bj| (bi, bj)))
+        .collect();
+    if pairs.is_empty() {
+        return Vec::new();
+    }
+    let n_threads = n_threads.clamp(1, pairs.len());
+    if n_threads == 1 {
+        let mut edges = Vec::new();
+        for &(bi, bj) in &pairs {
+            scan_tile_pair(&zt, bi, bj, block, inv_n, floor, &mut edges);
+        }
+        return edges;
+    }
+
+    let chunk = pairs.len().div_ceil(n_threads);
+    let zt_ref = &zt;
+    let mut results: Vec<Vec<WEdge>> = Vec::with_capacity(n_threads);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = pairs
+            .chunks(chunk)
+            .map(|chunk_pairs| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    for &(bi, bj) in chunk_pairs {
+                        scan_tile_pair(zt_ref, bi, bj, block, inv_n, floor, &mut out);
                     }
-                }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            results.push(h.join().expect("gram scan thread panicked"));
+        }
+    });
+    let mut edges = Vec::with_capacity(results.iter().map(Vec::len).sum());
+    for mut part in results {
+        edges.append(&mut part);
+    }
+    edges
+}
+
+/// Scan one Gram tile pair (bi, bj), appending surviving edges.
+fn scan_tile_pair(
+    zt: &[Mat],
+    bi: usize,
+    bj: usize,
+    block: usize,
+    inv_n: f64,
+    floor: f64,
+    out: &mut Vec<WEdge>,
+) {
+    let ti = &zt[bi];
+    let tj = &zt[bj];
+    let ilo = bi * block;
+    let jlo = bj * block;
+    for a in 0..ti.rows() {
+        let ra = ti.row(a);
+        let jstart = if bi == bj { a + 1 } else { 0 };
+        for b2 in jstart..tj.rows() {
+            let w = crate::linalg::dot(ra, tj.row(b2)).abs() * inv_n;
+            if w > floor {
+                out.push(WEdge { i: (ilo + a) as u32, j: (jlo + b2) as u32, w });
             }
         }
     }
-    edges
 }
 
 /// Count of off-diagonal pairs with |corr| > floor (no edge materialization).
@@ -110,6 +166,19 @@ mod tests {
         for e in &edges {
             let expect = s.get(e.i as usize, e.j as usize).abs();
             assert!((e.w - expect).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_output() {
+        let mut rng = Xoshiro256::seed_from_u64(47);
+        let x = Mat::from_fn(20, 33, |_, _| rng.gaussian());
+        let mut z = x;
+        standardize_columns(&mut z);
+        let base = par_edges_above_from_standardized(&z, 0.1, 8, 1);
+        for threads in [2usize, 3, 7, 64] {
+            let got = par_edges_above_from_standardized(&z, 0.1, 8, threads);
+            assert_eq!(got, base, "threads={threads}");
         }
     }
 

@@ -1,27 +1,112 @@
 //! Exact covariance thresholding — eq. (4) of the paper.
 //!
-//! Builds the thresholded sample covariance graph E(λ) and its connected
-//! components. This is the entire screening rule: by Theorem 1 its vertex
-//! partition equals the partition of the glasso concentration graph at the
-//! same λ, at O(p²) cost instead of O(p³⁺).
+//! Home of the ONE dense edge-extraction loop (`scan_rows_above`): every
+//! consumer of the upper triangle of S — `ScreenIndex` construction,
+//! `weighted_edges`, `threshold_edges`, `count_edges`,
+//! `sorted_offdiag_magnitudes` — funnels through it, sequentially or in
+//! parallel over row bands.
+//!
+//! The per-λ functions here re-walk S on every call; they are kept as the
+//! reference oracle that `screen::index::ScreenIndex` is property-tested
+//! against. Serving paths should build a `ScreenIndex` once and query it.
+//!
+//! Boundary semantics (everywhere in this crate): an edge exists iff
+//! |S_ij| is STRICTLY greater than λ (eq. 4); entries with |S_ij| == λ are
+//! excluded, and all edges sharing one magnitude (a tie group) activate
+//! together the instant λ drops below it.
 
+use super::profile::WEdge;
 use crate::graph::{components_bfs, CsrGraph, Partition};
 use crate::linalg::Mat;
+use std::ops::Range;
 
-/// Edge list of the thresholded graph: {(i,j) : |S_ij| > λ, i < j}.
-pub fn threshold_edges(s: &Mat, lambda: f64) -> Vec<(u32, u32)> {
-    assert!(s.is_square());
+/// The shared dense scan: append every pair (i, j), i < j, with
+/// |S_ij| > floor and i in `rows`, in row-major order.
+fn scan_rows_above(s: &Mat, floor: f64, rows: Range<usize>, out: &mut Vec<WEdge>) {
     let p = s.rows();
-    let mut edges = Vec::new();
-    for i in 0..p {
+    for i in rows {
         let row = s.row(i);
         for j in (i + 1)..p {
-            if row[j].abs() > lambda {
-                edges.push((i as u32, j as u32));
+            let w = row[j].abs();
+            if w > floor {
+                out.push(WEdge { i: i as u32, j: j as u32, w });
             }
         }
     }
-    edges
+}
+
+/// All off-diagonal weighted edges with |S_ij| > floor (sequential).
+pub fn dense_edges_above(s: &Mat, floor: f64) -> Vec<WEdge> {
+    assert!(s.is_square());
+    let mut out = Vec::new();
+    scan_rows_above(s, floor, 0..s.rows(), &mut out);
+    out
+}
+
+/// Parallel variant of [`dense_edges_above`]: contiguous row bands with
+/// balanced upper-triangle work, one `std::thread` each. Bands are
+/// concatenated in order, so the output is identical to the sequential
+/// scan (same edges, same order).
+pub fn par_dense_edges_above(s: &Mat, floor: f64, n_threads: usize) -> Vec<WEdge> {
+    assert!(s.is_square());
+    let p = s.rows();
+    let n_threads = n_threads.clamp(1, p.max(1));
+    // Below ~512 rows the spawn overhead exceeds the scan itself.
+    if n_threads == 1 || p < 512 {
+        return dense_edges_above(s, floor);
+    }
+    let bands = balanced_row_bands(p, n_threads);
+    let mut results: Vec<Vec<WEdge>> = Vec::with_capacity(bands.len());
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = bands
+            .into_iter()
+            .map(|band| {
+                scope.spawn(move || {
+                    let mut out = Vec::new();
+                    scan_rows_above(s, floor, band, &mut out);
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            results.push(h.join().expect("screen scan thread panicked"));
+        }
+    });
+    let mut out = Vec::with_capacity(results.iter().map(Vec::len).sum());
+    for mut band in results {
+        out.append(&mut band);
+    }
+    out
+}
+
+/// Split 0..p into at most `k` contiguous bands of roughly equal
+/// upper-triangle work (row i holds p-1-i pairs).
+fn balanced_row_bands(p: usize, k: usize) -> Vec<Range<usize>> {
+    let total = p * p.saturating_sub(1) / 2;
+    let target = total / k + 1;
+    let mut bands = Vec::with_capacity(k);
+    let mut start = 0usize;
+    let mut acc = 0usize;
+    for i in 0..p {
+        acc += p - 1 - i;
+        if acc >= target && bands.len() + 1 < k {
+            bands.push(start..i + 1);
+            start = i + 1;
+            acc = 0;
+        }
+    }
+    if start < p || bands.is_empty() {
+        bands.push(start..p);
+    }
+    bands
+}
+
+/// Edge list of the thresholded graph: {(i,j) : |S_ij| > λ, i < j}.
+///
+/// Oracle path — O(p²) per call. Serving code should use
+/// `ScreenIndex::edges_above` instead.
+pub fn threshold_edges(s: &Mat, lambda: f64) -> Vec<(u32, u32)> {
+    dense_edges_above(s, lambda).into_iter().map(|e| (e.i, e.j)).collect()
 }
 
 /// The thresholded sample covariance graph G(λ).
@@ -46,34 +131,18 @@ pub fn concentration_partition(theta: &Mat, zero_tol: f64) -> Partition {
     components_bfs(&g)
 }
 
-/// Number of edges |E(λ)| without materializing them.
+/// Number of edges |E(λ)| — oracle path; `ScreenIndex::edge_count` answers
+/// this with one binary search.
 pub fn count_edges(s: &Mat, lambda: f64) -> usize {
-    let p = s.rows();
-    let mut cnt = 0usize;
-    for i in 0..p {
-        let row = s.row(i);
-        for j in (i + 1)..p {
-            if row[j].abs() > lambda {
-                cnt += 1;
-            }
-        }
-    }
-    cnt
+    dense_edges_above(s, lambda).len()
 }
 
 /// All distinct off-diagonal magnitudes |S_ij| sorted DESCENDING — the
 /// candidate set where components can change ("the connected components
 /// change only at the absolute values of the entries of S", §4.2).
 pub fn sorted_offdiag_magnitudes(s: &Mat) -> Vec<f64> {
-    assert!(s.is_square());
-    let p = s.rows();
-    let mut vals = Vec::with_capacity(p * (p - 1) / 2);
-    for i in 0..p {
-        let row = s.row(i);
-        for j in (i + 1)..p {
-            vals.push(row[j].abs());
-        }
-    }
+    let mut vals: Vec<f64> =
+        dense_edges_above(s, f64::NEG_INFINITY).into_iter().map(|e| e.w).collect();
     vals.sort_by(|a, b| b.partial_cmp(a).unwrap());
     vals.dedup();
     vals
@@ -138,6 +207,41 @@ mod tests {
         let s = demo_s();
         let v = sorted_offdiag_magnitudes(&s);
         assert_eq!(v, vec![0.9, 0.3, 0.0]);
+    }
+
+    #[test]
+    fn parallel_scan_matches_sequential() {
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        // p=600 crosses the parallel threshold (512)
+        let p = 600;
+        let mut s = Mat::eye(p);
+        for i in 0..p {
+            for j in (i + 1)..p {
+                let v = rng.gaussian() * 0.2;
+                s.set(i, j, v);
+                s.set(j, i, v);
+            }
+        }
+        let seq = dense_edges_above(&s, 0.3);
+        for threads in [1usize, 2, 3, 8] {
+            let par = par_dense_edges_above(&s, 0.3, threads);
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn row_bands_cover_everything() {
+        for (p, k) in [(0usize, 4usize), (1, 4), (5, 2), (100, 7), (100, 200)] {
+            let bands = super::balanced_row_bands(p, k.max(1));
+            let mut next = 0usize;
+            for b in &bands {
+                assert_eq!(b.start, next, "p={p} k={k}");
+                next = b.end;
+            }
+            assert_eq!(next, p, "p={p} k={k}");
+            assert!(bands.len() <= k.max(1) || p == 0);
+        }
     }
 
     #[test]

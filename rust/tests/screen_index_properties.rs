@@ -1,0 +1,263 @@
+//! Property tests for the `ScreenIndex` subsystem, via `proptest_lite`.
+//!
+//! The index must be indistinguishable from the naive per-λ oracle scans
+//! it replaced (Theorem 1/2 invariants):
+//! - `partition_at(λ)` is BIT-IDENTICAL to `threshold_partition(S, λ)`
+//!   for arbitrary — not just descending — λ, including λ exactly at a
+//!   tie magnitude (strict `>` boundary) and heavy-tie matrices;
+//! - partitions nest as λ decreases (Theorem 2 on the index);
+//! - edge sets/counts match the dense rescans;
+//! - capacity and exact-K interval queries have the advertised semantics;
+//! - checkpoint density and construction source (dense scan vs streaming
+//!   Gram) never change any answer.
+
+use covthresh::datasets::covariance::{sample_correlation, standardize_columns};
+use covthresh::linalg::Mat;
+use covthresh::proptest_lite::{check_property, CaseResult, PropConfig};
+use covthresh::screen::index::ScreenIndex;
+use covthresh::screen::profile::weighted_edges;
+use covthresh::screen::{threshold_edges, threshold_partition};
+use covthresh::util::rng::Xoshiro256;
+
+/// Random covariance; half the cases quantize off-diagonals to eighths so
+/// tie groups with many members are common (the hard case for grouped
+/// activation and for the strict-> boundary).
+fn random_cov(size: usize, rng: &mut Xoshiro256) -> Mat {
+    let n = 2 * size + 3;
+    let x = Mat::from_fn(n, size, |_, _| rng.gaussian());
+    let mut s = covthresh::datasets::covariance::sample_covariance(&x);
+    if rng.bernoulli(0.5) {
+        for i in 0..size {
+            for j in (i + 1)..size {
+                let q = (s.get(i, j) * 8.0).round() / 8.0;
+                s.set(i, j, q);
+                s.set(j, i, q);
+            }
+        }
+    }
+    s
+}
+
+/// λ probes in deliberately shuffled order: random values, exact tie
+/// magnitudes, just-below magnitudes, 0, and above-max.
+fn probes(index: &ScreenIndex, max_off: f64, rng: &mut Xoshiro256) -> Vec<f64> {
+    let mut probes: Vec<f64> = (0..6).map(|_| rng.uniform() * 1.1 * max_off).collect();
+    for &w in index.distinct_magnitudes().iter().take(5) {
+        probes.push(w);
+        probes.push((w - 1e-12).max(0.0));
+    }
+    probes.push(0.0);
+    probes.push(1.2 * max_off + 0.1);
+    rng.shuffle(&mut probes);
+    probes
+}
+
+#[test]
+fn index_partition_bit_identical_to_naive_at_arbitrary_lambda() {
+    check_property(
+        "index: partition_at(λ) == threshold_partition(S, λ), random-access λ",
+        &PropConfig { cases: 25, min_size: 2, max_size: 24, base_seed: 0x1D7 },
+        |seed, size, rng| {
+            let s = random_cov(size, rng);
+            let index = ScreenIndex::from_dense(&s);
+            let max_off = s.max_abs_offdiag().max(1e-9);
+            for lambda in probes(&index, max_off, rng) {
+                let naive = threshold_partition(&s, lambda);
+                let fast = index.partition_at(lambda);
+                if fast.labels() != naive.labels() {
+                    return CaseResult::Fail(format!(
+                        "seed={seed} λ={lambda}: index {} comps vs naive {}",
+                        fast.n_components(),
+                        naive.n_components()
+                    ));
+                }
+                // Edge SET equality, not just the partition.
+                let mut naive_edges = threshold_edges(&s, lambda);
+                naive_edges.sort_unstable();
+                let mut idx_edges: Vec<(u32, u32)> =
+                    index.edges_above(lambda).iter().map(|e| (e.i, e.j)).collect();
+                idx_edges.sort_unstable();
+                if naive_edges != idx_edges {
+                    return CaseResult::Fail(format!(
+                        "seed={seed} λ={lambda}: edge sets differ ({} vs {})",
+                        idx_edges.len(),
+                        naive_edges.len()
+                    ));
+                }
+                if index.n_components_at(lambda) != naive.n_components()
+                    || index.max_component_size_at(lambda) != naive.max_component_size()
+                {
+                    return CaseResult::Fail(format!(
+                        "seed={seed} λ={lambda}: summary queries disagree"
+                    ));
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn index_partitions_nest_as_lambda_decreases() {
+    check_property(
+        "index: theorem-2 nesting over descending probes",
+        &PropConfig { cases: 20, min_size: 3, max_size: 20, base_seed: 0x2D7 },
+        |seed, size, rng| {
+            let s = random_cov(size, rng);
+            let index = ScreenIndex::from_dense(&s);
+            let max_off = s.max_abs_offdiag().max(1e-9);
+            let mut lambdas = probes(&index, max_off, rng);
+            lambdas.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let mut prev: Option<covthresh::graph::Partition> = None;
+            for &lambda in &lambdas {
+                let part = index.partition_at(lambda);
+                if let Some(prev) = &prev {
+                    if !prev.is_refinement_of(&part) {
+                        return CaseResult::Fail(format!(
+                            "seed={seed} λ={lambda}: larger-λ partition is not a refinement"
+                        ));
+                    }
+                }
+                prev = Some(part);
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn checkpoint_density_never_changes_answers() {
+    check_property(
+        "index: partition_at invariant to checkpoint spacing",
+        &PropConfig { cases: 15, min_size: 2, max_size: 18, base_seed: 0x3D7 },
+        |seed, size, rng| {
+            let s = random_cov(size, rng);
+            let reference = ScreenIndex::from_dense(&s);
+            let max_off = s.max_abs_offdiag().max(1e-9);
+            let lambdas = probes(&reference, max_off, rng);
+            for every in [1usize, 3, 17, usize::MAX / 2] {
+                let idx =
+                    ScreenIndex::from_edges_with_checkpoints(size, weighted_edges(&s, 0.0), every);
+                for &lambda in &lambdas {
+                    if idx.partition_at(lambda).labels()
+                        != reference.partition_at(lambda).labels()
+                    {
+                        return CaseResult::Fail(format!(
+                            "seed={seed} λ={lambda} every={every}: partitions diverge"
+                        ));
+                    }
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn capacity_query_semantics() {
+    check_property(
+        "index: lambda_for_capacity is the smallest feasible λ",
+        &PropConfig { cases: 15, min_size: 2, max_size: 16, base_seed: 0x4D7 },
+        |seed, size, rng| {
+            let s = random_cov(size, rng);
+            let index = ScreenIndex::from_dense(&s);
+            for p_max in 1..=size {
+                let lam = index.lambda_for_capacity(p_max);
+                let at = threshold_partition(&s, lam).max_component_size();
+                if at > p_max {
+                    return CaseResult::Fail(format!(
+                        "seed={seed} p_max={p_max}: λ={lam} yields max comp {at}"
+                    ));
+                }
+                if lam > 0.0 {
+                    // Just below λ the capacity must be violated (λ is minimal).
+                    let below = index
+                        .distinct_magnitudes()
+                        .iter()
+                        .copied()
+                        .find(|&w| w < lam)
+                        .unwrap_or(0.0);
+                    let mid = 0.5 * (below + lam);
+                    if mid < lam
+                        && threshold_partition(&s, mid).max_component_size() <= p_max
+                    {
+                        return CaseResult::Fail(format!(
+                            "seed={seed} p_max={p_max}: λ={lam} not minimal (ok at {mid})"
+                        ));
+                    }
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn interval_query_semantics() {
+    check_property(
+        "index: lambda_interval_for_k yields exactly k components inside",
+        &PropConfig { cases: 15, min_size: 2, max_size: 16, base_seed: 0x5D7 },
+        |seed, size, rng| {
+            let s = random_cov(size, rng);
+            let index = ScreenIndex::from_dense(&s);
+            for k in 1..=size {
+                let Some((lo, hi)) = index.lambda_interval_for_k(k) else { continue };
+                if lo >= hi {
+                    return CaseResult::Fail(format!("seed={seed} k={k}: empty interval"));
+                }
+                // Left end is included ([lo, hi)); probe it and a midpoint.
+                for lambda in [lo, if hi.is_finite() { 0.5 * (lo + hi) } else { lo + 1.0 }] {
+                    let n = threshold_partition(&s, lambda).n_components();
+                    if n != k {
+                        return CaseResult::Fail(format!(
+                            "seed={seed} k={k}: {n} components at λ={lambda} ∈ [{lo},{hi})"
+                        ));
+                    }
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn streaming_index_matches_dense_index() {
+    check_property(
+        "index: from_standardized == from_dense_above on correlations",
+        &PropConfig { cases: 12, min_size: 3, max_size: 20, base_seed: 0x6D7 },
+        |seed, size, rng| {
+            let n = 3 * size + 5;
+            let x = Mat::from_fn(n, size, |_, _| rng.gaussian());
+            let s = sample_correlation(&x);
+            let mut z = x;
+            standardize_columns(&mut z);
+            let floor = 0.15;
+            let dense = ScreenIndex::from_dense_above(&s, floor);
+            let block = 1 + rng.uniform_usize(size + 2);
+            let streamed = ScreenIndex::from_standardized(&z, floor, block);
+            if dense.n_edges() != streamed.n_edges() {
+                return CaseResult::Fail(format!(
+                    "seed={seed}: {} dense vs {} streamed edges",
+                    dense.n_edges(),
+                    streamed.n_edges()
+                ));
+            }
+            // Probe midpoints between adjacent magnitudes (away from the
+            // f64 dust between the two Gram computations).
+            let mags = dense.distinct_magnitudes();
+            let mut lambdas = vec![floor, 1.0];
+            for w in mags.windows(2) {
+                lambdas.push(0.5 * (w[0] + w[1]));
+            }
+            for &lambda in &lambdas {
+                if streamed.partition_at(lambda).labels() != dense.partition_at(lambda).labels()
+                {
+                    return CaseResult::Fail(format!(
+                        "seed={seed} λ={lambda}: streamed partition diverges"
+                    ));
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
