@@ -1,0 +1,133 @@
+//! L3 kernel micro-bench — GFLOP/s, serial vs pooled/tiled, across sizes.
+//!
+//! Times the forced serial and forced tiled paths of `gemm` and `syrk_t`
+//! plus the scalar and blocked Cholesky, so the pooled speedup (and the
+//! small-size serial-path noise floor) lands in the bench trajectory.
+//!
+//! Output: human summary on stdout plus `bench_out/BENCH_linalg.json`.
+//!
+//! Run: `cargo bench --bench linalg_kernels`
+//!   LINALG_SIZES=64,128,256,512  comma-separated p values
+//!   LINALG_BUDGET=1.5            seconds of timing budget per case
+
+use covthresh::bench_harness::{bench_auto, fmt_time, BenchStats};
+use covthresh::linalg::blas;
+use covthresh::linalg::{Cholesky, Mat};
+use covthresh::util::json::Json;
+use covthresh::util::pool;
+use covthresh::util::rng::Xoshiro256;
+
+fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.gaussian())
+}
+
+fn random_spd(p: usize, seed: u64) -> Mat {
+    let b = random_mat(p, p, seed);
+    let mut a = blas::syrk_t_serial(&b);
+    for i in 0..p {
+        a.add_at(i, i, p as f64);
+    }
+    a
+}
+
+struct Case {
+    kernel: &'static str,
+    p: usize,
+    flops: f64,
+    serial: BenchStats,
+    pooled: BenchStats,
+}
+
+impl Case {
+    fn gflops(&self, stats: &BenchStats) -> f64 {
+        self.flops / stats.median_s.max(1e-12) / 1e9
+    }
+    fn speedup(&self) -> f64 {
+        self.serial.median_s / self.pooled.median_s.max(1e-12)
+    }
+    fn report(&self) -> String {
+        format!(
+            "{:<8} p={:<5} serial {:>10} ({:6.2} GF/s)  pooled {:>10} ({:6.2} GF/s)  {:5.2}x",
+            self.kernel,
+            self.p,
+            fmt_time(self.serial.median_s),
+            self.gflops(&self.serial),
+            fmt_time(self.pooled.median_s),
+            self.gflops(&self.pooled),
+            self.speedup(),
+        )
+    }
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kernel", self.kernel.into())
+            .set("p", self.p.into())
+            .set("flops", self.flops.into())
+            .set("serial_gflops", self.gflops(&self.serial).into())
+            .set("pooled_gflops", self.gflops(&self.pooled).into())
+            .set("speedup", self.speedup().into())
+            .set("serial", self.serial.to_json())
+            .set("pooled", self.pooled.to_json());
+        o
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let sizes: Vec<usize> = std::env::var("LINALG_SIZES")
+        .unwrap_or_else(|_| "64,128,256,512".to_string())
+        .split(',')
+        .filter_map(|t| t.trim().parse().ok())
+        .collect();
+    let budget: f64 =
+        std::env::var("LINALG_BUDGET").ok().and_then(|v| v.parse().ok()).unwrap_or(1.0);
+    let threads = pool::max_threads();
+
+    println!("== linalg kernels: threads={threads}, sizes={sizes:?}, budget={budget}s ==");
+
+    let mut cases: Vec<Case> = Vec::new();
+    for &p in &sizes {
+        // gemm: C = A·B, 2p³ flops
+        let a = random_mat(p, p, 10 + p as u64);
+        let b = random_mat(p, p, 20 + p as u64);
+        let serial =
+            bench_auto(&format!("gemm/serial/p{p}"), budget, || blas::gemm_serial(&a, &b));
+        let pooled =
+            bench_auto(&format!("gemm/pooled/p{p}"), budget, || blas::gemm_tiled(&a, &b));
+        let case =
+            Case { kernel: "gemm", p, flops: 2.0 * (p as f64).powi(3), serial, pooled };
+        println!("{}", case.report());
+        cases.push(case);
+
+        // syrk_t: C = AᵀA with A p×p — n·p·(p+1) ≈ p³ flops
+        let serial =
+            bench_auto(&format!("syrk_t/serial/p{p}"), budget, || blas::syrk_t_serial(&a));
+        let pooled =
+            bench_auto(&format!("syrk_t/pooled/p{p}"), budget, || blas::syrk_t_tiled(&a));
+        let flops = p as f64 * p as f64 * (p as f64 + 1.0);
+        let case = Case { kernel: "syrk_t", p, flops, serial, pooled };
+        println!("{}", case.report());
+        cases.push(case);
+
+        // cholesky: p³/3 flops
+        let spd = random_spd(p, 30 + p as u64);
+        let serial = bench_auto(&format!("chol/scalar/p{p}"), budget, || {
+            Cholesky::new_scalar(&spd).unwrap()
+        });
+        let pooled = bench_auto(&format!("chol/blocked/p{p}"), budget, || {
+            Cholesky::new_blocked(&spd).unwrap()
+        });
+        let case = Case { kernel: "chol", p, flops: (p as f64).powi(3) / 3.0, serial, pooled };
+        println!("{}", case.report());
+        cases.push(case);
+    }
+
+    let mut out = Json::obj();
+    out.set("threads", threads.into())
+        .set("tile", blas::TILE.into())
+        .set("sizes", Json::Arr(sizes.iter().map(|&p| p.into()).collect()))
+        .set("results", Json::Arr(cases.iter().map(Case::to_json).collect()));
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/BENCH_linalg.json", out.to_string())?;
+    println!("wrote bench_out/BENCH_linalg.json");
+    Ok(())
+}

@@ -20,6 +20,17 @@
 //! partition LRU keyed by the tie group each λ falls into), and call
 //! `solve_screened_indexed`: the screen phase becomes two binary searches
 //! plus, on a cache miss, a checkpoint replay. Zero O(p²) rescans per λ.
+//!
+//! **Execution & the pool's permit scheme**: `CoordinatorConfig::n_machines`
+//! defaults to the shared pool width (`available_parallelism()`,
+//! overridable with `COVTHRESH_THREADS` — see `crate::util::pool`). With
+//! `parallel = true` each machine runs as one pool task; the pooled
+//! linalg kernels detect they are inside a task and run inline (the
+//! permit scheme), so machines × kernels never oversubscribes cores. The
+//! flip side: when screening leaves one giant block, the serial
+//! coordinator path (`parallel = false`) lets that block's own kernels
+//! claim the whole pool — the right mode when block-level parallelism is
+//! scarce.
 
 pub mod assemble;
 pub mod partitioner;
@@ -48,7 +59,8 @@ use std::sync::{Arc, Mutex};
 /// Coordinator configuration (the simulated distributed fabric).
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
-    /// number of machines in the fabric
+    /// number of machines in the fabric (default: the shared pool width —
+    /// `available_parallelism()`, overridable via `COVTHRESH_THREADS`)
     pub n_machines: usize,
     /// per-machine maximum solvable block size (p_max)
     pub capacity: usize,
@@ -61,7 +73,7 @@ pub struct CoordinatorConfig {
 impl Default for CoordinatorConfig {
     fn default() -> Self {
         CoordinatorConfig {
-            n_machines: 4,
+            n_machines: crate::util::pool::max_threads(),
             capacity: usize::MAX,
             parallel: false,
             cost_model: CostModel::default(),

@@ -1,11 +1,16 @@
-//! Worker fabric: executes scheduled sub-problems on a pool of threads,
+//! Worker fabric: executes scheduled sub-problems on the shared pool,
 //! one logical "machine" per schedule slot (§2 consequence 4/5's
 //! distributed architecture, simulated in-process).
 //!
 //! Serial mode (`parallel = false`) reproduces the paper's Table-1
 //! methodology — "operated serially, the times reflect the total time
-//! summed across all blocks" — while parallel mode exercises the same
-//! dispatch machinery across threads and reports the true makespan.
+//! summed across all blocks" — while parallel mode runs each machine as
+//! one task on the crate-wide pool ([`crate::util::pool`]) and reports
+//! the true makespan. Because machines run *as pool tasks*, the pooled
+//! linalg kernels they call nest inline (the pool's permit scheme), so a
+//! run never oversubscribes cores; each sub-problem's Θ is computed by
+//! the same serial kernel code on either path, keeping serial and
+//! parallel results bit-identical.
 
 use super::assemble::SolvedBlock;
 use super::partitioner::SubProblem;
@@ -41,28 +46,32 @@ pub fn run_blocks(
         return Ok(out);
     }
 
-    // Parallel path: one worker thread per machine, each executing its
+    // Parallel path: one pool task per machine, each executing its
     // assigned components in order.
     let results: Mutex<Vec<Option<Result<SolvedBlock>>>> =
         Mutex::new((0..subproblems.len()).map(|_| None).collect());
 
-    std::thread::scope(|scope| {
-        for (machine, comps) in schedule.per_machine.iter().enumerate() {
-            if comps.is_empty() {
-                continue;
-            }
-            let results = &results;
-            let warm = &warm;
-            scope.spawn(move || {
-                for &c in comps {
-                    let sp = &subproblems[c];
-                    let w = warm.get(c).and_then(|w| w.as_ref());
-                    let r = solve_one(backend, sp, w, lambda, machine);
-                    results.lock().unwrap()[c] = Some(r);
-                }
-            });
-        }
-    });
+    {
+        let results = &results;
+        let warm = &warm;
+        let tasks: Vec<crate::util::pool::Task<'_>> = schedule
+            .per_machine
+            .iter()
+            .enumerate()
+            .filter(|(_, comps)| !comps.is_empty())
+            .map(|(machine, comps)| {
+                Box::new(move || {
+                    for &c in comps {
+                        let sp = &subproblems[c];
+                        let w = warm.get(c).and_then(|w| w.as_ref());
+                        let r = solve_one(backend, sp, w, lambda, machine);
+                        results.lock().unwrap()[c] = Some(r);
+                    }
+                }) as crate::util::pool::Task<'_>
+            })
+            .collect();
+        crate::util::pool::global().scope(tasks);
+    }
 
     let collected = results.into_inner().unwrap();
     let mut out = Vec::with_capacity(subproblems.len());

@@ -63,6 +63,9 @@ pub fn impute_global_mean(x: &mut Mat) -> usize {
 
 /// Sample covariance matrix S = (1/n) (X - x̄)ᵀ (X - x̄).
 /// (MLE normalization 1/n, matching the glasso likelihood (1).)
+/// The Gram product runs through `blas::syrk_t`, which tiles the p×p
+/// output across the shared pool once n·p²/2 madds cross the L3 cutoff —
+/// the dominant cost of forming S at microarray scale.
 pub fn sample_covariance(x: &Mat) -> Mat {
     let (n, p) = (x.rows(), x.cols());
     assert!(n > 0 && p > 0);

@@ -30,6 +30,13 @@
 //! artifacts via PJRT on the hot path (stubbed when the PJRT binding is
 //! not vendored).
 //!
+//! Execution: all parallel work — tiled L3 kernels (`linalg::blas`),
+//! blocked Cholesky, screen scans, the coordinator's machine fabric —
+//! runs on one shared thread pool (`util::pool`, sized from
+//! `available_parallelism()`, overridable via `COVTHRESH_THREADS`) with
+//! a permit scheme that keeps nested parallelism from oversubscribing
+//! cores. Results are bit-identical at any pool width.
+//!
 //! Layering (Python never runs at request time):
 //! - L3: this crate — screening (`ScreenIndex`), partitioning, scheduling,
 //!   serving.

@@ -1,8 +1,51 @@
-//! BLAS-like kernels over `Mat`: dot/axpy (L1), gemv/symv (L2), gemm/syrk
-//! (L3). Cache-aware loop orders; no unsafe, no SIMD intrinsics — the
-//! compiler autovectorizes the inner `f64` loops.
+//! BLAS-like kernels over `Mat`: dot/axpy (L1), gemv/weighted-row-sum
+//! (L2), gemm/syrk (L3).
+//!
+//! # Execution model
+//!
+//! Every kernel dispatches on *problem size only*: below a flop cutoff it
+//! runs the original single-threaded loop (so the many-tiny-blocks regime
+//! after screening pays zero overhead), above it the work is split into
+//! fixed-ownership pieces executed on the shared pool
+//! ([`crate::util::pool`]). The L3 kernels are also cache-blocked:
+//!
+//! * [`gemm`] — row bands of C, each band computed with a 4-row fused
+//!   ikj micro-kernel (four accumulator rows share each streamed row of
+//!   B, quadrupling reuse of the B traffic; the compiler autovectorizes
+//!   the contiguous inner j loop).
+//! * [`syrk_t`] — the upper triangle of C = AᵀA is partitioned into
+//!   [`TILE`]×[`TILE`] tile pairs computed independently (s-outer
+//!   rank-1 accumulation per tile), then scattered with a per-tile block
+//!   mirror — replacing the serial scalar p² mirror pass.
+//! * [`gemv`]/[`gemv_t`]/[`weighted_row_sum`]/[`quad_form`] — banded
+//!   over rows (or output columns) above an L2 cutoff.
+//!
+//! # Determinism
+//!
+//! Chunk boundaries never depend on the runtime thread count in a way
+//! that changes summation order: each output element is owned by exactly
+//! one task and accumulated in the same (ascending-index) order as the
+//! serial kernel, so pooled and serial runs are bit-identical for finite
+//! inputs — `COVTHRESH_THREADS=1` reproduces the default width exactly.
+//! (The only caveat: the 4-row gemm micro-kernel folds `0.0 * b` terms
+//! the serial kernel skips, which is bitwise-neutral for finite data but
+//! would surface NaNs from Inf/NaN inputs the serial skip hides.)
+//! [`quad_form`] reduces fixed 256-row partials in index order, again
+//! independent of pool width.
 
 use super::matrix::Mat;
+use crate::util::pool::{self, Task};
+
+/// Edge length of the square output tiles used by the blocked `syrk_t`.
+pub const TILE: usize = 64;
+
+/// L3 kernels stay serial below this many multiply-adds (~1M ⇒ the
+/// crossover sits near p = 100 for square operands; tile bookkeeping and
+/// pool dispatch would dominate below it).
+const L3_SERIAL_MAX_MADDS: usize = 1 << 20;
+
+/// L2 kernels stay serial below this many multiply-adds.
+const L2_SERIAL_MAX_MADDS: usize = 1 << 20;
 
 /// Dot product.
 #[inline]
@@ -36,27 +79,133 @@ pub fn amax(x: &[f64]) -> f64 {
     x.iter().fold(0.0f64, |m, v| m.max(v.abs()))
 }
 
-/// y = A x  (A: m×n, x: n, y: m).
+/// y = A x  (A: m×n, x: n, y: m). Row bands run on the pool above the L2
+/// cutoff; each y_i is one `dot`, so banding never reorders a sum.
 pub fn gemv(a: &Mat, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.cols(), x.len());
     assert_eq!(a.rows(), y.len());
-    for i in 0..a.rows() {
-        y[i] = dot(a.row(i), x);
+    let (m, n) = (a.rows(), a.cols());
+    if m.saturating_mul(n) < L2_SERIAL_MAX_MADDS {
+        for i in 0..m {
+            y[i] = dot(a.row(i), x);
+        }
+        return;
     }
+    let p = pool::global();
+    let band = m.div_ceil(4 * p.n_threads()).max(64);
+    let tasks: Vec<Task<'_>> = y
+        .chunks_mut(band)
+        .enumerate()
+        .map(|(bi, chunk)| {
+            let row0 = bi * band;
+            Box::new(move || {
+                for (r, yi) in chunk.iter_mut().enumerate() {
+                    *yi = dot(a.row(row0 + r), x);
+                }
+            }) as Task<'_>
+        })
+        .collect();
+    p.scope(tasks);
 }
 
-/// y = Aᵀ x  (A: m×n, x: m, y: n).
+/// y = Aᵀ x  (A: m×n, x: m, y: n). Above the L2 cutoff, output columns
+/// are banded; each band still accumulates rows in ascending i order, so
+/// every y_j is summed exactly as in the serial loop.
 pub fn gemv_t(a: &Mat, x: &[f64], y: &mut [f64]) {
     assert_eq!(a.rows(), x.len());
     assert_eq!(a.cols(), y.len());
-    y.iter_mut().for_each(|v| *v = 0.0);
-    for i in 0..a.rows() {
-        axpy(x[i], a.row(i), y);
+    let (m, n) = (a.rows(), a.cols());
+    if m.saturating_mul(n) < L2_SERIAL_MAX_MADDS {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..m {
+            axpy(x[i], a.row(i), y);
+        }
+        return;
+    }
+    let p = pool::global();
+    let band = n.div_ceil(4 * p.n_threads()).max(64);
+    let tasks: Vec<Task<'_>> = y
+        .chunks_mut(band)
+        .enumerate()
+        .map(|(bi, chunk)| {
+            let lo = bi * band;
+            Box::new(move || {
+                let w = chunk.len();
+                chunk.iter_mut().for_each(|v| *v = 0.0);
+                for i in 0..m {
+                    let xi = x[i];
+                    let src = &a.row(i)[lo..lo + w];
+                    for (o, s) in chunk.iter_mut().zip(src) {
+                        *o += xi * *s;
+                    }
+                }
+            }) as Task<'_>
+        })
+        .collect();
+    p.scope(tasks);
+}
+
+/// out = Σ_l coef[l] · A[l, :]  (A: m×n, coef: m, out: n) — the
+/// weighted-row-sum behind glasso's W·β column updates. Rows with a zero
+/// coefficient are skipped in both paths (β is sparse at large λ), and
+/// the pooled path keeps the same ascending-l accumulation per output
+/// element, so both paths are bit-identical.
+pub fn weighted_row_sum(a: &Mat, coef: &[f64], out: &mut [f64]) {
+    assert_eq!(a.rows(), coef.len());
+    assert_eq!(a.cols(), out.len());
+    let (m, n) = (a.rows(), a.cols());
+    if m.saturating_mul(n) < L2_SERIAL_MAX_MADDS {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for l in 0..m {
+            let c = coef[l];
+            if c != 0.0 {
+                axpy(c, a.row(l), out);
+            }
+        }
+        return;
+    }
+    let p = pool::global();
+    let band = n.div_ceil(4 * p.n_threads()).max(64);
+    let tasks: Vec<Task<'_>> = out
+        .chunks_mut(band)
+        .enumerate()
+        .map(|(bi, chunk)| {
+            let lo = bi * band;
+            Box::new(move || {
+                let w = chunk.len();
+                chunk.iter_mut().for_each(|v| *v = 0.0);
+                for l in 0..m {
+                    let c = coef[l];
+                    if c == 0.0 {
+                        continue;
+                    }
+                    let src = &a.row(l)[lo..lo + w];
+                    for (o, s) in chunk.iter_mut().zip(src) {
+                        *o += c * *s;
+                    }
+                }
+            }) as Task<'_>
+        })
+        .collect();
+    p.scope(tasks);
+}
+
+/// C = A · B. Dispatches by madd count: serial ikj below the L3 cutoff,
+/// pooled row-banded tiled kernel above it. Both paths produce bitwise
+/// identical results for finite inputs (see module doc).
+pub fn gemm(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "gemm inner dim mismatch");
+    let madds = a.rows().saturating_mul(a.cols()).saturating_mul(b.cols());
+    if madds < L3_SERIAL_MAX_MADDS {
+        gemm_serial(a, b)
+    } else {
+        gemm_tiled(a, b)
     }
 }
 
-/// C = A · B (ikj loop order: streams B's rows, good for row-major).
-pub fn gemm(a: &Mat, b: &Mat) -> Mat {
+/// The original single-threaded gemm (ikj loop order: streams B's rows,
+/// good for row-major). Public so benches/tests can force the path.
+pub fn gemm_serial(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.rows(), "gemm inner dim mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut c = Mat::zeros(m, n);
@@ -74,8 +223,96 @@ pub fn gemm(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// Pooled, cache-blocked gemm: C's rows are banded across the pool and
+/// each band runs the 4-row fused ikj micro-kernel. Public so
+/// benches/tests can force the path regardless of size.
+pub fn gemm_tiled(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "gemm inner dim mismatch");
+    let (m, n) = (a.rows(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 || a.cols() == 0 {
+        return c;
+    }
+    let p = pool::global();
+    let band = m.div_ceil(4 * p.n_threads()).max(4);
+    let tasks: Vec<Task<'_>> = c
+        .as_mut_slice()
+        .chunks_mut(band * n)
+        .enumerate()
+        .map(|(bi, chunk)| {
+            let row0 = bi * band;
+            Box::new(move || gemm_band(a, b, row0, chunk)) as Task<'_>
+        })
+        .collect();
+    p.scope(tasks);
+    c
+}
+
+/// One row band of C = A·B: 4-row fused ikj micro-kernel. Four C rows
+/// accumulate against each streamed B row, so each load of B feeds four
+/// madds; the j loop is contiguous in all five operands and vectorizes.
+fn gemm_band(a: &Mat, b: &Mat, row0: usize, cband: &mut [f64]) {
+    let k = a.cols();
+    let n = b.cols();
+    debug_assert!(n > 0 && cband.len() % n == 0);
+    let mut rows: Vec<&mut [f64]> = cband.chunks_mut(n).collect();
+    let mut r = row0;
+    for quad in rows.chunks_mut(4) {
+        match quad {
+            [c0, c1, c2, c3] => {
+                let (a0, a1, a2, a3) = (a.row(r), a.row(r + 1), a.row(r + 2), a.row(r + 3));
+                for l in 0..k {
+                    let (v0, v1, v2, v3) = (a0[l], a1[l], a2[l], a3[l]);
+                    if v0 == 0.0 && v1 == 0.0 && v2 == 0.0 && v3 == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(l);
+                    for j in 0..n {
+                        let bv = brow[j];
+                        c0[j] += v0 * bv;
+                        c1[j] += v1 * bv;
+                        c2[j] += v2 * bv;
+                        c3[j] += v3 * bv;
+                    }
+                }
+                r += 4;
+            }
+            rest => {
+                // remainder rows (< 4): plain serial kernel
+                for crow in rest.iter_mut() {
+                    let arow = a.row(r);
+                    for l in 0..k {
+                        let av = arow[l];
+                        if av != 0.0 {
+                            axpy(av, b.row(l), crow);
+                        }
+                    }
+                    r += 1;
+                }
+            }
+        }
+    }
+}
+
 /// C = Aᵀ · A  (A: n×p → C: p×p), the Gram matrix kernel used to form S.
+/// Serial below the L3 cutoff; above it, upper-triangle tile pairs run on
+/// the pool and each tile is mirrored blockwise into the lower triangle
+/// (replacing the serial scalar p² mirror pass). Bit-identical across
+/// paths: both accumulate each C_ij over samples s in ascending order
+/// with the identical `row[i] == 0` skip.
 pub fn syrk_t(a: &Mat) -> Mat {
+    let (n, p) = (a.rows(), a.cols());
+    let madds = n.saturating_mul(p).saturating_mul(p) / 2;
+    if madds < L3_SERIAL_MAX_MADDS || p < 2 * TILE {
+        syrk_t_serial(a)
+    } else {
+        syrk_t_tiled(a)
+    }
+}
+
+/// The original single-threaded syrk (s-outer rank-1 accumulation of the
+/// upper triangle, then a scalar mirror). Public to force the path.
+pub fn syrk_t_serial(a: &Mat) -> Mat {
     let (n, p) = (a.rows(), a.cols());
     let mut c = Mat::zeros(p, p);
     // accumulate rank-1 updates row by row; only upper triangle, then mirror.
@@ -102,15 +339,94 @@ pub fn syrk_t(a: &Mat) -> Mat {
     c
 }
 
-/// Quadratic form xᵀ A x for square A.
+/// Pooled, tiled syrk: each upper-triangle TILE×TILE tile pair of C is
+/// accumulated independently into a local buffer, then scattered and
+/// block-mirrored. Public to force the path.
+pub fn syrk_t_tiled(a: &Mat) -> Mat {
+    let p = a.cols();
+    let mut c = Mat::zeros(p, p);
+    if p == 0 {
+        return c;
+    }
+    let nb = p.div_ceil(TILE);
+    let pairs: Vec<(usize, usize)> =
+        (0..nb).flat_map(|bi| (bi..nb).map(move |bj| (bi, bj))).collect();
+    let bufs = pool::global().run(pairs.len(), |t| {
+        let (bi, bj) = pairs[t];
+        syrk_tile(a, bi, bj)
+    });
+    // serial scatter: upper-triangle copy + per-tile block mirror
+    for (&(bi, bj), buf) in pairs.iter().zip(bufs.iter()) {
+        let (ilo, ihi) = (bi * TILE, ((bi + 1) * TILE).min(p));
+        let (jlo, jhi) = (bj * TILE, ((bj + 1) * TILE).min(p));
+        let jw = jhi - jlo;
+        for (ii, i) in (ilo..ihi).enumerate() {
+            let jstart = if bi == bj { ii } else { 0 };
+            c.row_mut(i)[jlo + jstart..jhi].copy_from_slice(&buf[ii * jw + jstart..(ii + 1) * jw]);
+        }
+        // mirror: C[j][i] = C[i][j] for i < j within this tile pair
+        for (jj, j) in (jlo..jhi).enumerate() {
+            let imax = ihi.min(j);
+            let crow = c.row_mut(j);
+            for i in ilo..imax {
+                crow[i] = buf[(i - ilo) * jw + jj];
+            }
+        }
+    }
+    c
+}
+
+/// One TILE×TILE tile (bi, bj) of C = AᵀA, accumulated s-outer exactly
+/// like the serial kernel (same skip, same order ⇒ same bits).
+fn syrk_tile(a: &Mat, bi: usize, bj: usize) -> Vec<f64> {
+    let (n, p) = (a.rows(), a.cols());
+    let (ilo, ihi) = (bi * TILE, ((bi + 1) * TILE).min(p));
+    let (jlo, jhi) = (bj * TILE, ((bj + 1) * TILE).min(p));
+    let (iw, jw) = (ihi - ilo, jhi - jlo);
+    let mut buf = vec![0.0f64; iw * jw];
+    let diag = bi == bj;
+    for s in 0..n {
+        let row = a.row(s);
+        let rj = &row[jlo..jhi];
+        for (ii, &ri) in row[ilo..ihi].iter().enumerate() {
+            if ri == 0.0 {
+                continue;
+            }
+            let jstart = if diag { ii } else { 0 };
+            let dst = &mut buf[ii * jw..(ii + 1) * jw];
+            for jj in jstart..jw {
+                dst[jj] += ri * rj[jj];
+            }
+        }
+    }
+    buf
+}
+
+/// Quadratic form xᵀ A x for square A. Above the L2 cutoff, fixed
+/// 256-row partial sums are reduced in index order — the chunking depends
+/// only on the size, so the result is identical at any pool width.
 pub fn quad_form(a: &Mat, x: &[f64]) -> f64 {
     assert!(a.is_square());
     assert_eq!(a.rows(), x.len());
-    let mut acc = 0.0;
-    for i in 0..a.rows() {
-        acc += x[i] * dot(a.row(i), x);
+    let m = a.rows();
+    if m.saturating_mul(m) < L2_SERIAL_MAX_MADDS {
+        let mut acc = 0.0;
+        for i in 0..m {
+            acc += x[i] * dot(a.row(i), x);
+        }
+        return acc;
     }
-    acc
+    const QF_CHUNK: usize = 256;
+    let partials = pool::global().run(m.div_ceil(QF_CHUNK), |ci| {
+        let lo = ci * QF_CHUNK;
+        let hi = (lo + QF_CHUNK).min(m);
+        let mut acc = 0.0;
+        for i in lo..hi {
+            acc += x[i] * dot(a.row(i), x);
+        }
+        acc
+    });
+    partials.iter().sum()
 }
 
 #[cfg(test)]
@@ -172,5 +488,61 @@ mod tests {
         let x = [1.0, -1.0];
         // xᵀAx = 2 -1 -1 +3 = 3
         assert_eq!(quad_form(&a, &x), 3.0);
+    }
+
+    #[test]
+    fn weighted_row_sum_matches_axpy_loop() {
+        let a = Mat::from_fn(7, 5, |i, j| (i as f64 - 2.0) * 0.3 + j as f64 * 0.1);
+        let coef = [0.5, 0.0, -1.0, 0.0, 2.0, 0.25, -0.125];
+        let mut got = vec![1.0; 5]; // nonzero: must be overwritten
+        weighted_row_sum(&a, &coef, &mut got);
+        let mut want = vec![0.0; 5];
+        for l in 0..7 {
+            if coef[l] != 0.0 {
+                axpy(coef[l], a.row(l), &mut want);
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn tiled_gemm_bitwise_matches_serial() {
+        // straddle the quad micro-kernel remainder: 4k, 4k+1, ... rows
+        for m in [1usize, 3, 4, 5, 8, 11] {
+            let a = Mat::from_fn(m, 9, |i, j| ((i * 9 + j) as f64).sin());
+            let b = Mat::from_fn(9, 7, |i, j| ((i * 7 + j) as f64).cos());
+            let serial = gemm_serial(&a, &b);
+            let tiled = gemm_tiled(&a, &b);
+            assert_eq!(serial.max_abs_diff(&tiled), 0.0, "m={m}");
+        }
+    }
+
+    #[test]
+    fn tiled_syrk_bitwise_matches_serial() {
+        for p in [1usize, 63, 64, 65, 130] {
+            let a = Mat::from_fn(17, p, |i, j| {
+                // inject exact zeros to exercise the skip
+                if (i + j) % 5 == 0 {
+                    0.0
+                } else {
+                    ((i * p + j) as f64).sin()
+                }
+            });
+            let serial = syrk_t_serial(&a);
+            let tiled = syrk_t_tiled(&a);
+            assert_eq!(serial.max_abs_diff(&tiled), 0.0, "p={p}");
+        }
+    }
+
+    #[test]
+    fn empty_shapes() {
+        let e = Mat::zeros(0, 0);
+        assert_eq!(gemm_tiled(&e, &e).rows(), 0);
+        assert_eq!(syrk_t_tiled(&e).rows(), 0);
+        let a = Mat::zeros(0, 3); // 0 samples, 3 variables
+        assert_eq!(syrk_t(&a), Mat::zeros(3, 3));
+        let b = Mat::zeros(3, 0);
+        let c = gemm(&b, &Mat::zeros(0, 4));
+        assert_eq!(c, Mat::zeros(3, 4));
     }
 }

@@ -2,9 +2,23 @@
 //!
 //! Used by the solvers (`smacs` gradient = Θ⁻¹, objective logdet, final
 //! Θ = W⁻¹ recovery checks) and by the KKT certifier.
+//!
+//! Two factorization paths: the scalar left-looking loop for small
+//! matrices, and a blocked right-looking factorization for n ≥ 192 whose
+//! panel solve and syrk-style trailing update run as row bands on the
+//! shared pool ([`crate::util::pool`]). The dispatch in [`Cholesky::new`]
+//! depends on n only, so results are deterministic at any pool width
+//! (banding assigns whole rows; each element's update order is fixed).
 
+use super::blas::dot;
 use super::matrix::Mat;
+use crate::util::pool::{self, Task};
 use anyhow::{bail, Result};
+
+/// Panel width of the blocked right-looking factorization.
+const CHOL_BLOCK: usize = 96;
+/// Below this order the scalar factorization wins (blocking overhead).
+const CHOL_BLOCKED_MIN: usize = 192;
 
 /// Lower-triangular Cholesky factor L with A = L·Lᵀ.
 #[derive(Clone, Debug)]
@@ -14,7 +28,19 @@ pub struct Cholesky {
 
 impl Cholesky {
     /// Factor an SPD matrix. Errors if a non-positive pivot is hit.
+    /// Dispatches on n only: scalar below [`CHOL_BLOCKED_MIN`], blocked
+    /// (pooled) at or above it.
     pub fn new(a: &Mat) -> Result<Cholesky> {
+        if a.rows() < CHOL_BLOCKED_MIN {
+            Self::new_scalar(a)
+        } else {
+            Self::new_blocked(a)
+        }
+    }
+
+    /// The scalar left-looking factorization (original kernel). Public so
+    /// tests/benches can force the path at any size.
+    pub fn new_scalar(a: &Mat) -> Result<Cholesky> {
         assert!(a.is_square());
         let n = a.rows();
         let mut l = Mat::zeros(n, n);
@@ -35,6 +61,111 @@ impl Cholesky {
                     l.set(i, j, (a.get(i, j) - s) / l.get(j, j));
                 }
             }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Blocked right-looking factorization: factor a [`CHOL_BLOCK`]-wide
+    /// diagonal block (scalar), triangular-solve the panel below it (row
+    /// bands on the pool), then apply the syrk-style trailing update
+    /// through a transposed panel copy (contiguous reads, row bands on
+    /// the pool). Public so tests/benches can force the path.
+    pub fn new_blocked(a: &Mat) -> Result<Cholesky> {
+        assert!(a.is_square());
+        let n = a.rows();
+        let pool = pool::global();
+        // copy A's lower triangle; the factorization happens in place
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            l.row_mut(i)[..=i].copy_from_slice(&a.row(i)[..=i]);
+        }
+        let mut k0 = 0;
+        while k0 < n {
+            let kend = (k0 + CHOL_BLOCK).min(n);
+            // 1) scalar factor of the diagonal block: the trailing updates
+            //    of earlier iterations already folded columns < k0 in, so
+            //    the inner sums only span [k0, j).
+            for i in k0..kend {
+                for j in k0..=i {
+                    let s = dot(&l.row(i)[k0..j], &l.row(j)[k0..j]);
+                    if i == j {
+                        let d = l.get(i, i) - s;
+                        if d <= 0.0 || !d.is_finite() {
+                            bail!("matrix not positive definite at pivot {i} (d={d})");
+                        }
+                        l.set(i, j, d.sqrt());
+                    } else {
+                        let v = (l.get(i, j) - s) / l.get(j, j);
+                        l.set(i, j, v);
+                    }
+                }
+            }
+            let m_rows = n - kend;
+            if m_rows == 0 {
+                break;
+            }
+            let band = m_rows.div_ceil(2 * pool.n_threads()).max(16);
+            // 2) panel solve: rows kend..n against the factored diagonal
+            //    block — forward substitution per row, banded on the pool.
+            {
+                let (head, tail) = l.as_mut_slice().split_at_mut(kend * n);
+                let head: &[f64] = head;
+                let tasks: Vec<Task<'_>> = tail
+                    .chunks_mut(band * n)
+                    .map(|chunk| {
+                        Box::new(move || {
+                            for row in chunk.chunks_mut(n) {
+                                for j in k0..kend {
+                                    let hrow = &head[j * n..j * n + j];
+                                    let s = dot(&row[k0..j], &hrow[k0..j]);
+                                    row[j] = (row[j] - s) / head[j * n + j];
+                                }
+                            }
+                        }) as Task<'_>
+                    })
+                    .collect();
+                pool.scope(tasks);
+            }
+            // 3) trailing update: L[i][j] -= Σ_t L[i][t]·L[j][t] over the
+            //    panel columns t ∈ [k0, kend), for kend ≤ j ≤ i. Read the
+            //    panel through a transposed copy so both factors stream
+            //    contiguously; per-element order is t-ascending, fixed.
+            let nb = kend - k0;
+            let mut pt = Mat::zeros(nb, m_rows);
+            for t in 0..nb {
+                let prow = pt.row_mut(t);
+                for (r, v) in prow.iter_mut().enumerate() {
+                    *v = l.get(kend + r, k0 + t);
+                }
+            }
+            let pt_ref = &pt;
+            let (_, tail) = l.as_mut_slice().split_at_mut(kend * n);
+            let tasks: Vec<Task<'_>> = tail
+                .chunks_mut(band * n)
+                .enumerate()
+                .map(|(bi, chunk)| {
+                    let base = bi * band;
+                    Box::new(move || {
+                        for (r, row) in chunk.chunks_mut(n).enumerate() {
+                            let li = base + r; // row kend + li of L
+                            let w = li + 1; // columns kend..=kend+li
+                            let dst = &mut row[kend..kend + w];
+                            for t in 0..nb {
+                                let lit = pt_ref.get(t, li);
+                                if lit == 0.0 {
+                                    continue;
+                                }
+                                let prow = &pt_ref.row(t)[..w];
+                                for (q, &pv) in prow.iter().enumerate() {
+                                    dst[q] -= lit * pv;
+                                }
+                            }
+                        }
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.scope(tasks);
+            k0 = kend;
         }
         Ok(Cholesky { l })
     }
@@ -234,5 +365,45 @@ mod tests {
     #[test]
     fn identity_logdet_zero() {
         assert_eq!(logdet_spd(&Mat::eye(4)).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn blocked_matches_scalar() {
+        // straddle the panel width (96) and the dispatch cutoff (192)
+        for n in [5usize, 95, 96, 97, 200] {
+            let a = random_spd(n, 7 + n as u64);
+            let sc = Cholesky::new_scalar(&a).unwrap();
+            let bl = Cholesky::new_blocked(&a).unwrap();
+            assert!(sc.factor().max_abs_diff(bl.factor()) < 1e-9, "n={n}");
+            let rec = gemm(bl.factor(), &bl.factor().transpose());
+            assert!(rec.max_abs_diff(&a) < 1e-8, "n={n}");
+            assert!((sc.logdet() - bl.logdet()).abs() < 1e-9, "n={n}");
+        }
+    }
+
+    #[test]
+    fn dispatch_is_size_only() {
+        let small = random_spd(20, 1);
+        assert_eq!(
+            Cholesky::new(&small).unwrap().factor().max_abs_diff(
+                Cholesky::new_scalar(&small).unwrap().factor()
+            ),
+            0.0
+        );
+        let big = random_spd(200, 2);
+        assert_eq!(
+            Cholesky::new(&big).unwrap().factor().max_abs_diff(
+                Cholesky::new_blocked(&big).unwrap().factor()
+            ),
+            0.0
+        );
+    }
+
+    #[test]
+    fn blocked_rejects_indefinite() {
+        let mut a = random_spd(200, 11);
+        a.set(150, 150, -3.0);
+        let err = Cholesky::new_blocked(&a).unwrap_err();
+        assert!(err.to_string().contains("not positive definite"), "{err}");
     }
 }

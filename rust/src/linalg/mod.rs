@@ -1,15 +1,19 @@
 //! Dense linear algebra substrate (no external BLAS/LAPACK).
 //!
-//! `matrix` — storage + elementwise ops; `blas` — L1/L2/L3 kernels;
-//! `chol` — SPD factorization/solves/logdet; `eigen` — Jacobi symmetric
-//! eigendecomposition (SMACS's per-iteration O(p³) kernel).
+//! `matrix` — storage + elementwise ops; `blas` — L1/L2/L3 kernels
+//! (cache-blocked and pooled above size cutoffs — see `blas` module doc);
+//! `chol` — SPD factorization/solves/logdet with a blocked right-looking
+//! path for large n; `eigen` — Jacobi symmetric eigendecomposition
+//! (SMACS's per-iteration O(p³) kernel). Parallel execution borrows the
+//! shared crate-wide pool (`crate::util::pool`); all kernels dispatch on
+//! problem size only, so outputs are independent of the pool width.
 
 pub mod blas;
 pub mod chol;
 pub mod eigen;
 pub mod matrix;
 
-pub use blas::{axpy, dot, gemm, gemv, nrm2, syrk_t};
+pub use blas::{axpy, dot, gemm, gemv, gemv_t, nrm2, quad_form, syrk_t, weighted_row_sum};
 pub use chol::{inverse_spd, is_positive_definite, logdet_spd, Cholesky};
 pub use eigen::{sym_eigen, SymEigen};
 pub use matrix::Mat;

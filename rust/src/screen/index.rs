@@ -80,9 +80,10 @@ impl ScreenIndex {
     }
 
     /// Build from a dense matrix keeping edges with |S_ij| > floor.
-    /// Construction parallelizes the O(p²) scan over row bands.
+    /// Construction parallelizes the O(p²) scan over row bands on the
+    /// shared pool (width = `pool::max_threads()`).
     pub fn from_dense_above(s: &Mat, floor: f64) -> ScreenIndex {
-        let threads = available_threads();
+        let threads = crate::util::pool::max_threads();
         let edges = super::threshold::par_dense_edges_above(s, floor, threads);
         ScreenIndex::build(s.rows(), edges, floor, None)
     }
@@ -346,10 +347,6 @@ impl ScreenIndex {
         }
         profile_with_sweep(self.sweep(), lambdas_desc)
     }
-}
-
-fn available_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 #[cfg(test)]

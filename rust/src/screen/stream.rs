@@ -14,12 +14,12 @@ use crate::linalg::Mat;
 
 /// Compute all edges {(i,j,|corr_ij|) : |corr_ij| > floor} from a
 /// column-standardized data matrix `z` (n×p, Zᵀ Z / n = correlation),
-/// streaming over `block`-column tiles. Tile pairs are scanned in
-/// parallel (`std::thread`), one chunk of pairs per core; chunks are
-/// concatenated in order so the output matches the sequential scan.
+/// streaming over `block`-column tiles. Tile-pair chunks are scanned on
+/// the shared pool ([`crate::util::pool`] — no per-call thread spawning);
+/// chunks are concatenated in order so the output matches the sequential
+/// scan.
 pub fn edges_above_from_standardized(z: &Mat, floor: f64, block: usize) -> Vec<WEdge> {
-    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    par_edges_above_from_standardized(z, floor, block, threads)
+    par_edges_above_from_standardized(z, floor, block, crate::util::pool::max_threads())
 }
 
 /// [`edges_above_from_standardized`] with an explicit thread count.
@@ -67,24 +67,14 @@ pub fn par_edges_above_from_standardized(
     }
 
     let chunk = pairs.len().div_ceil(n_threads);
+    let chunks: Vec<&[(usize, usize)]> = pairs.chunks(chunk).collect();
     let zt_ref = &zt;
-    let mut results: Vec<Vec<WEdge>> = Vec::with_capacity(n_threads);
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = pairs
-            .chunks(chunk)
-            .map(|chunk_pairs| {
-                scope.spawn(move || {
-                    let mut out = Vec::new();
-                    for &(bi, bj) in chunk_pairs {
-                        scan_tile_pair(zt_ref, bi, bj, block, inv_n, floor, &mut out);
-                    }
-                    out
-                })
-            })
-            .collect();
-        for h in handles {
-            results.push(h.join().expect("gram scan thread panicked"));
+    let results = crate::util::pool::global().run(chunks.len(), |c| {
+        let mut out = Vec::new();
+        for &(bi, bj) in chunks[c] {
+            scan_tile_pair(zt_ref, bi, bj, block, inv_n, floor, &mut out);
         }
+        out
     });
     let mut edges = Vec::with_capacity(results.iter().map(Vec::len).sum());
     for mut part in results {

@@ -44,33 +44,23 @@ pub fn dense_edges_above(s: &Mat, floor: f64) -> Vec<WEdge> {
 }
 
 /// Parallel variant of [`dense_edges_above`]: contiguous row bands with
-/// balanced upper-triangle work, one `std::thread` each. Bands are
+/// balanced upper-triangle work, executed on the shared pool
+/// ([`crate::util::pool`] — no per-call thread spawning). Bands are
 /// concatenated in order, so the output is identical to the sequential
-/// scan (same edges, same order).
+/// scan (same edges, same order) at any band count.
 pub fn par_dense_edges_above(s: &Mat, floor: f64, n_threads: usize) -> Vec<WEdge> {
     assert!(s.is_square());
     let p = s.rows();
     let n_threads = n_threads.clamp(1, p.max(1));
-    // Below ~512 rows the spawn overhead exceeds the scan itself.
+    // Below ~512 rows dispatch overhead exceeds the scan itself.
     if n_threads == 1 || p < 512 {
         return dense_edges_above(s, floor);
     }
     let bands = balanced_row_bands(p, n_threads);
-    let mut results: Vec<Vec<WEdge>> = Vec::with_capacity(bands.len());
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = bands
-            .into_iter()
-            .map(|band| {
-                scope.spawn(move || {
-                    let mut out = Vec::new();
-                    scan_rows_above(s, floor, band, &mut out);
-                    out
-                })
-            })
-            .collect();
-        for h in handles {
-            results.push(h.join().expect("screen scan thread panicked"));
-        }
+    let results = crate::util::pool::global().run(bands.len(), |b| {
+        let mut out = Vec::new();
+        scan_rows_above(s, floor, bands[b].clone(), &mut out);
+        out
     });
     let mut out = Vec::with_capacity(results.iter().map(Vec::len).sum());
     for mut band in results {

@@ -81,6 +81,7 @@ pub fn solve(
     let thr = if mean_abs_off_s > 0.0 { opts.tol * mean_abs_off_s } else { opts.tol };
 
     let mut vbeta = vec![0.0; p];
+    let mut coef = vec![0.0; p];
     let mut converged = false;
     let mut sweeps = 0usize;
 
@@ -113,20 +114,13 @@ pub fn solve(
                 continue;
             }
 
-            // vbeta = Σ_{l≠j} W[:,l] · β_l   (full-length, entry j ignored)
-            vbeta.iter_mut().for_each(|x| *x = 0.0);
+            // vbeta = Σ_{l≠j} W[:,l] · β_l   (full-length, entry j ignored).
+            // W symmetric: row l == col l, so this is a weighted row sum —
+            // pooled above the L2 cutoff, zero-coefficient rows skipped.
             for l in 0..p {
-                if l == j {
-                    continue;
-                }
-                let bl = betas.get(l, j);
-                if bl != 0.0 {
-                    let wrow = w.row(l); // symmetric: row l == col l
-                    for i in 0..p {
-                        vbeta[i] += bl * wrow[i];
-                    }
-                }
+                coef[l] = if l == j { 0.0 } else { betas.get(l, j) };
             }
+            crate::linalg::blas::weighted_row_sum(&w, &coef, &mut vbeta);
 
             // Inner cyclic CD over k ≠ j.
             let mut inner = 0usize;

@@ -43,16 +43,10 @@ pub fn solve_lasso_cd(
     }
 
     // Maintain r = V β incrementally: coordinate update touches one column.
+    // Warm-start formation V β is a weighted row sum (V symmetric: row l ==
+    // column l) — pooled above the L2 cutoff, zero coefficients skipped.
     let mut vbeta = vec![0.0; k];
-    for l in 0..k {
-        if beta[l] != 0.0 {
-            let bl = beta[l];
-            let col = v.row(l); // symmetric: row l == column l
-            for i in 0..k {
-                vbeta[i] += bl * col[i];
-            }
-        }
-    }
+    crate::linalg::blas::weighted_row_sum(v, beta, &mut vbeta);
 
     let mut converged = false;
     let mut sweeps = 0;

@@ -1,6 +1,8 @@
-//! Shared utilities: PRNG, timing, serialization helpers.
+//! Shared utilities: PRNG, timing, serialization helpers, and the
+//! crate-wide thread pool ([`pool`]).
 
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod timer;
 

@@ -1,0 +1,427 @@
+//! Crate-wide execution layer: one shared, fixed-size thread pool.
+//!
+//! Every parallel site in the crate — the tiled L3 kernels in
+//! [`crate::linalg::blas`], the blocked Cholesky trailing update, the
+//! dense screen row-band scan, the streaming Gram tile-pair scan, and the
+//! coordinator's per-machine block fabric — borrows workers from this one
+//! pool instead of spawning `std::thread`s per call. That removes the
+//! spawn/join cost from repeated index builds and small solves, and gives
+//! a single place to reason about core usage.
+//!
+//! # Sizing
+//!
+//! The global pool is created lazily on first use with
+//! `std::thread::available_parallelism()` workers, overridable with the
+//! `COVTHRESH_THREADS` environment variable (read once; `COVTHRESH_THREADS=1`
+//! forces fully inline serial execution, useful for determinism audits and
+//! profiling). [`max_threads`] reports the width and is what callers should
+//! use to size chunked work.
+//!
+//! # Nesting and the permit scheme
+//!
+//! Parallel regions nest in this crate: the coordinator runs one task per
+//! simulated machine, and each machine's glasso solve calls pooled kernels.
+//! Naively forwarding the inner calls to the pool would either deadlock
+//! (workers waiting on workers) or oversubscribe cores. Instead the pool
+//! uses an implicit permit scheme: each worker sets a thread-local flag
+//! while executing a task, and [`ThreadPool::scope`] called from inside a
+//! task runs its tasks inline, serially, on the calling worker. The
+//! outermost parallel site therefore wins the cores — machines run
+//! concurrently, their in-block kernels serially — which is the right
+//! split because the coordinator's machines are load-balanced by LPT
+//! scheduling, while the kernels parallelize well only for the few largest
+//! blocks (which dominate exactly when there are few machines busy).
+//!
+//! # Determinism
+//!
+//! The pool provides *placement* parallelism only: callers assign each
+//! output region to exactly one task, and chunk boundaries depend only on
+//! problem size — never on the thread count — so every floating-point sum
+//! is accumulated in the same order at any pool width. `COVTHRESH_THREADS=1`
+//! and the default width produce bit-identical results.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A unit of work submitted to [`ThreadPool::scope`]. Borrows from the
+/// caller's stack frame; `scope` does not return until it has run.
+pub type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+thread_local! {
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True while the current thread is executing a pool task. Nested
+/// [`ThreadPool::scope`] calls check this to run inline (see the module
+/// doc's permit scheme).
+pub fn in_pool_task() -> bool {
+    IN_POOL.with(|flag| flag.get())
+}
+
+/// One batch of scoped tasks: a claim counter hands each task to exactly
+/// one thread; a completion count + condvar lets the submitter wait.
+struct Batch<'a> {
+    tasks: Vec<Mutex<Option<Task<'a>>>>,
+    next: AtomicUsize,
+    done: Mutex<usize>,
+    all_done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl<'a> Batch<'a> {
+    fn new(tasks: Vec<Task<'a>>) -> Batch<'a> {
+        Batch {
+            tasks: tasks.into_iter().map(|t| Mutex::new(Some(t))).collect(),
+            next: AtomicUsize::new(0),
+            done: Mutex::new(0),
+            all_done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    /// Claim and run one task; false once every task has been claimed.
+    fn run_one(&self) -> bool {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i >= self.tasks.len() {
+            return false;
+        }
+        if let Some(task) = self.tasks[i].lock().unwrap().take() {
+            let was = IN_POOL.with(|flag| flag.replace(true));
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+            IN_POOL.with(|flag| flag.set(was));
+            if result.is_err() {
+                self.panicked.store(true, Ordering::SeqCst);
+            }
+        }
+        let mut done = self.done.lock().unwrap();
+        *done += 1;
+        if *done == self.tasks.len() {
+            self.all_done.notify_all();
+        }
+        true
+    }
+
+    fn wait_all(&self) {
+        let mut done = self.done.lock().unwrap();
+        while *done < self.tasks.len() {
+            done = self.all_done.wait(done).unwrap();
+        }
+    }
+}
+
+struct PoolState {
+    queue: VecDeque<Arc<Batch<'static>>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_ready: Condvar,
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let batch = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(b) = st.queue.pop_front() {
+                    break b;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        while batch.run_one() {}
+    }
+}
+
+/// Fixed set of worker threads executing scoped task batches. Use
+/// [`global`] for the shared crate-wide instance; construct directly only
+/// in tests.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool executing on `n_threads` threads total: the submitting thread
+    /// participates, so `n_threads - 1` workers are spawned (none for a
+    /// width-1 pool, which runs everything inline).
+    pub fn new(n_threads: usize) -> ThreadPool {
+        let n_threads = n_threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { queue: VecDeque::new(), shutdown: false }),
+            work_ready: Condvar::new(),
+        });
+        let workers = (1..n_threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("covthresh-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, n_threads }
+    }
+
+    /// Total execution width (submitting thread + workers).
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Run a batch of scoped tasks to completion. The calling thread
+    /// participates (it is one of the `n_threads` execution slots), so a
+    /// width-1 pool degenerates to an in-order serial loop. Called from
+    /// inside a pool task, runs the batch inline serially (permit scheme —
+    /// see module doc). Panics if any task panicked, after all tasks in
+    /// the batch have finished (so no borrow outlives its data).
+    pub fn scope<'a>(&self, tasks: Vec<Task<'a>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        if n == 1 || self.workers.is_empty() || in_pool_task() {
+            for task in tasks {
+                task();
+            }
+            return;
+        }
+        let batch = Arc::new(Batch::new(tasks));
+        // Lifetime erasure so batches can sit in the workers' queue: the
+        // queue type is `Arc<Batch<'static>>` but this batch borrows from
+        // the caller. Sound because `scope` does not return until every
+        // task has been claimed, executed, and dropped (`wait_all`), and
+        // any queue entries still referencing the batch afterwards only
+        // touch its counters (`run_one` finds nothing left to claim) —
+        // the Arc keeps the allocation itself alive.
+        let erased: Arc<Batch<'static>> = unsafe {
+            std::mem::transmute::<Arc<Batch<'a>>, Arc<Batch<'static>>>(Arc::clone(&batch))
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // one queue entry per helper we could use; each entry lets one
+            // worker join in and drain tasks until the batch is empty
+            let invites = (n - 1).min(self.workers.len());
+            for _ in 0..invites {
+                st.queue.push_back(Arc::clone(&erased));
+            }
+        }
+        self.shared.work_ready.notify_all();
+        drop(erased);
+        // participate, then wait for stragglers
+        while batch.run_one() {}
+        batch.wait_all();
+        if batch.panicked.load(Ordering::SeqCst) {
+            panic!("covthresh pool task panicked");
+        }
+    }
+
+    /// Run `f(0..n_tasks)` on the pool and collect results in task order.
+    /// Deterministic: slot `i` always holds `f(i)`, whatever thread ran it.
+    pub fn run<T, F>(&self, n_tasks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let mut slots: Vec<Option<T>> = (0..n_tasks).map(|_| None).collect();
+        {
+            let f = &f;
+            let tasks: Vec<Task<'_>> = slots
+                .iter_mut()
+                .enumerate()
+                .map(|(i, slot)| Box::new(move || *slot = Some(f(i))) as Task<'_>)
+                .collect();
+            self.scope(tasks);
+        }
+        slots.into_iter().map(|s| s.expect("pool task did not run")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work_ready.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Pool width from the environment: `COVTHRESH_THREADS` if set to a
+/// positive integer, else `available_parallelism()`.
+fn configured_threads() -> usize {
+    if let Ok(v) = std::env::var("COVTHRESH_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The shared crate-wide pool (created on first use — see module doc).
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(configured_threads()))
+}
+
+/// Width of the global pool; use to size chunked work and as the default
+/// machine count for the coordinator.
+pub fn max_threads() -> usize {
+    global().n_threads()
+}
+
+/// Split `0..n` into at most `max_chunks` contiguous ranges of near-equal
+/// length (first ranges get the remainder). Depends only on `n` and
+/// `max_chunks`, never on runtime thread availability — callers pass a
+/// size-derived chunk count to keep outputs placement-independent.
+pub fn chunk_ranges(n: usize, max_chunks: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let k = max_chunks.clamp(1, n);
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for c in 0..k {
+        let len = base + usize::from(c < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn run_returns_ordered_results() {
+        let pool = ThreadPool::new(4);
+        let out = pool.run(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn width_one_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.n_threads(), 1);
+        let out = pool.run(10, |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_borrows_stack_data() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u64; 64];
+        {
+            let tasks: Vec<Task<'_>> = data
+                .chunks_mut(8)
+                .enumerate()
+                .map(|(b, chunk)| {
+                    Box::new(move || {
+                        for (k, x) in chunk.iter_mut().enumerate() {
+                            *x = (b * 8 + k) as u64;
+                        }
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.scope(tasks);
+        }
+        assert_eq!(data, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_scope_runs_inline() {
+        let pool = ThreadPool::new(4);
+        let counter = AtomicUsize::new(0);
+        let inner_flags: Vec<bool> = pool.run(6, |_| {
+            assert!(in_pool_task());
+            // nested use must not deadlock; it runs inline on this worker
+            let nested = pool.run(4, |j| {
+                counter.fetch_add(1, Ordering::Relaxed);
+                j
+            });
+            assert_eq!(nested, vec![0, 1, 2, 3]);
+            in_pool_task()
+        });
+        assert!(inner_flags.iter().all(|&f| f));
+        assert_eq!(counter.load(Ordering::Relaxed), 24);
+        // and the flag is cleared once tasks are done
+        assert!(!in_pool_task());
+    }
+
+    #[test]
+    fn results_independent_of_width() {
+        let serial = ThreadPool::new(1).run(37, |i| (i as f64).sqrt());
+        let wide = ThreadPool::new(5).run(37, |i| (i as f64).sqrt());
+        assert_eq!(serial, wide); // bitwise: same slot, same computation
+    }
+
+    #[test]
+    #[should_panic(expected = "covthresh pool task panicked")]
+    fn task_panic_propagates() {
+        let pool = ThreadPool::new(4);
+        let tasks: Vec<Task<'static>> = (0..8)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 5 {
+                        panic!("boom");
+                    }
+                }) as Task<'static>
+            })
+            .collect();
+        pool.scope(tasks);
+    }
+
+    #[test]
+    fn empty_and_single_batches() {
+        let pool = ThreadPool::new(2);
+        pool.scope(Vec::new());
+        let mut hit = false;
+        pool.scope(vec![Box::new(|| hit = true) as Task<'_>]);
+        assert!(hit);
+    }
+
+    #[test]
+    fn global_pool_is_reusable() {
+        let w = max_threads();
+        assert!(w >= 1);
+        for _ in 0..3 {
+            let out = global().run(5, |i| i * 2);
+            assert_eq!(out, vec![0, 2, 4, 6, 8]);
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for n in [0usize, 1, 2, 7, 64, 65, 100] {
+            for k in [1usize, 2, 3, 8, 200] {
+                let ranges = chunk_ranges(n, k);
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, prev_end);
+                    assert!(!r.is_empty());
+                    covered += r.len();
+                    prev_end = r.end;
+                }
+                assert_eq!(covered, n, "n={n} k={k}");
+                assert!(ranges.len() <= k.max(1));
+            }
+        }
+        assert_eq!(chunk_ranges(10, 3), vec![0..4, 4..7, 7..10]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Property tests for the tiled/pooled execution layer: the blocked L3
+//! kernels must match naive references on shapes straddling every tile
+//! boundary, and pooled vs serial execution must be bit-identical end to
+//! end (screen partitions, coordinator Θ, warm-started path solves).
+
+use covthresh::coordinator::path::solve_path;
+use covthresh::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::synthetic::block_instance;
+use covthresh::linalg::blas::{self, TILE};
+use covthresh::linalg::{Cholesky, Mat};
+use covthresh::screen::index::ScreenIndex;
+use covthresh::screen::threshold::{dense_edges_above, par_dense_edges_above, threshold_partition};
+use covthresh::util::rng::Xoshiro256;
+
+fn random_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.gaussian())
+}
+
+/// Random matrix with exact zeros injected (exercises the kernels' skips).
+fn sparse_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    Mat::from_fn(rows, cols, |_, _| {
+        let v = rng.gaussian();
+        if v.abs() < 0.25 {
+            0.0
+        } else {
+            v
+        }
+    })
+}
+
+/// Independent triple-loop reference (jik order — deliberately different
+/// from both production kernels).
+fn gemm_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for j in 0..n {
+        for i in 0..m {
+            let mut acc = 0.0;
+            for l in 0..k {
+                acc += a.get(i, l) * b.get(l, j);
+            }
+            c.set(i, j, acc);
+        }
+    }
+    c
+}
+
+fn random_spd(n: usize, seed: u64) -> Mat {
+    let b = random_mat(n, n, seed);
+    let mut a = blas::syrk_t_serial(&b);
+    for i in 0..n {
+        a.add_at(i, i, n as f64);
+    }
+    a
+}
+
+#[test]
+fn tiled_gemm_matches_naive_across_tile_boundaries() {
+    let dims = [0usize, 1, TILE - 1, TILE, TILE + 1, 2 * TILE + 3];
+    for &m in &dims {
+        for &k in &[1usize, TILE, TILE + 1] {
+            for &n in &dims {
+                let a = sparse_mat(m, k, (m * 1000 + k) as u64);
+                let b = sparse_mat(k, n, (k * 1000 + n + 7) as u64);
+                let tiled = blas::gemm_tiled(&a, &b);
+                let serial = blas::gemm_serial(&a, &b);
+                // forced paths agree bitwise (finite data)
+                assert_eq!(tiled.max_abs_diff(&serial), 0.0, "m={m} k={k} n={n}");
+                let naive = gemm_naive(&a, &b);
+                assert!(tiled.max_abs_diff(&naive) <= 1e-12, "m={m} k={k} n={n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn tiled_syrk_matches_serial_and_naive_across_tile_boundaries() {
+    for &p in &[0usize, 1, TILE - 1, TILE, TILE + 1, 2 * TILE + 5] {
+        for &n in &[1usize, 7, 40] {
+            let a = sparse_mat(n, p, (p * 100 + n) as u64);
+            let tiled = blas::syrk_t_tiled(&a);
+            let serial = blas::syrk_t_serial(&a);
+            assert_eq!(tiled.max_abs_diff(&serial), 0.0, "p={p} n={n}");
+            let naive = gemm_naive(&a.transpose(), &a);
+            assert!(tiled.max_abs_diff(&naive) <= 1e-12, "p={p} n={n}");
+            assert!(tiled.is_symmetric(0.0), "mirror must copy bits p={p} n={n}");
+        }
+    }
+}
+
+#[test]
+fn blocked_cholesky_matches_scalar_across_panel_boundaries() {
+    // panel width 96, blocked dispatch at 192
+    for &n in &[1usize, 95, 96, 97, 191, 192, 193, 250] {
+        let a = random_spd(n, 40 + n as u64);
+        let scalar = Cholesky::new_scalar(&a).unwrap();
+        let blocked = Cholesky::new_blocked(&a).unwrap();
+        assert!(
+            scalar.factor().max_abs_diff(blocked.factor()) <= 1e-9,
+            "n={n} diff={}",
+            scalar.factor().max_abs_diff(blocked.factor())
+        );
+        let rec = blas::gemm(blocked.factor(), &blocked.factor().transpose());
+        assert!(rec.max_abs_diff(&a) <= 1e-8, "n={n}");
+        assert!((scalar.logdet() - blocked.logdet()).abs() <= 1e-9, "n={n}");
+    }
+}
+
+#[test]
+fn pooled_screen_scan_is_bit_identical_to_serial() {
+    // p=600 crosses the parallel threshold (512)
+    let p = 600;
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    let mut s = Mat::eye(p);
+    for i in 0..p {
+        for j in (i + 1)..p {
+            let v = rng.gaussian() * 0.2;
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+    }
+    let serial = dense_edges_above(&s, 0.3);
+    for bands in [1usize, 4, 16] {
+        assert_eq!(par_dense_edges_above(&s, 0.3, bands), serial, "bands={bands}");
+    }
+    // index built through the pool ⇒ identical partitions to the oracle
+    let index = ScreenIndex::from_dense_above(&s, 0.2);
+    for lambda in [0.55, 0.4, 0.25] {
+        let from_index = index.partition_at(lambda);
+        let oracle = threshold_partition(&s, lambda);
+        assert!(from_index.equals(&oracle), "lambda={lambda}");
+    }
+}
+
+#[test]
+fn path_solve_is_bit_identical_serial_vs_pooled_machines() {
+    let inst = block_instance(3, 6, 21);
+    let lambdas = [0.9, 0.6, 0.4];
+    let solve = |n_machines: usize, parallel: bool| {
+        let coord = Coordinator::new(
+            NativeBackend::glasso(),
+            CoordinatorConfig { n_machines, parallel, ..Default::default() },
+        );
+        solve_path(&coord, &inst.s, &lambdas, true).unwrap()
+    };
+    let serial = solve(1, false);
+    for machines in [2usize, 4, 8] {
+        let pooled = solve(machines, true);
+        assert_eq!(serial.points.len(), pooled.points.len());
+        for (a, b) in serial.points.iter().zip(pooled.points.iter()) {
+            assert!(a.report.global.partition.equals(&b.report.global.partition));
+            let diff =
+                a.report.global.theta_dense().max_abs_diff(&b.report.global.theta_dense());
+            assert_eq!(diff, 0.0, "machines={machines} lambda={}", a.lambda);
+        }
+    }
+}
+
+#[test]
+fn pooled_l2_kernels_match_serial_loops_bitwise() {
+    // 1056² madds sit above the L2 cutoff ⇒ forces the pooled path
+    let m = 1056;
+    let a = sparse_mat(m, m, 5);
+    let x: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.37).sin()).collect();
+
+    let mut y = vec![0.0; m];
+    blas::gemv(&a, &x, &mut y);
+    for i in 0..m {
+        assert_eq!(y[i], blas::dot(a.row(i), &x), "gemv row {i}");
+    }
+
+    let mut yt = vec![0.0; m];
+    blas::gemv_t(&a, &x, &mut yt);
+    let mut want = vec![0.0; m];
+    for i in 0..m {
+        blas::axpy(x[i], a.row(i), &mut want);
+    }
+    assert_eq!(yt, want, "gemv_t");
+
+    let coef: Vec<f64> = x.iter().map(|&v| if v.abs() < 0.3 { 0.0 } else { v }).collect();
+    let mut ws = vec![0.0; m];
+    blas::weighted_row_sum(&a, &coef, &mut ws);
+    let mut want = vec![0.0; m];
+    for l in 0..m {
+        if coef[l] != 0.0 {
+            blas::axpy(coef[l], a.row(l), &mut want);
+        }
+    }
+    assert_eq!(ws, want, "weighted_row_sum");
+
+    // quad_form reduces fixed 256-row partials — deterministic, but a
+    // different summation order than one serial accumulator: tolerance.
+    let qf = blas::quad_form(&a, &x);
+    let mut serial = 0.0;
+    for i in 0..m {
+        serial += x[i] * blas::dot(a.row(i), &x);
+    }
+    assert!((qf - serial).abs() <= 1e-8 * serial.abs().max(1.0), "quad_form");
+}
