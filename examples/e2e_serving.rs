@@ -112,8 +112,16 @@ fn main() -> anyhow::Result<()> {
         certified += 1;
     }
     let wall = total_sw.elapsed_secs();
-    let cache_hits: usize = sessions.iter().map(|s| s.cache_hits()).sum();
-    let cache_misses: usize = sessions.iter().map(|s| s.cache_misses()).sum();
+    // Per-session LRU observability: one `stats()` snapshot per session.
+    let session_stats: Vec<_> = sessions.iter().map(|s| s.stats()).collect();
+    let cache_hits: usize = session_stats.iter().map(|st| st.hits).sum();
+    let cache_misses: usize = session_stats.iter().map(|st| st.misses).sum();
+    let cache_lookups: usize = session_stats.iter().map(|st| st.lookups()).sum();
+    let hit_rate = if cache_lookups > 0 {
+        cache_hits as f64 / cache_lookups as f64
+    } else {
+        0.0
+    };
 
     // ---- report ----------------------------------------------------------
     let p50 = quantile(&latencies, 0.5);
@@ -130,8 +138,12 @@ fn main() -> anyhow::Result<()> {
     );
     println!("bucket executions: {:?}", coord.backend.execution_counts());
     println!(
-        "partition cache: {cache_hits} hits / {cache_misses} misses across {} sessions",
-        sessions.len()
+        "partition cache: {cache_hits} hits / {cache_misses} misses across {} sessions \
+         ({:.0}% hit rate, {} / {} LRU entries occupied)",
+        sessions.len(),
+        100.0 * hit_rate,
+        session_stats.iter().map(|st| st.entries).sum::<usize>(),
+        session_stats.iter().map(|st| st.capacity).sum::<usize>()
     );
 
     // screened vs unscreened on one sampled request (the paper's headline)
@@ -146,6 +158,7 @@ fn main() -> anyhow::Result<()> {
         fmt_secs(un_secs),
         un_secs / screened.solve_secs_serial().max(1e-12)
     );
+    println!("sample dispatch: {}", screened.dispatch.summary());
 
     let mut out = Json::obj();
     out.set("requests", queue.len().into())
@@ -153,6 +166,7 @@ fn main() -> anyhow::Result<()> {
         .set("screen_index_ingest_s", ingest_secs.into())
         .set("partition_cache_hits", cache_hits.into())
         .set("partition_cache_misses", cache_misses.into())
+        .set("partition_cache_hit_rate", hit_rate.into())
         .set("wall_secs", wall.into())
         .set("throughput_rps", (queue.len() as f64 / wall).into())
         .set("latency_mean_s", mean(&latencies).into())

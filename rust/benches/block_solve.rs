@@ -1,0 +1,221 @@
+//! Block-solve bench — tiered closed-form dispatch vs. the legacy
+//! iterative-only path on a heavy-tailed post-screen partition.
+//!
+//! The fixture mirrors what screening actually leaves behind on a sparse
+//! covariance (the paper's Table-2 regime): a long tail of trivial
+//! components — singletons, pairs, small trees — plus a few dense blocks
+//! that carry nearly all the iterative work. The tiered engine solves the
+//! tail with exact O(b) kernels and batches it into single pool tasks;
+//! the legacy engine runs every block through the iterative backend.
+//!
+//! Measures, at λ = 0.2 on one block-diagonal covariance:
+//!   1. end-to-end screened solve, tiered dispatch (default config);
+//!   2. the same solve with `tiered = false` (legacy LPT + iterative);
+//!   3. per-tier attribution of blocks and seconds (`report.dispatch`);
+//!   4. a cost-model fit on the legacy per-block timings.
+//!
+//! Output: human summary on stdout plus `bench_out/BENCH_solve.json`.
+//!
+//! Run: `cargo bench --bench block_solve`
+//! (SOLVE_SCALE=<k> multiplies block counts; SOLVE_BUDGET=<s> per bench.)
+
+use covthresh::bench_harness::{bench_auto, fmt_time, BenchStats};
+use covthresh::coordinator::{Coordinator, CoordinatorConfig, CostModel, NativeBackend};
+use covthresh::linalg::Mat;
+use covthresh::solvers::closed_form::Tier;
+use covthresh::util::json::Json;
+use covthresh::util::rng::Xoshiro256;
+
+const LAMBDA: f64 = 0.2;
+
+/// Block specs for the heavy-tailed fixture. Every in-block weight sits
+/// above λ = 0.2 (so screening keeps blocks intact) and every cross-block
+/// entry is exactly 0 (so screening splits them).
+enum Block {
+    Singleton,
+    Pair,
+    Tree(usize),
+    Equicorr(usize),
+}
+
+fn fixture(scale: usize, seed: u64) -> (Mat, Vec<usize>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut specs: Vec<Block> = Vec::new();
+    for _ in 0..300 * scale {
+        specs.push(Block::Singleton);
+    }
+    for _ in 0..60 * scale {
+        specs.push(Block::Pair);
+    }
+    for _ in 0..20 * scale {
+        specs.push(Block::Tree(3 + rng.uniform_usize(6)));
+    }
+    for &b in &[16usize, 24, 40] {
+        specs.push(Block::Equicorr(b));
+    }
+    rng.shuffle(&mut specs);
+
+    let p: usize = specs
+        .iter()
+        .map(|b| match b {
+            Block::Singleton => 1,
+            Block::Pair => 2,
+            Block::Tree(n) | Block::Equicorr(n) => *n,
+        })
+        .sum();
+    let mut s = Mat::eye(p);
+    let mut sizes = Vec::with_capacity(specs.len());
+    let mut at = 0usize;
+    for spec in &specs {
+        let size = match spec {
+            Block::Singleton => {
+                s.set(at, at, rng.uniform_range(0.8, 1.5));
+                1
+            }
+            Block::Pair => {
+                let v = if rng.uniform() < 0.5 { 0.5 } else { -0.5 };
+                s.set(at, at + 1, v);
+                s.set(at + 1, at, v);
+                2
+            }
+            Block::Tree(n) => {
+                // random tree: each vertex v>0 attaches to an earlier one
+                for v in 1..*n {
+                    let u = rng.uniform_usize(v);
+                    let sign = if rng.uniform() < 0.5 { 1.0 } else { -1.0 };
+                    let w = sign * rng.uniform_range(0.25, 0.32);
+                    s.set(at + u, at + v, w);
+                    s.set(at + v, at + u, w);
+                }
+                // diagonal dominance keeps the block well-conditioned
+                for v in 0..*n {
+                    let row: f64 =
+                        (0..*n).filter(|&u| u != v).map(|u| s.get(at + v, at + u).abs()).sum();
+                    s.set(at + v, at + v, 1.0 + row);
+                }
+                *n
+            }
+            Block::Equicorr(n) => {
+                // ρ = 0.3 equicorrelation: complete graph at λ = 0.2, PD
+                // for any size (eigenvalues 1-ρ and 1+(n-1)ρ)
+                for i in 0..*n {
+                    for j in 0..*n {
+                        if i != j {
+                            s.set(at + i, at + j, 0.3);
+                        }
+                    }
+                }
+                *n
+            }
+        };
+        sizes.push(size);
+        at += size;
+    }
+    assert_eq!(at, p);
+    (s, sizes)
+}
+
+fn dispatch_json(report: &covthresh::coordinator::ScreenReport) -> Json {
+    let mut arr = Vec::new();
+    for t in Tier::ALL {
+        let mut o = Json::obj();
+        o.set("tier", t.name().into())
+            .set("blocks", report.dispatch.count(t).into())
+            .set("secs", report.dispatch.secs(t).into());
+        arr.push(o);
+    }
+    Json::Arr(arr)
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale: usize =
+        std::env::var("SOLVE_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(1).max(1);
+    let budget: f64 =
+        std::env::var("SOLVE_BUDGET").ok().and_then(|v| v.parse().ok()).unwrap_or(2.0);
+    let (s, sizes) = fixture(scale, 2026);
+    let p = s.rows();
+    let n_blocks = sizes.len();
+    println!(
+        "== block_solve bench: p={p}, {n_blocks} true blocks (heavy tail + 3 dense), λ={LAMBDA} =="
+    );
+
+    let tiered_coord = Coordinator::new(
+        NativeBackend::glasso(),
+        CoordinatorConfig { n_machines: 4, ..Default::default() },
+    );
+    let legacy_coord = Coordinator::new(
+        NativeBackend::glasso(),
+        CoordinatorConfig { n_machines: 4, tiered: false, ..Default::default() },
+    );
+
+    // 1–2. end-to-end screened solves (serial Table-1 timing convention).
+    let b_tiered =
+        bench_auto("solve/tiered", budget, || tiered_coord.solve_screened(&s, LAMBDA).unwrap());
+    println!("{}", b_tiered.summary());
+    let b_legacy =
+        bench_auto("solve/legacy", budget, || legacy_coord.solve_screened(&s, LAMBDA).unwrap());
+    println!("{}", b_legacy.summary());
+
+    // 3. one report per mode for attribution + correctness.
+    let rep_tiered = tiered_coord.solve_screened(&s, LAMBDA)?;
+    let rep_legacy = legacy_coord.solve_screened(&s, LAMBDA)?;
+    let diff = rep_tiered.global.theta_dense().max_abs_diff(&rep_legacy.global.theta_dense());
+    let tiered_solve = rep_tiered.solve_secs_serial();
+    let legacy_solve = rep_legacy.solve_secs_serial();
+    let speedup = b_legacy.median_s / b_tiered.median_s.max(1e-12);
+    println!("  tiered dispatch: {}", rep_tiered.dispatch.summary());
+    println!("  legacy dispatch: {}", rep_legacy.dispatch.summary());
+    println!(
+        "  serial solve secs: tiered {} vs legacy {}  |  end-to-end {speedup:.1}x  |  \
+         max|Δθ| = {diff:.2e}",
+        fmt_time(tiered_solve),
+        fmt_time(legacy_solve),
+    );
+    let units = |r: &covthresh::coordinator::ScreenReport| {
+        r.schedule.units.iter().filter(|u| !u.is_empty()).count()
+    };
+    println!(
+        "  execution units: tiered {} (tiny blocks batched) vs legacy {}",
+        units(&rep_tiered),
+        units(&rep_legacy)
+    );
+
+    // 4. fit the cost model on the legacy per-block timings: on this
+    // fixture the dense blocks should dominate and recover exponent ≈ 3.
+    let samples: Vec<(usize, f64)> =
+        rep_legacy.global.blocks.iter().map(|b| (b.indices.len(), b.secs)).collect();
+    let fitted = CostModel::default().fit(&samples);
+    match &fitted {
+        Some(m) => println!("  cost-model fit on legacy timings: exponent = {:.2}", m.exponent),
+        None => println!("  cost-model fit: not enough distinct block sizes"),
+    }
+
+    let mut out = Json::obj();
+    out.set("p", p.into())
+        .set("scale", scale.into())
+        .set("lambda", LAMBDA.into())
+        .set("n_blocks", n_blocks.into())
+        .set("tiered_median_s", b_tiered.median_s.into())
+        .set("legacy_median_s", b_legacy.median_s.into())
+        .set("end_to_end_speedup", speedup.into())
+        .set("tiered_solve_secs_serial", tiered_solve.into())
+        .set("legacy_solve_secs_serial", legacy_solve.into())
+        .set("max_abs_diff", diff.into())
+        .set("tiered_units", units(&rep_tiered).into())
+        .set("legacy_units", units(&rep_legacy).into())
+        .set("closed_form_blocks", rep_tiered.dispatch.closed_form_count().into())
+        .set("tiered_dispatch", dispatch_json(&rep_tiered))
+        .set("legacy_dispatch", dispatch_json(&rep_legacy))
+        .set(
+            "fitted_cost_exponent",
+            fitted.map(|m| Json::from(m.exponent)).unwrap_or(Json::Null),
+        )
+        .set(
+            "benches",
+            Json::Arr([&b_tiered, &b_legacy].iter().map(|b: &&BenchStats| b.to_json()).collect()),
+        );
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/BENCH_solve.json", out.to_string())?;
+    println!("wrote bench_out/BENCH_solve.json");
+    Ok(())
+}

@@ -82,7 +82,21 @@ impl RunConfig {
         if let Some(v) = doc.get("coordinator", "cost_exponent") {
             cfg.coordinator.cost_model = CostModel {
                 exponent: v.as_f64().context("coordinator.cost_exponent must be a number")?,
+                ..cfg.coordinator.cost_model
             };
+        }
+        if let Some(v) = doc.get("coordinator", "density_floor") {
+            let floor =
+                v.as_f64().context("coordinator.density_floor must be a number")?;
+            if !(0.0..=1.0).contains(&floor) {
+                bail!("coordinator.density_floor must be in [0, 1], got {floor}");
+            }
+            cfg.coordinator.cost_model =
+                CostModel { density_floor: floor, ..cfg.coordinator.cost_model };
+        }
+        if let Some(v) = doc.get("coordinator", "tiered") {
+            cfg.coordinator.tiered =
+                v.as_bool().context("coordinator.tiered must be a bool")?;
         }
         if let Some(v) = doc.get("runtime", "backend") {
             let b = v.as_str().context("runtime.backend must be a string")?;
@@ -130,6 +144,7 @@ mod tests {
         assert_eq!(cfg.solver, SolverKind::Glasso);
         assert_eq!(cfg.backend, "native");
         assert_eq!(cfg.coordinator.n_machines, 4);
+        assert!(cfg.coordinator.tiered, "tiered dispatch is the default");
     }
 
     #[test]
@@ -147,6 +162,8 @@ n_machines = 8
 capacity = 1500
 parallel = true
 cost_exponent = 4.0
+density_floor = 0.5
+tiered = false
 
 [runtime]
 backend = "xla"
@@ -165,6 +182,8 @@ seed = 7
         assert_eq!(cfg.coordinator.capacity, 1500);
         assert!(cfg.coordinator.parallel);
         assert_eq!(cfg.coordinator.cost_model.exponent, 4.0);
+        assert_eq!(cfg.coordinator.cost_model.density_floor, 0.5);
+        assert!(!cfg.coordinator.tiered);
         assert_eq!(cfg.backend, "xla");
         assert_eq!(cfg.buckets, vec![16, 64, 256]);
         assert_eq!(cfg.artifacts_dir, "my_artifacts");
@@ -176,6 +195,7 @@ seed = 7
         assert!(RunConfig::from_toml("[solver]\nkind = \"nope\"").is_err());
         assert!(RunConfig::from_toml("[runtime]\nbackend = \"gpu\"").is_err());
         assert!(RunConfig::from_toml("[coordinator]\nn_machines = 0").is_err());
+        assert!(RunConfig::from_toml("[coordinator]\ndensity_floor = 1.5").is_err());
         assert!(RunConfig::from_toml("[runtime]\nbuckets = []").is_err());
     }
 }

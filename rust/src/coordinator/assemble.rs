@@ -7,6 +7,7 @@
 
 use crate::graph::Partition;
 use crate::linalg::Mat;
+use crate::solvers::closed_form::Tier;
 use crate::solvers::Solution;
 
 /// One solved block with its global index map.
@@ -19,6 +20,8 @@ pub struct SolvedBlock {
     pub secs: f64,
     /// machine that executed it (simulated fabric)
     pub machine: usize,
+    /// solve tier that produced the solution
+    pub tier: Tier,
 }
 
 /// Block-diagonal global solution of problem (1).
@@ -166,6 +169,7 @@ mod tests {
                 solution: backend.solve_block(&sp.s_block, lambda, None).unwrap(),
                 secs: 0.0,
                 machine: 0,
+                tier: Tier::Iterative,
             })
             .collect();
         let isolated: Vec<(usize, f64)> =

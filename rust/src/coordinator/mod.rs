@@ -44,12 +44,13 @@ pub use partitioner::{
     partition_indexed, partition_problem, partition_with, partition_with_ref, Partitioned,
     SubProblem,
 };
-pub use scheduler::{schedule_lpt, CostModel, Schedule};
+pub use scheduler::{schedule_blocks, schedule_lpt, BlockMeta, CostModel, Schedule};
 pub use solver_backend::{BlockSolver, NativeBackend};
 
 use crate::graph::Partition;
 use crate::linalg::Mat;
 use crate::screen::index::ScreenIndex;
+use crate::solvers::closed_form::{self, Tier};
 use crate::solvers::WarmStart;
 use crate::util::timer::{PhaseTimings, Stopwatch};
 use anyhow::{ensure, Result};
@@ -68,6 +69,10 @@ pub struct CoordinatorConfig {
     pub parallel: bool,
     /// cost model for scheduling
     pub cost_model: CostModel,
+    /// Tiered dispatch: closed-form kernels for singleton/pair/tree blocks
+    /// (with exact KKT fallback), density-aware scheduling, tiny-block
+    /// batching. Off = legacy size^J LPT + iterative-only solving.
+    pub tiered: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -77,7 +82,51 @@ impl Default for CoordinatorConfig {
             capacity: usize::MAX,
             parallel: false,
             cost_model: CostModel::default(),
+            tiered: true,
         }
+    }
+}
+
+/// Per-tier dispatch accounting for one screened solve: how many blocks
+/// each tier handled and the wall-clock seconds it spent. Isolated
+/// vertices count as singletons (at 0s — they are folded into assembly).
+#[derive(Clone, Debug, Default)]
+pub struct DispatchStats {
+    counts: [usize; 4],
+    secs: [f64; 4],
+}
+
+impl DispatchStats {
+    pub fn record(&mut self, tier: Tier, secs: f64) {
+        self.counts[tier.index()] += 1;
+        self.secs[tier.index()] += secs;
+    }
+
+    pub fn count(&self, tier: Tier) -> usize {
+        self.counts[tier.index()]
+    }
+
+    pub fn secs(&self, tier: Tier) -> f64 {
+        self.secs[tier.index()]
+    }
+
+    pub fn total_count(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    /// Blocks solved without an iterative solver.
+    pub fn closed_form_count(&self) -> usize {
+        self.total_count() - self.count(Tier::Iterative)
+    }
+
+    /// One-line human-readable breakdown, e.g.
+    /// `singleton:40 (0.000s) pair:6 (0.000s) tree:3 (0.001s) iterative:2 (0.412s)`.
+    pub fn summary(&self) -> String {
+        Tier::ALL
+            .iter()
+            .map(|&t| format!("{}:{} ({:.3}s)", t.name(), self.count(t), self.secs(t)))
+            .collect::<Vec<_>>()
+            .join(" ")
     }
 }
 
@@ -89,6 +138,8 @@ pub struct ScreenReport {
     pub timings: PhaseTimings,
     /// |E(λ)| of the thresholded graph
     pub n_edges: usize,
+    /// per-tier block counts and seconds
+    pub dispatch: DispatchStats,
 }
 
 impl ScreenReport {
@@ -174,6 +225,43 @@ impl<'a> ScreenSession<'a> {
 
     pub fn cache_misses(&self) -> usize {
         self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the partition-LRU counters and occupancy.
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            hits: self.cache_hits(),
+            misses: self.cache_misses(),
+            capacity: self.capacity,
+            entries: self.cache.lock().unwrap().len(),
+        }
+    }
+}
+
+/// Point-in-time observability snapshot of a [`ScreenSession`]'s
+/// partition LRU.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionStats {
+    pub hits: usize,
+    pub misses: usize,
+    /// configured LRU capacity (tie groups)
+    pub capacity: usize,
+    /// tie groups currently cached
+    pub entries: usize,
+}
+
+impl SessionStats {
+    pub fn lookups(&self) -> usize {
+        self.hits + self.misses
+    }
+
+    /// Hit fraction in [0, 1]; 0 when no lookups have happened.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() > 0 {
+            self.hits as f64 / self.lookups() as f64
+        } else {
+            0.0
+        }
     }
 }
 
@@ -291,12 +379,30 @@ impl<B: BlockSolver> Coordinator<B> {
         mut timings: PhaseTimings,
         n_edges: usize,
     ) -> Result<ScreenReport> {
-        // 3. schedule.
+        // 3. schedule. Tiered mode classifies each block (size + in-block
+        // edge structure → solve tier) and schedules by tier/density-aware
+        // cost with tiny-block batching; legacy mode is size^J whole-block
+        // LPT.
         let sw = Stopwatch::start();
-        let sizes: Vec<usize> = parts.subproblems.iter().map(|sp| sp.size()).collect();
         let capacity = self.config.capacity.min(self.backend.max_block().unwrap_or(usize::MAX));
-        let schedule =
-            schedule_lpt(&sizes, self.config.n_machines, capacity, self.config.cost_model)?;
+        let schedule = if self.config.tiered {
+            let metas: Vec<BlockMeta> = parts
+                .subproblems
+                .iter()
+                .map(|sp| {
+                    let edges = closed_form::block_edges(&sp.s_block, lambda);
+                    BlockMeta {
+                        size: sp.size(),
+                        n_edges: edges.len(),
+                        tier: closed_form::classify_edges(sp.size(), &edges),
+                    }
+                })
+                .collect();
+            schedule_blocks(&metas, self.config.n_machines, capacity, self.config.cost_model)?
+        } else {
+            let sizes: Vec<usize> = parts.subproblems.iter().map(|sp| sp.size()).collect();
+            schedule_lpt(&sizes, self.config.n_machines, capacity, self.config.cost_model)?
+        };
         timings.add("schedule", sw.elapsed_secs());
 
         // 4. solve.
@@ -308,11 +414,19 @@ impl<B: BlockSolver> Coordinator<B> {
             warm,
             lambda,
             self.config.parallel,
+            self.config.tiered,
         )?;
         timings.add("solve", sw.elapsed_secs());
 
         // 5. assemble.
         let sw = Stopwatch::start();
+        let mut dispatch = DispatchStats::default();
+        for b in &blocks {
+            dispatch.record(b.tier, b.secs);
+        }
+        for _ in &parts.isolated {
+            dispatch.record(Tier::Singleton, 0.0);
+        }
         let isolated: Vec<(usize, f64)> =
             parts.isolated.iter().map(|&(i, sii)| (i, 1.0 / (sii + lambda))).collect();
         let global = GlobalSolution {
@@ -324,7 +438,7 @@ impl<B: BlockSolver> Coordinator<B> {
         };
         timings.add("assemble", sw.elapsed_secs());
 
-        Ok(ScreenReport { global, schedule, timings, n_edges })
+        Ok(ScreenReport { global, schedule, timings, n_edges, dispatch })
     }
 
     /// Baseline: solve the full p×p problem with no screening.
@@ -470,5 +584,81 @@ mod tests {
         let report = solve_screened_default(&inst.s, lambda).unwrap();
         let conc = report.global.concentration_partition(1e-8);
         assert!(conc.equals(&report.global.partition));
+    }
+
+    /// 12 vertices: pair {0,1}, 3-chain {2,3,4}, triangle {5,6,7}
+    /// (iterative), isolated {8..11} — one block per tier at λ = 0.3.
+    fn mixed_tier_s() -> Mat {
+        let mut s = Mat::eye(12);
+        for &(i, j, v) in &[
+            (0usize, 1usize, 0.6),
+            (2, 3, 0.5),
+            (3, 4, 0.5),
+            (5, 6, 0.5),
+            (6, 7, 0.5),
+            (5, 7, 0.4),
+        ] {
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+        s
+    }
+
+    #[test]
+    fn dispatch_stats_attribute_every_tier() {
+        use crate::solvers::closed_form::Tier;
+        let s = mixed_tier_s();
+        let report = solve_screened_default(&s, 0.3).unwrap();
+        let d = &report.dispatch;
+        assert_eq!(d.count(Tier::Singleton), 4, "{}", d.summary());
+        assert_eq!(d.count(Tier::Pair), 1, "{}", d.summary());
+        assert_eq!(d.count(Tier::Tree), 1, "{}", d.summary());
+        assert_eq!(d.count(Tier::Iterative), 1, "{}", d.summary());
+        assert_eq!(d.total_count(), 7);
+        assert_eq!(d.closed_form_count(), 6);
+        for t in Tier::ALL {
+            assert!(d.secs(t) >= 0.0);
+        }
+        let line = d.summary();
+        assert!(line.contains("singleton:4") && line.contains("iterative:1"), "{line}");
+    }
+
+    #[test]
+    fn tiered_matches_legacy_dispatch() {
+        let s = mixed_tier_s();
+        let lambda = 0.3;
+        let tiered = solve_screened_default(&s, lambda).unwrap();
+        let legacy = Coordinator::new(
+            NativeBackend::glasso(),
+            CoordinatorConfig { tiered: false, ..Default::default() },
+        )
+        .solve_screened(&s, lambda)
+        .unwrap();
+        use crate::solvers::closed_form::Tier;
+        assert_eq!(legacy.dispatch.count(Tier::Pair), 0);
+        assert_eq!(legacy.dispatch.count(Tier::Iterative), 3);
+        let diff = tiered.global.theta_dense().max_abs_diff(&legacy.global.theta_dense());
+        assert!(diff < 1e-5, "tiered vs legacy diff = {diff}");
+        // closed-form is exact: objective can only be ≤ the iterative one
+        // (slack covers the iterative solver's own objective evaluation)
+        assert!(tiered.global.objective() <= legacy.global.objective() + 1e-6);
+    }
+
+    #[test]
+    fn session_stats_snapshot() {
+        let inst = block_instance(2, 5, 3);
+        let index = ScreenIndex::from_dense(&inst.s);
+        let session = ScreenSession::with_cache_capacity(&index, 4);
+        let s0 = session.stats();
+        assert_eq!((s0.hits, s0.misses, s0.entries, s0.capacity), (0, 0, 0, 4));
+        assert_eq!(s0.hit_rate(), 0.0);
+        let mags = index.distinct_magnitudes();
+        let (a, b) = (mags[0], mags[1]);
+        session.partition_at(a - (a - b) * 0.25);
+        session.partition_at(a - (a - b) * 0.75);
+        let s1 = session.stats();
+        assert_eq!((s1.hits, s1.misses, s1.entries), (1, 1, 1));
+        assert_eq!(s1.lookups(), 2);
+        assert!((s1.hit_rate() - 0.5).abs() < 1e-12);
     }
 }

@@ -74,10 +74,22 @@ pub fn solve_path_with_index<B: BlockSolver>(
     warm_start: bool,
 ) -> Result<PathResult> {
     ensure!(!lambdas.is_empty(), "empty lambda grid");
-    ensure!(
-        lambdas.windows(2).all(|w| w[0] > w[1]),
-        "lambda grid must be strictly descending"
-    );
+    for (i, w) in lambdas.windows(2).enumerate() {
+        ensure!(
+            w[0] != w[1],
+            "lambda grid has a repeated value: λ[{i}] = λ[{}] = {} — dedupe the grid \
+             (equal λ re-solve the identical problem)",
+            i + 1,
+            w[0]
+        );
+        ensure!(
+            w[0] > w[1],
+            "lambda grid must be strictly descending: λ[{i}] = {} < λ[{}] = {}",
+            w[0],
+            i + 1,
+            w[1]
+        );
+    }
     let p = s.rows();
     ensure!(index.p() == p, "index built for p={}, S has p={p}", index.p());
     ensure!(
@@ -282,5 +294,22 @@ mod tests {
         let c = coord();
         assert!(solve_path(&c, &inst.s, &[0.5, 0.9], true).is_err());
         assert!(solve_path(&c, &inst.s, &[], true).is_err());
+    }
+
+    #[test]
+    fn bad_grids_name_the_offending_pair() {
+        let inst = block_instance(2, 4, 2);
+        let c = coord();
+        // repeated value: error names both indices and the value
+        let err = solve_path(&c, &inst.s, &[1.0, 0.9, 0.9, 0.8], true).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("repeated"), "{msg}");
+        assert!(msg.contains("λ[1] = λ[2]"), "{msg}");
+        assert!(msg.contains("0.9"), "{msg}");
+        // ascending pair: error names indices and values
+        let err = solve_path(&c, &inst.s, &[1.0, 0.7, 0.8], true).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("descending"), "{msg}");
+        assert!(msg.contains("λ[1] = 0.7 < λ[2] = 0.8"), "{msg}");
     }
 }

@@ -6,24 +6,110 @@
 //! model per-component cost as size^J (J = 3, the §3 solver exponent) and
 //! schedule by Longest-Processing-Time-first greedy onto the least-loaded
 //! machine — the classic 4/3-approximation for makespan.
+//!
+//! The tiered engine refines this with [`BlockMeta`]: the cost of a block
+//! depends on the solve tier it will dispatch to (closed-form tiers are
+//! orders of magnitude cheaper than size^J) and, for iterative blocks, on
+//! edge density (sparse blocks converge in fewer, cheaper active-set
+//! sweeps). [`schedule_blocks`] uses this model and additionally emits
+//! *execution units*: each expensive block is its own unit while a
+//! machine's tiny blocks batch into one, so a heavy-tailed partition with
+//! thousands of singletons never swamps the pool with trivial spawns.
 
+use crate::solvers::closed_form::Tier;
 use anyhow::{bail, Result};
 
-/// Cost model for a component of size n: n^J.
+/// Blocks at or below this size are batched into their machine's tiny-unit
+/// even when they need an iterative solver — the pool-task overhead
+/// dominates the solve below it.
+pub const TINY_SIZE: usize = 8;
+
+/// Scheduling-relevant facts about one block.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockMeta {
+    pub size: usize,
+    /// Edges of the thresholded in-block graph (|S_ij| > λ, i < j).
+    pub n_edges: usize,
+    /// Solve tier the block will dispatch to.
+    pub tier: Tier,
+}
+
+impl BlockMeta {
+    /// Fraction of possible in-block edges present (1.0 for size ≤ 1).
+    pub fn density(&self) -> f64 {
+        let b = self.size as f64;
+        let max_edges = b * (b - 1.0) / 2.0;
+        if max_edges > 0.0 {
+            (self.n_edges as f64 / max_edges).min(1.0)
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Cost model: size^J for iterative blocks (scaled by edge density down to
+/// `density_floor`), constant/quadratic for the closed-form tiers.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
     pub exponent: f64,
+    /// Cost fraction a fully sparse iterative block retains relative to a
+    /// dense one of the same size (the logdet/recovery floor that sparsity
+    /// cannot remove).
+    pub density_floor: f64,
 }
 
 impl Default for CostModel {
     fn default() -> Self {
-        CostModel { exponent: 3.0 }
+        CostModel { exponent: 3.0, density_floor: 0.25 }
     }
 }
 
 impl CostModel {
+    /// Legacy size-only cost: n^J (assumes a dense iterative block).
     pub fn cost(&self, size: usize) -> f64 {
         (size as f64).powf(self.exponent)
+    }
+
+    /// Tier- and density-aware block cost (arbitrary units; only ratios
+    /// matter to the scheduler).
+    pub fn block_cost(&self, meta: &BlockMeta) -> f64 {
+        match meta.tier {
+            Tier::Singleton => 1.0,
+            Tier::Pair => 8.0,
+            // tree kernel: O(b²) from the non-edge KKT verification
+            Tier::Tree => 2.0 * (meta.size as f64).powi(2),
+            Tier::Iterative => {
+                let scale = self.density_floor + (1.0 - self.density_floor) * meta.density();
+                self.cost(meta.size) * scale
+            }
+        }
+    }
+
+    /// Calibrate the exponent from measured (size, seconds) samples of
+    /// iterative solves: least-squares slope of ln(secs) on ln(size).
+    /// Returns `None` with fewer than two distinct usable sizes. The
+    /// density floor is left at its current value — densities barely vary
+    /// within one calibration run.
+    pub fn fit(&self, samples: &[(usize, f64)]) -> Option<CostModel> {
+        let pts: Vec<(f64, f64)> = samples
+            .iter()
+            .filter(|&&(sz, secs)| sz >= 2 && secs > 0.0)
+            .map(|&(sz, secs)| ((sz as f64).ln(), secs.ln()))
+            .collect();
+        let n = pts.len() as f64;
+        let first_x = pts.first()?.0;
+        if !pts.iter().any(|&(x, _)| (x - first_x).abs() > 1e-12) {
+            return None;
+        }
+        let mx = pts.iter().map(|p| p.0).sum::<f64>() / n;
+        let my = pts.iter().map(|p| p.1).sum::<f64>() / n;
+        let sxx: f64 = pts.iter().map(|p| (p.0 - mx) * (p.0 - mx)).sum();
+        let sxy: f64 = pts.iter().map(|p| (p.0 - mx) * (p.1 - my)).sum();
+        let slope = sxy / sxx;
+        if !slope.is_finite() {
+            return None;
+        }
+        Some(CostModel { exponent: slope.clamp(1.0, 5.0), density_floor: self.density_floor })
     }
 }
 
@@ -36,6 +122,12 @@ pub struct Schedule {
     pub per_machine: Vec<Vec<usize>>,
     /// modeled load (Σ cost) per machine
     pub loads: Vec<f64>,
+    /// Execution units for the pool, modeled-cost descending: each
+    /// expensive block alone, each machine's tiny blocks batched into one.
+    /// With the pool's dynamic task claiming this realizes LPT makespan
+    /// scheduling at unit granularity. Legacy schedulers emit one unit per
+    /// non-idle machine.
+    pub units: Vec<Vec<usize>>,
 }
 
 impl Schedule {
@@ -104,7 +196,78 @@ pub fn schedule_lpt(
         per_machine[m].push(c);
         loads[m] += cost.cost(sizes[c]);
     }
-    Ok(Schedule { machine_of, per_machine, loads })
+    let units = machine_units(&per_machine);
+    Ok(Schedule { machine_of, per_machine, loads, units })
+}
+
+/// Legacy unit layout: each non-idle machine's whole assignment is one unit.
+fn machine_units(per_machine: &[Vec<usize>]) -> Vec<Vec<usize>> {
+    per_machine.iter().filter(|comps| !comps.is_empty()).cloned().collect()
+}
+
+/// Tier/density-aware LPT schedule over [`BlockMeta`]s, with tiny-block
+/// batching into per-machine execution units (see [`Schedule::units`]).
+///
+/// Same capacity contract as [`schedule_lpt`]: a single block larger than
+/// `capacity` is an error — raise λ instead of over-committing a machine.
+pub fn schedule_blocks(
+    metas: &[BlockMeta],
+    n_machines: usize,
+    capacity: usize,
+    cost: CostModel,
+) -> Result<Schedule> {
+    if n_machines == 0 {
+        bail!("need at least one machine");
+    }
+    if let Some((idx, m)) = metas.iter().enumerate().find(|(_, m)| m.size > capacity) {
+        bail!(
+            "component {idx} of size {} exceeds machine capacity {capacity}; \
+             raise lambda to at least lambda_{{p_max}} (screen::lambda_for_capacity)",
+            m.size
+        );
+    }
+
+    let costs: Vec<f64> = metas.iter().map(|m| cost.block_cost(m)).collect();
+    let mut order: Vec<usize> = (0..metas.len()).collect();
+    order.sort_by(|&a, &b| costs[b].partial_cmp(&costs[a]).unwrap().then(a.cmp(&b)));
+
+    let mut machine_of = vec![0usize; metas.len()];
+    let mut per_machine = vec![Vec::new(); n_machines];
+    let mut loads = vec![0.0f64; n_machines];
+    for &c in &order {
+        let m = (0..n_machines)
+            .min_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+            .unwrap();
+        machine_of[c] = m;
+        per_machine[m].push(c);
+        loads[m] += costs[c];
+    }
+
+    // Units: expensive blocks individually; a machine's tiny blocks (all
+    // closed-form tiers + iterative blocks of size ≤ TINY_SIZE) as one
+    // batch. Cost-descending order so the pool's dynamic claiming starts
+    // the longest work first.
+    let is_tiny = |c: usize| metas[c].tier != Tier::Iterative || metas[c].size <= TINY_SIZE;
+    let mut weighted: Vec<(f64, Vec<usize>)> = Vec::new();
+    for comps in &per_machine {
+        let mut batch = Vec::new();
+        let mut batch_cost = 0.0;
+        for &c in comps {
+            if is_tiny(c) {
+                batch.push(c);
+                batch_cost += costs[c];
+            } else {
+                weighted.push((costs[c], vec![c]));
+            }
+        }
+        if !batch.is_empty() {
+            weighted.push((batch_cost, batch));
+        }
+    }
+    weighted.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let units = weighted.into_iter().map(|(_, comps)| comps).collect();
+
+    Ok(Schedule { machine_of, per_machine, loads, units })
 }
 
 /// Alternative policy for the ablation bench: round-robin in input order
@@ -130,7 +293,8 @@ pub fn schedule_round_robin(
         per_machine[m].push(c);
         loads[m] += cost.cost(s);
     }
-    Ok(Schedule { machine_of, per_machine, loads })
+    let units = machine_units(&per_machine);
+    Ok(Schedule { machine_of, per_machine, loads, units })
 }
 
 #[cfg(test)]
@@ -205,5 +369,90 @@ mod tests {
         let sched = schedule_lpt(&[], 2, 10, CostModel::default()).unwrap();
         assert_eq!(sched.makespan(), 0.0);
         assert_eq!(sched.parallel_speedup(), 1.0);
+        assert!(sched.units.is_empty());
+    }
+
+    #[test]
+    fn legacy_units_cover_machines() {
+        let sizes = [3, 7, 2, 9, 4, 6, 1];
+        let sched = schedule_lpt(&sizes, 3, 10, CostModel::default()).unwrap();
+        let mut covered: Vec<usize> = sched.units.iter().flatten().copied().collect();
+        covered.sort_unstable();
+        assert_eq!(covered, (0..7).collect::<Vec<_>>());
+    }
+
+    fn meta(size: usize, n_edges: usize, tier: Tier) -> BlockMeta {
+        BlockMeta { size, n_edges, tier }
+    }
+
+    #[test]
+    fn block_cost_orders_tiers() {
+        let cost = CostModel::default();
+        let single = cost.block_cost(&meta(1, 0, Tier::Singleton));
+        let pair = cost.block_cost(&meta(2, 1, Tier::Pair));
+        let tree = cost.block_cost(&meta(20, 19, Tier::Tree));
+        let sparse = cost.block_cost(&meta(20, 30, Tier::Iterative));
+        let dense = cost.block_cost(&meta(20, 190, Tier::Iterative));
+        assert!(single < pair && pair < tree, "{single} {pair} {tree}");
+        assert!(tree < sparse, "tree kernel must model cheaper than iterative");
+        assert!(sparse < dense, "density must matter for iterative blocks");
+        assert!((dense - cost.cost(20)).abs() < 1e-9, "full density = legacy cost");
+        assert!(sparse >= cost.cost(20) * cost.density_floor);
+    }
+
+    #[test]
+    fn schedule_blocks_batches_tiny_work() {
+        // 40 singletons + 6 pairs + 2 big iterative blocks on 3 machines:
+        // units = 2 solo blocks + ≤3 tiny batches, never 48 spawns.
+        let mut metas: Vec<BlockMeta> = (0..40).map(|_| meta(1, 0, Tier::Singleton)).collect();
+        metas.extend((0..6).map(|_| meta(2, 1, Tier::Pair)));
+        metas.push(meta(30, 200, Tier::Iterative));
+        metas.push(meta(25, 120, Tier::Iterative));
+        let sched = schedule_blocks(&metas, 3, 100, CostModel::default()).unwrap();
+        assert!(sched.units.len() <= 5, "got {} units", sched.units.len());
+        let mut covered: Vec<usize> = sched.units.iter().flatten().copied().collect();
+        covered.sort_unstable();
+        assert_eq!(covered, (0..metas.len()).collect::<Vec<_>>());
+        // solo units first (cost-descending), and the two big blocks are solo
+        assert_eq!(sched.units[0].len(), 1);
+        let solos: Vec<usize> =
+            sched.units.iter().filter(|u| u.len() == 1).map(|u| u[0]).collect();
+        assert!(solos.contains(&46) && solos.contains(&47));
+        // the big blocks land on different machines
+        assert_ne!(sched.machine_of[46], sched.machine_of[47]);
+    }
+
+    #[test]
+    fn schedule_blocks_capacity_error_names_lambda() {
+        let metas = [meta(50, 300, Tier::Iterative), meta(10, 9, Tier::Tree)];
+        let err = schedule_blocks(&metas, 2, 40, CostModel::default()).unwrap_err();
+        assert!(err.to_string().contains("capacity"));
+        assert!(err.to_string().contains("lambda"));
+    }
+
+    #[test]
+    fn small_iterative_blocks_are_batched() {
+        let metas: Vec<BlockMeta> =
+            (0..10).map(|_| meta(TINY_SIZE, 12, Tier::Iterative)).collect();
+        let sched = schedule_blocks(&metas, 2, 100, CostModel::default()).unwrap();
+        assert!(sched.units.len() <= 2, "size ≤ TINY_SIZE must batch");
+    }
+
+    #[test]
+    fn fit_recovers_cubic_exponent() {
+        let base = CostModel::default();
+        let samples: Vec<(usize, f64)> =
+            [8usize, 16, 32, 64, 128].iter().map(|&s| (s, 2e-9 * (s as f64).powi(3))).collect();
+        let fitted = base.fit(&samples).unwrap();
+        assert!((fitted.exponent - 3.0).abs() < 1e-6, "got {}", fitted.exponent);
+        assert_eq!(fitted.density_floor, base.density_floor);
+    }
+
+    #[test]
+    fn fit_needs_two_distinct_sizes() {
+        let base = CostModel::default();
+        assert!(base.fit(&[]).is_none());
+        assert!(base.fit(&[(16, 0.5), (16, 0.6)]).is_none());
+        assert!(base.fit(&[(16, 0.0), (32, 0.0)]).is_none());
     }
 }

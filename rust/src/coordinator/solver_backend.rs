@@ -21,6 +21,12 @@ pub trait BlockSolver: Send + Sync {
     fn max_block(&self) -> Option<usize> {
         None
     }
+
+    /// Whether this backend penalizes the diagonal of Θ — the closed-form
+    /// tiers must agree with the iterative solver they stand in for.
+    fn penalize_diagonal(&self) -> bool {
+        true
+    }
 }
 
 /// In-process Rust solvers (GLASSO / SMACS / ADMM).
@@ -48,6 +54,10 @@ impl BlockSolver for NativeBackend {
     fn solve_block(&self, s: &Mat, lambda: f64, warm: Option<&WarmStart>) -> Result<Solution> {
         solvers::solve(self.kind, s, lambda, &self.opts, warm)
     }
+
+    fn penalize_diagonal(&self) -> bool {
+        self.opts.penalize_diagonal
+    }
 }
 
 /// Failure-injection backend for tests: fails any block whose size is in
@@ -67,6 +77,10 @@ impl<B: BlockSolver> BlockSolver for FailInjectBackend<B> {
             bail!("injected failure for block of size {}", s.rows());
         }
         self.inner.solve_block(s, lambda, warm)
+    }
+
+    fn penalize_diagonal(&self) -> bool {
+        self.inner.penalize_diagonal()
     }
 }
 

@@ -16,6 +16,7 @@ use super::assemble::SolvedBlock;
 use super::partitioner::SubProblem;
 use super::scheduler::Schedule;
 use super::solver_backend::BlockSolver;
+use crate::solvers::closed_form::{self, Tier};
 use crate::solvers::WarmStart;
 use crate::util::timer::Stopwatch;
 use anyhow::{anyhow, Result};
@@ -26,6 +27,13 @@ use std::sync::Mutex;
 /// `warm[i]` is an optional warm start for sub-problem i. Returns blocks in
 /// sub-problem order. The first solver error aborts the batch (remaining
 /// queued work is drained), and the error carries the failing component.
+///
+/// With `tiered` each block is first offered to the closed-form kernels
+/// (`solvers::closed_form`); only blocks they refuse — cyclic graphs, or
+/// tree candidates that failed KKT verification — reach the iterative
+/// backend. The tier that produced each solution is recorded on the
+/// [`SolvedBlock`]. Classification depends only on block data, never on
+/// thread count, so serial and parallel runs stay bit-identical.
 pub fn run_blocks(
     backend: &dyn BlockSolver,
     subproblems: &[SubProblem],
@@ -33,6 +41,7 @@ pub fn run_blocks(
     warm: &[Option<WarmStart>],
     lambda: f64,
     parallel: bool,
+    tiered: bool,
 ) -> Result<Vec<SolvedBlock>> {
     assert_eq!(schedule.machine_of.len(), subproblems.len());
     assert!(warm.is_empty() || warm.len() == subproblems.len());
@@ -41,13 +50,16 @@ pub fn run_blocks(
         // Serial path (paper's Table-1 timing methodology).
         let mut out = Vec::with_capacity(subproblems.len());
         for (i, sp) in subproblems.iter().enumerate() {
-            out.push(solve_one(backend, sp, warm.get(i).and_then(|w| w.as_ref()), lambda, schedule.machine_of[i])?);
+            let w = warm.get(i).and_then(|w| w.as_ref());
+            out.push(solve_one(backend, sp, w, lambda, schedule.machine_of[i], tiered)?);
         }
         return Ok(out);
     }
 
-    // Parallel path: one pool task per machine, each executing its
-    // assigned components in order.
+    // Parallel path: one pool task per execution unit (expensive blocks
+    // solo, tiny blocks batched — see `Schedule::units`). Units are
+    // modeled-cost descending and the pool claims them dynamically, so the
+    // longest work starts first (dynamic LPT on makespan).
     let results: Mutex<Vec<Option<Result<SolvedBlock>>>> =
         Mutex::new((0..subproblems.len()).map(|_| None).collect());
 
@@ -55,16 +67,16 @@ pub fn run_blocks(
         let results = &results;
         let warm = &warm;
         let tasks: Vec<crate::util::pool::Task<'_>> = schedule
-            .per_machine
+            .units
             .iter()
-            .enumerate()
-            .filter(|(_, comps)| !comps.is_empty())
-            .map(|(machine, comps)| {
+            .filter(|comps| !comps.is_empty())
+            .map(|comps| {
                 Box::new(move || {
                     for &c in comps {
                         let sp = &subproblems[c];
                         let w = warm.get(c).and_then(|w| w.as_ref());
-                        let r = solve_one(backend, sp, w, lambda, machine);
+                        let machine = schedule.machine_of[c];
+                        let r = solve_one(backend, sp, w, lambda, machine, tiered);
                         results.lock().unwrap()[c] = Some(r);
                     }
                 }) as crate::util::pool::Task<'_>
@@ -98,8 +110,23 @@ fn solve_one(
     warm: Option<&WarmStart>,
     lambda: f64,
     machine: usize,
+    tiered: bool,
 ) -> Result<SolvedBlock> {
     let sw = Stopwatch::start();
+    if tiered {
+        if let Some((solution, tier)) =
+            closed_form::solve_closed_form(&sp.s_block, lambda, backend.penalize_diagonal())
+        {
+            return Ok(SolvedBlock {
+                component: sp.component,
+                indices: sp.indices.clone(),
+                solution,
+                secs: sw.elapsed_secs(),
+                machine,
+                tier,
+            });
+        }
+    }
     let solution = backend
         .solve_block(&sp.s_block, lambda, warm)
         .map_err(|e| anyhow!("component {} (size {}): {e}", sp.component, sp.size()))?;
@@ -109,6 +136,7 @@ fn solve_one(
         solution,
         secs: sw.elapsed_secs(),
         machine,
+        tier: Tier::Iterative,
     })
 }
 
@@ -138,12 +166,15 @@ mod tests {
         let sizes: Vec<usize> = sps.iter().map(|s| s.size()).collect();
         let sched = schedule_lpt(&sizes, 3, 10, CostModel::default()).unwrap();
         let backend = NativeBackend::glasso();
-        let a = run_blocks(&backend, &sps, &sched, &[], 0.5, false).unwrap();
-        let b = run_blocks(&backend, &sps, &sched, &[], 0.5, true).unwrap();
-        assert_eq!(a.len(), b.len());
-        for (x, y) in a.iter().zip(b.iter()) {
-            assert_eq!(x.component, y.component);
-            assert!(x.solution.theta.max_abs_diff(&y.solution.theta) < 1e-12);
+        for tiered in [false, true] {
+            let a = run_blocks(&backend, &sps, &sched, &[], 0.5, false, tiered).unwrap();
+            let b = run_blocks(&backend, &sps, &sched, &[], 0.5, true, tiered).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.component, y.component);
+                assert_eq!(x.tier, y.tier);
+                assert!(x.solution.theta.max_abs_diff(&y.solution.theta) < 1e-12);
+            }
         }
     }
 
@@ -154,7 +185,7 @@ mod tests {
         let sched = schedule_lpt(&sizes, 2, 10, CostModel::default()).unwrap();
         let backend =
             FailInjectBackend { inner: NativeBackend::glasso(), fail_sizes: vec![3] };
-        let err = run_blocks(&backend, &sps, &sched, &[], 0.5, false).unwrap_err();
+        let err = run_blocks(&backend, &sps, &sched, &[], 0.5, false, false).unwrap_err();
         let msg = err.to_string();
         assert!(msg.contains("size 3"), "{msg}");
     }
@@ -166,8 +197,27 @@ mod tests {
         let sched = schedule_lpt(&sizes, 3, 10, CostModel::default()).unwrap();
         let backend =
             FailInjectBackend { inner: NativeBackend::glasso(), fail_sizes: vec![2] };
-        let err = run_blocks(&backend, &sps, &sched, &[], 0.5, true).unwrap_err();
+        let err = run_blocks(&backend, &sps, &sched, &[], 0.5, true, false).unwrap_err();
         assert!(err.to_string().contains("failed"));
+    }
+
+    #[test]
+    fn tiered_intercepts_before_backend() {
+        // The demo blocks are a 3-chain (tree) and two pairs — all
+        // closed-form, so a backend that fails every size never runs.
+        let (_, sps) = demo();
+        let sizes: Vec<usize> = sps.iter().map(|s| s.size()).collect();
+        let sched = schedule_lpt(&sizes, 2, 10, CostModel::default()).unwrap();
+        let backend =
+            FailInjectBackend { inner: NativeBackend::glasso(), fail_sizes: vec![2, 3] };
+        let blocks = run_blocks(&backend, &sps, &sched, &[], 0.5, false, true).unwrap();
+        use crate::solvers::closed_form::Tier;
+        for b in &blocks {
+            assert_ne!(b.tier, Tier::Iterative, "component {}", b.component);
+            assert!(b.solution.converged);
+        }
+        // and with tiering off the same backend does fail
+        assert!(run_blocks(&backend, &sps, &sched, &[], 0.5, false, false).is_err());
     }
 
     #[test]
@@ -176,7 +226,7 @@ mod tests {
         let sizes: Vec<usize> = sps.iter().map(|s| s.size()).collect();
         let sched = schedule_lpt(&sizes, 2, 10, CostModel::default()).unwrap();
         let backend = NativeBackend::glasso();
-        let blocks = run_blocks(&backend, &sps, &sched, &[], 0.5, true).unwrap();
+        let blocks = run_blocks(&backend, &sps, &sched, &[], 0.5, true, true).unwrap();
         for (i, b) in blocks.iter().enumerate() {
             assert_eq!(b.machine, sched.machine_of[i]);
         }

@@ -283,6 +283,21 @@ impl ScreenIndex {
         Partition::from_labels(&uf.labels())
     }
 
+    /// Per-component active-edge counts at λ, indexed by the component
+    /// labels of `partition` (which must be this index's partition at the
+    /// same λ — e.g. from [`ScreenIndex::partition_at`] or a session
+    /// cache). out[c] = |{active edges with both endpoints in component
+    /// c}|. One pass over the active-edge prefix; feeds the per-block
+    /// density term of the coordinator's cost model.
+    pub fn component_edge_counts(&self, lambda: f64, partition: &Partition) -> Vec<usize> {
+        let mut counts = vec![0usize; partition.n_components()];
+        for e in self.edges_above(lambda) {
+            // both endpoints share a component by construction
+            counts[partition.label_of(e.i as usize)] += 1;
+        }
+        counts
+    }
+
     /// Union-find with the first `m` tie groups applied.
     fn replay_to(&self, m: usize) -> UnionFind {
         let ci = self.checkpoints.partition_point(|c| c.groups_applied <= m) - 1;
@@ -389,6 +404,30 @@ mod tests {
             let prefix = idx.edges_above(lam);
             assert!(prefix.iter().all(|e| e.w > lam));
             assert_eq!(prefix.len(), idx.edge_count(lam));
+        }
+    }
+
+    #[test]
+    fn component_edge_counts_match_naive() {
+        for (s, seed_tag) in [(demo_s(), "demo"), (ties_s(), "ties")] {
+            let idx = ScreenIndex::from_dense(&s);
+            for lam in [0.95, 0.75, 0.45, 0.1, 0.0] {
+                let part = idx.partition_at(lam);
+                let counts = idx.component_edge_counts(lam, &part);
+                assert_eq!(counts.len(), part.n_components());
+                // naive: rescan S
+                let mut naive = vec![0usize; part.n_components()];
+                for i in 0..s.rows() {
+                    for j in (i + 1)..s.rows() {
+                        if s.get(i, j).abs() > lam {
+                            assert_eq!(part.label_of(i), part.label_of(j));
+                            naive[part.label_of(i)] += 1;
+                        }
+                    }
+                }
+                assert_eq!(counts, naive, "{seed_tag} λ={lam}");
+                assert_eq!(counts.iter().sum::<usize>(), idx.edge_count(lam));
+            }
         }
     }
 

@@ -1,0 +1,466 @@
+//! Closed-form block kernels — the fast tiers of the post-screen solve
+//! engine (Fattahi & Sojoudi, "Graphical Lasso and Thresholding:
+//! Equivalence and Closed-form Solutions").
+//!
+//! After exact thresholding (Theorem 1), real partitions are heavy-tailed:
+//! thousands of singleton/pair components, many small tree-structured
+//! blocks, and a few large cyclic ones. Only the last class needs an
+//! iterative solver. The tiers, in dispatch order:
+//!
+//! - **Singleton** (b = 1): θ = 1/(s₁₁ + λ) — the Witten–Friedman special
+//!   case, O(1).
+//! - **Pair** (b = 2): W₁₁ = s₁₁ + λ, W₂₂ = s₂₂ + λ, W₁₂ = soft(s₁₂, λ);
+//!   Θ = W⁻¹ in closed form. Exact: the 2×2 KKT system has no non-edge
+//!   inequality left to verify.
+//! - **Tree** (acyclic thresholded in-block graph): the Markov
+//!   factorization of a Gaussian tree gives Θ from the edge 2×2 marginals,
+//!     θ_ii = 1/w_ii + Σ_{j∈N(i)} w_ij²/(w_ii·d_ij),
+//!     θ_ij = −w_ij/d_ij   with d_ij = w_ii·w_jj − w_ij²,
+//!   and W = Θ⁻¹ by path products of edge correlations. The candidate is
+//!   accepted only after verifying every non-edge KKT inequality
+//!   |W_ik − s_ik| ≤ λ; on violation the kernel reports failure and the
+//!   caller falls back to the iterative tier — so a closed-form answer is
+//!   always the exact optimum, never a heuristic.
+//! - **Iterative**: everything else (GLASSO / SMACS / ADMM backends).
+//!
+//! All kernels honor `penalize_diagonal` (diagonal weight s_ii + λ vs
+//! s_ii) and return [`Solution`]s with `iterations = 0, converged = true`
+//! and objectives consistent with the iterative solvers' convention.
+
+use super::{soft_threshold, Solution};
+use crate::graph::UnionFind;
+use crate::linalg::Mat;
+
+/// Which solve tier a block is dispatched to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Singleton,
+    Pair,
+    Tree,
+    Iterative,
+}
+
+impl Tier {
+    /// All tiers in dispatch order.
+    pub const ALL: [Tier; 4] = [Tier::Singleton, Tier::Pair, Tier::Tree, Tier::Iterative];
+
+    /// Dense index for per-tier accounting arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Tier::Singleton => 0,
+            Tier::Pair => 1,
+            Tier::Tree => 2,
+            Tier::Iterative => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Singleton => "singleton",
+            Tier::Pair => "pair",
+            Tier::Tree => "tree",
+            Tier::Iterative => "iterative",
+        }
+    }
+}
+
+/// Absolute slack on the non-edge KKT inequality |W_ik − s_ik| ≤ λ: path
+/// products carry a few ulps of roundoff, and edges sit exactly ON the
+/// bound by construction. Margins this small perturb θ by ≪ 1e-8 — below
+/// the agreement tolerance the property tests enforce.
+const KKT_SLACK: f64 = 1e-9;
+
+/// The thresholded in-block edge set: pairs (i, j), i < j, with
+/// |S_ij| > λ strictly (the crate-wide boundary semantics).
+pub fn block_edges(s: &Mat, lambda: f64) -> Vec<(usize, usize)> {
+    let p = s.rows();
+    let mut edges = Vec::new();
+    for i in 0..p {
+        let row = s.row(i);
+        for (j, &v) in row.iter().enumerate().skip(i + 1) {
+            if v.abs() > lambda {
+                edges.push((i, j));
+            }
+        }
+    }
+    edges
+}
+
+/// Classify a block by size and the structure of its thresholded graph.
+/// A cycle-free edge set (every union merges) is the Tree tier; anything
+/// with a cycle needs an iterative solver.
+pub fn classify_edges(p: usize, edges: &[(usize, usize)]) -> Tier {
+    match p {
+        0 | 1 => Tier::Singleton,
+        2 => Tier::Pair,
+        _ => {
+            if edges.len() >= p {
+                return Tier::Iterative; // a forest on p nodes has ≤ p−1 edges
+            }
+            let mut uf = UnionFind::new(p);
+            if edges.iter().all(|&(i, j)| uf.union(i, j)) {
+                Tier::Tree
+            } else {
+                Tier::Iterative
+            }
+        }
+    }
+}
+
+/// [`classify_edges`] straight off the block matrix.
+pub fn classify(s: &Mat, lambda: f64) -> Tier {
+    classify_edges(s.rows(), &block_edges(s, lambda))
+}
+
+/// Exact 2×2 solution. `None` only on degenerate input (non-PD after
+/// thresholding, e.g. S not positive semidefinite).
+pub fn solve_pair(s: &Mat, lambda: f64, penalize_diagonal: bool) -> Option<Solution> {
+    debug_assert_eq!(s.rows(), 2);
+    let diag_pen = if penalize_diagonal { lambda } else { 0.0 };
+    let w11 = s.get(0, 0) + diag_pen;
+    let w22 = s.get(1, 1) + diag_pen;
+    if w11 <= 0.0 || w22 <= 0.0 {
+        return None;
+    }
+    let w12 = soft_threshold(s.get(0, 1), lambda);
+    let det = w11 * w22 - w12 * w12;
+    if det <= 0.0 {
+        return None;
+    }
+    let theta = Mat::from_vec(2, 2, vec![w22 / det, -w12 / det, -w12 / det, w11 / det]);
+    let w = Mat::from_vec(2, 2, vec![w11, w12, w12, w22]);
+    let objective = block_objective(s, &theta, det.ln(), lambda, penalize_diagonal);
+    Some(Solution { theta, w, iterations: 0, converged: true, objective })
+}
+
+/// Exact solution for a block whose thresholded graph is a forest.
+/// `edges` must be exactly `block_edges(s, lambda)` (cycle-free). Returns
+/// `None` when the non-edge KKT inequalities fail — the candidate was not
+/// optimal and the caller must fall back to an iterative solver — or on
+/// degenerate (non-PD) input.
+pub fn solve_tree(
+    s: &Mat,
+    lambda: f64,
+    penalize_diagonal: bool,
+    edges: &[(usize, usize)],
+) -> Option<Solution> {
+    let p = s.rows();
+    let diag_pen = if penalize_diagonal { lambda } else { 0.0 };
+
+    // KKT-pinned weights: w_ii on the diagonal, soft(s_ij, λ) on edges.
+    let mut wd = vec![0.0f64; p];
+    for (i, w) in wd.iter_mut().enumerate() {
+        *w = s.get(i, i) + diag_pen;
+        if *w <= 0.0 {
+            return None;
+        }
+    }
+    // adjacency: (neighbor, w_ij, d_ij = w_ii w_jj − w_ij²)
+    let mut adj: Vec<Vec<(usize, f64, f64)>> = vec![Vec::new(); p];
+    let mut logdet_w: f64 = wd.iter().map(|v| v.ln()).sum();
+    for &(i, j) in edges {
+        let wij = soft_threshold(s.get(i, j), lambda);
+        let d = wd[i] * wd[j] - wij * wij;
+        if d <= 0.0 {
+            return None;
+        }
+        adj[i].push((j, wij, d));
+        adj[j].push((i, wij, d));
+        logdet_w += (d / (wd[i] * wd[j])).ln();
+    }
+
+    // Θ from the tree Markov factorization: Σ_edges embedded (2×2 marginal)⁻¹
+    // − Σ_i (deg_i − 1)·e_i e_iᵀ/w_ii, written per-entry.
+    let mut theta = Mat::zeros(p, p);
+    for i in 0..p {
+        let mut tii = 1.0 / wd[i];
+        for &(j, wij, d) in &adj[i] {
+            tii += wij * wij / (wd[i] * d);
+            theta.set(i, j, -wij / d);
+        }
+        theta.set(i, i, tii);
+    }
+
+    // W = Θ⁻¹ by path products: along the tree path i → … → u → v,
+    // W_iv = W_iu · w_uv / w_uu. One DFS per source; entries stored once
+    // (i < v) so W is symmetric by construction.
+    let mut w = Mat::zeros(p, p);
+    let mut vals = vec![0.0f64; p];
+    let mut stack: Vec<(usize, usize)> = Vec::new();
+    for i in 0..p {
+        w.set(i, i, wd[i]);
+        vals[i] = wd[i];
+        stack.push((i, i));
+        while let Some((u, parent)) = stack.pop() {
+            for &(v, wuv, _) in &adj[u] {
+                if v == parent {
+                    continue;
+                }
+                vals[v] = vals[u] * wuv / wd[u];
+                if v > i {
+                    w.set(i, v, vals[v]);
+                    w.set(v, i, vals[v]);
+                }
+                stack.push((v, u));
+            }
+        }
+    }
+
+    // Verify the remaining KKT inequalities: every zero entry of Θ needs
+    // |W_ik − s_ik| ≤ λ. (Edges sit on the bound exactly; cross-component
+    // pairs have W_ik = 0 and |s_ik| ≤ λ by the screen.) A violation means
+    // the true optimum has an extra nonzero — not tree-structured after
+    // all — so the candidate is rejected.
+    for i in 0..p {
+        for k in (i + 1)..p {
+            if (w.get(i, k) - s.get(i, k)).abs() > lambda + KKT_SLACK {
+                return None;
+            }
+        }
+    }
+
+    let objective = block_objective(s, &theta, logdet_w, lambda, penalize_diagonal);
+    Some(Solution { theta, w, iterations: 0, converged: true, objective })
+}
+
+/// Dispatch a block to the cheapest exact kernel. Returns the solution and
+/// the tier that produced it, or `None` when the block needs an iterative
+/// solver (cyclic graph, or a tree candidate that failed KKT verification).
+pub fn solve_closed_form(
+    s: &Mat,
+    lambda: f64,
+    penalize_diagonal: bool,
+) -> Option<(Solution, Tier)> {
+    let p = s.rows();
+    match p {
+        0 => Some((
+            Solution {
+                theta: Mat::zeros(0, 0),
+                w: Mat::zeros(0, 0),
+                iterations: 0,
+                converged: true,
+                objective: 0.0,
+            },
+            Tier::Singleton,
+        )),
+        1 => {
+            let diag_pen = if penalize_diagonal { lambda } else { 0.0 };
+            if s.get(0, 0) + diag_pen <= 0.0 {
+                return None;
+            }
+            Some((super::solve_1x1(s.get(0, 0), diag_pen), Tier::Singleton))
+        }
+        2 => solve_pair(s, lambda, penalize_diagonal).map(|sol| (sol, Tier::Pair)),
+        _ => {
+            let edges = block_edges(s, lambda);
+            if classify_edges(p, &edges) != Tier::Tree {
+                return None;
+            }
+            solve_tree(s, lambda, penalize_diagonal, &edges).map(|sol| (sol, Tier::Tree))
+        }
+    }
+}
+
+/// Objective under the iterative solvers' convention: logdet W + tr(SΘ) +
+/// λ·penalty, with the diagonal included in the penalty only when
+/// `penalize_diagonal` (Θ ≻ 0 ⇒ trace > 0, matching `glasso::solve`).
+fn block_objective(
+    s: &Mat,
+    theta: &Mat,
+    logdet_w: f64,
+    lambda: f64,
+    penalize_diagonal: bool,
+) -> f64 {
+    let p = s.rows();
+    let mut tr = 0.0;
+    for i in 0..p {
+        tr += crate::linalg::dot(s.row(i), theta.row(i));
+    }
+    let penalty = if penalize_diagonal {
+        theta.abs_sum()
+    } else {
+        theta.abs_sum() - theta.trace().abs()
+    };
+    logdet_w + tr + lambda * penalty
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::solvers::{glasso, SolverOptions};
+    use crate::util::rng::Xoshiro256;
+
+    fn tight() -> SolverOptions {
+        SolverOptions { tol: 1e-10, inner_tol: 1e-12, max_iter: 5000, ..Default::default() }
+    }
+
+    /// Random forest block: S = D + tree edges with |s_ij| ∈ (0.25, 0.33),
+    /// diagonally dominant (degree-weighted), so PD and tree-structured at
+    /// λ = 0.2.
+    fn random_tree_block(p: usize, seed: u64) -> (Mat, Vec<(usize, usize)>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut s = Mat::zeros(p, p);
+        let mut edges = Vec::new();
+        for j in 1..p {
+            let i = rng.uniform_usize(j);
+            let sign = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            let v = sign * rng.uniform_range(0.25, 0.33);
+            s.set(i, j, v);
+            s.set(j, i, v);
+            edges.push((i, j));
+        }
+        for i in 0..p {
+            let rowsum: f64 = (0..p).filter(|&j| j != i).map(|j| s.get(i, j).abs()).sum();
+            s.set(i, i, rowsum + 1.0);
+        }
+        edges.sort_unstable();
+        (s, edges)
+    }
+
+    #[test]
+    fn classify_by_structure() {
+        let lam = 0.2;
+        // chain 0-1-2: tree
+        let mut chain = Mat::eye(3);
+        for &(i, j) in &[(0usize, 1usize), (1, 2)] {
+            chain.set(i, j, 0.5);
+            chain.set(j, i, 0.5);
+        }
+        assert_eq!(classify(&chain, lam), Tier::Tree);
+        // triangle: cycle → iterative
+        let mut tri = chain.clone();
+        tri.set(0, 2, 0.5);
+        tri.set(2, 0, 0.5);
+        assert_eq!(classify(&tri, lam), Tier::Iterative);
+        // sizes 1 and 2
+        assert_eq!(classify(&Mat::eye(1), lam), Tier::Singleton);
+        assert_eq!(classify(&Mat::eye(2), lam), Tier::Pair);
+        // boundary semantics: |s_ij| = λ is NOT an edge
+        let mut tie = Mat::eye(3);
+        tie.set(0, 1, lam);
+        tie.set(1, 0, lam);
+        assert_eq!(block_edges(&tie, lam).len(), 0);
+    }
+
+    #[test]
+    fn pair_matches_glasso() {
+        for (seed, &r) in [0.7f64, -0.55, 0.3, 0.05].iter().enumerate() {
+            let s = Mat::from_vec(2, 2, vec![1.3, r, r, 0.9]);
+            let lam = 0.2;
+            let (cf, tier) = solve_closed_form(&s, lam, true).unwrap();
+            assert_eq!(tier, Tier::Pair);
+            let it = glasso::solve(&s, lam, &tight(), None).unwrap();
+            let diff = cf.theta.max_abs_diff(&it.theta);
+            assert!(diff < 1e-8, "seed={seed} r={r} diff={diff}");
+            assert!((cf.objective - it.objective).abs() < 1e-7);
+            // Θ W = I exactly
+            let prod = gemm(&cf.theta, &cf.w);
+            assert!(prod.max_abs_diff(&Mat::eye(2)) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pair_subthreshold_is_diagonal() {
+        let s = Mat::from_vec(2, 2, vec![1.0, 0.1, 0.1, 2.0]);
+        let (cf, _) = solve_closed_form(&s, 0.5, true).unwrap();
+        assert_eq!(cf.theta.get(0, 1), 0.0);
+        assert!((cf.theta.get(0, 0) - 1.0 / 1.5).abs() < 1e-12);
+        assert!((cf.theta.get(1, 1) - 1.0 / 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tree_matches_glasso_and_inverts() {
+        for seed in 0..6u64 {
+            let p = 3 + (seed as usize % 6);
+            let (s, edges) = random_tree_block(p, seed);
+            let lam = 0.2;
+            assert_eq!(block_edges(&s, lam), edges, "seed={seed}");
+            let (cf, tier) = solve_closed_form(&s, lam, true).unwrap();
+            assert_eq!(tier, Tier::Tree);
+            let it = glasso::solve(&s, lam, &tight(), None).unwrap();
+            assert!(it.converged);
+            let diff = cf.theta.max_abs_diff(&it.theta);
+            assert!(diff < 1e-8, "seed={seed} p={p} diff={diff}");
+            let prod = gemm(&cf.theta, &cf.w);
+            let inv_err = prod.max_abs_diff(&Mat::eye(p));
+            assert!(inv_err < 1e-10, "seed={seed} ΘW−I={inv_err}");
+        }
+    }
+
+    #[test]
+    fn tree_unpenalized_diagonal() {
+        let (s, _) = random_tree_block(5, 17);
+        let lam = 0.2;
+        let (cf, _) = solve_closed_form(&s, lam, false).unwrap();
+        let opts = SolverOptions { penalize_diagonal: false, ..tight() };
+        let it = glasso::solve(&s, lam, &opts, None).unwrap();
+        assert!(cf.theta.max_abs_diff(&it.theta) < 1e-8);
+        // KKT diagonal for the variant: W_ii = S_ii exactly
+        for i in 0..5 {
+            assert!((cf.w.get(i, i) - s.get(i, i)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn tree_kkt_violation_falls_back() {
+        // Strong chain 0-1-2 with an inconsistent (0,2) entry: the path
+        // product W_02 = w01·w12/w11 lands far from s_02, violating the
+        // non-edge bound at λ = 0.1 — the kernel must refuse.
+        let mut s = Mat::eye(3);
+        for &(i, j, v) in &[(0usize, 1usize, 0.95), (1, 2, 0.95), (0, 2, -0.09)] {
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+        let lam = 0.1;
+        let edges = block_edges(&s, lam);
+        assert_eq!(edges, vec![(0, 1), (1, 2)]);
+        assert_eq!(classify_edges(3, &edges), Tier::Tree);
+        assert!(solve_tree(&s, lam, true, &edges).is_none());
+        assert!(solve_closed_form(&s, lam, true).is_none());
+    }
+
+    #[test]
+    fn forest_block_handles_disconnection() {
+        // Two disjoint edges inside one 4-node block (not connected): the
+        // forest formula still applies, cross-pair entries stay 0.
+        let mut s = Mat::eye(4);
+        for &(i, j) in &[(0usize, 1usize), (2, 3)] {
+            s.set(i, j, 0.5);
+            s.set(j, i, 0.5);
+        }
+        let lam = 0.2;
+        let (cf, tier) = solve_closed_form(&s, lam, true).unwrap();
+        assert_eq!(tier, Tier::Tree);
+        assert_eq!(cf.theta.get(0, 2), 0.0);
+        assert_eq!(cf.w.get(1, 3), 0.0);
+        let it = glasso::solve(&s, lam, &tight(), None).unwrap();
+        assert!(cf.theta.max_abs_diff(&it.theta) < 1e-8);
+    }
+
+    #[test]
+    fn singleton_dispatch() {
+        let s = Mat::from_vec(1, 1, vec![2.0]);
+        let (cf, tier) = solve_closed_form(&s, 0.5, true).unwrap();
+        assert_eq!(tier, Tier::Singleton);
+        assert!((cf.theta.get(0, 0) - 1.0 / 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cyclic_block_is_refused() {
+        let mut s = Mat::eye(3);
+        for &(i, j) in &[(0usize, 1usize), (1, 2), (0, 2)] {
+            s.set(i, j, 0.4);
+            s.set(j, i, 0.4);
+        }
+        assert!(solve_closed_form(&s, 0.2, true).is_none());
+    }
+
+    #[test]
+    fn objective_matches_generic_evaluator() {
+        let (s, _) = random_tree_block(6, 33);
+        let (cf, _) = solve_closed_form(&s, 0.2, true).unwrap();
+        let generic = crate::solvers::objective(&s, &cf.theta, 0.2).unwrap();
+        assert!((generic - cf.objective).abs() < 1e-9, "{generic} vs {}", cf.objective);
+    }
+}

@@ -6,7 +6,8 @@
 //!
 //!   β̂ = argmin_β ½ βᵀW₁₁β − s₁₂ᵀβ + λ‖β‖₁,      then  w₁₂ ← W₁₁ β̂
 //!
-//! by cyclic coordinate descent. The node-screening condition (10)
+//! by active-set coordinate descent (full KKT sweeps only to build and
+//! verify the working set). The node-screening condition (10)
 //! ‖s₁₂‖∞ ≤ λ ⇔ β̂ = 0 is checked first when `opts.node_screen_check` —
 //! §2.1 points out Witten–Friedman node screening is exactly this check,
 //! which CRAN glasso 1.4 omitted.
@@ -82,6 +83,7 @@ pub fn solve(
 
     let mut vbeta = vec![0.0; p];
     let mut coef = vec![0.0; p];
+    let mut active: Vec<usize> = Vec::with_capacity(p);
     let mut converged = false;
     let mut sweeps = 0usize;
 
@@ -122,11 +124,19 @@ pub fn solve(
             }
             crate::linalg::blas::weighted_row_sum(&w, &coef, &mut vbeta);
 
-            // Inner cyclic CD over k ≠ j.
+            // Inner active-set CD over k ≠ j (glmnet strategy): a full
+            // sweep rebuilds the working set (the nonzero support — zero
+            // coordinates with KKT violations turn nonzero during it and
+            // enter), then cheap sweeps touch only the working set until
+            // stable, then a full sweep re-verifies. Termination requires
+            // a clean full sweep, so the stopping criterion — and the
+            // support — match the plain cyclic loop. Every sweep counts
+            // toward inner_max_iter.
             let mut inner = 0usize;
-            loop {
+            'full: while inner < opts.inner_max_iter {
                 inner += 1;
                 let mut max_delta = 0.0f64;
+                active.clear();
                 for k in 0..p {
                     if k == j {
                         continue;
@@ -144,9 +154,34 @@ pub fn solve(
                         betas.set(k, j, nb);
                         max_delta = max_delta.max(delta.abs());
                     }
+                    if betas.get(k, j) != 0.0 {
+                        active.push(k);
+                    }
                 }
-                if max_delta <= opts.inner_tol || inner >= opts.inner_max_iter {
-                    break;
+                if max_delta <= opts.inner_tol {
+                    break 'full;
+                }
+                while inner < opts.inner_max_iter {
+                    inner += 1;
+                    let mut active_delta = 0.0f64;
+                    for &k in &active {
+                        let wkk = w.get(k, k);
+                        let bk = betas.get(k, j);
+                        let gradient = s.get(k, j) - (vbeta[k] - wkk * bk);
+                        let nb = super::soft_threshold(gradient, lambda) / wkk;
+                        let delta = nb - bk;
+                        if delta != 0.0 {
+                            let wrow = w.row(k);
+                            for i in 0..p {
+                                vbeta[i] += delta * wrow[i];
+                            }
+                            betas.set(k, j, nb);
+                            active_delta = active_delta.max(delta.abs());
+                        }
+                    }
+                    if active_delta <= opts.inner_tol {
+                        continue 'full;
+                    }
                 }
             }
 

@@ -78,6 +78,94 @@ pub fn solve_lasso_cd(
     LassoResult { beta: beta.to_vec(), sweeps, converged }
 }
 
+/// Active-set variant of [`solve_lasso_cd`] (the glmnet strategy): a full
+/// sweep visits every coordinate and rebuilds the working set (the nonzero
+/// support — zero coordinates whose KKT condition is violated turn nonzero
+/// during the sweep and enter it); then cheap sweeps touch only the
+/// working set until stable; then a full sweep re-verifies. Convergence is
+/// declared only by a clean full sweep, so the result satisfies exactly
+/// the same stopping criterion as the full-sweep solver — the support is
+/// identical at the solution — while large sparse problems stop paying
+/// O(k) per coordinate for coordinates that stay zero.
+///
+/// Every sweep, full or active, counts toward `max_sweeps`.
+pub fn solve_lasso_cd_active(
+    v: &Mat,
+    b: &[f64],
+    lambda: f64,
+    beta: &mut [f64],
+    tol: f64,
+    max_sweeps: usize,
+) -> LassoResult {
+    let k = b.len();
+    debug_assert_eq!(v.rows(), k);
+    debug_assert_eq!(v.cols(), k);
+    debug_assert_eq!(beta.len(), k);
+
+    if k == 0 {
+        return LassoResult { beta: Vec::new(), sweeps: 0, converged: true };
+    }
+
+    let mut vbeta = vec![0.0; k];
+    crate::linalg::blas::weighted_row_sum(v, beta, &mut vbeta);
+
+    let mut active: Vec<usize> = Vec::with_capacity(k);
+    let mut converged = false;
+    let mut sweeps = 0;
+    'full: while sweeps < max_sweeps {
+        // Full verification sweep: rebuilds the working set.
+        sweeps += 1;
+        let mut max_delta = 0.0f64;
+        active.clear();
+        for j in 0..k {
+            let vjj = v.get(j, j);
+            debug_assert!(vjj > 0.0, "V diagonal must be positive");
+            let gradient = b[j] - (vbeta[j] - vjj * beta[j]);
+            let new_beta = soft_threshold(gradient, lambda) / vjj;
+            let delta = new_beta - beta[j];
+            if delta != 0.0 {
+                let row = v.row(j);
+                for i in 0..k {
+                    vbeta[i] += delta * row[i];
+                }
+                beta[j] = new_beta;
+                max_delta = max_delta.max(delta.abs());
+            }
+            if beta[j] != 0.0 {
+                active.push(j);
+            }
+        }
+        if max_delta <= tol {
+            converged = true;
+            break;
+        }
+        // Active-only sweeps until the working set is stable.
+        while sweeps < max_sweeps {
+            sweeps += 1;
+            let mut active_delta = 0.0f64;
+            for &j in &active {
+                let vjj = v.get(j, j);
+                let gradient = b[j] - (vbeta[j] - vjj * beta[j]);
+                let new_beta = soft_threshold(gradient, lambda) / vjj;
+                let delta = new_beta - beta[j];
+                if delta != 0.0 {
+                    let row = v.row(j);
+                    for i in 0..k {
+                        vbeta[i] += delta * row[i];
+                    }
+                    beta[j] = new_beta;
+                    active_delta = active_delta.max(delta.abs());
+                }
+            }
+            if active_delta <= tol {
+                continue 'full;
+            }
+        }
+    }
+
+    LassoResult { beta: beta.to_vec(), sweeps, converged }
+}
+
 /// KKT residual of the lasso sub-problem: for β_j ≠ 0,
 /// |V β − b + λ sign(β)|_j must vanish; for β_j = 0, |(Vβ − b)_j| ≤ λ.
 /// Returns the maximum violation.
@@ -191,5 +279,60 @@ mod tests {
         let r = solve_lasso_cd(&v, &[], 0.1, &mut [], 1e-10, 10);
         assert!(r.converged);
         assert!(r.beta.is_empty());
+        let ra = solve_lasso_cd_active(&v, &[], 0.1, &mut [], 1e-10, 10);
+        assert!(ra.converged);
+    }
+
+    #[test]
+    fn active_matches_full_sweep() {
+        for seed in 0..10u64 {
+            let k = 4 + (seed as usize % 10);
+            let v = random_spd(k, seed + 50);
+            let mut rng = Xoshiro256::seed_from_u64(seed + 2000);
+            let b: Vec<f64> = (0..k).map(|_| rng.gaussian()).collect();
+            let lambda = 0.4;
+            let mut full = vec![0.0; k];
+            let rf = solve_lasso_cd(&v, &b, lambda, &mut full, 1e-12, 10_000);
+            let mut act = vec![0.0; k];
+            let ra = solve_lasso_cd_active(&v, &b, lambda, &mut act, 1e-12, 10_000);
+            assert!(rf.converged && ra.converged, "seed={seed}");
+            for j in 0..k {
+                assert_eq!(
+                    full[j] != 0.0,
+                    act[j] != 0.0,
+                    "seed={seed} support differs at {j}: {} vs {}",
+                    full[j],
+                    act[j]
+                );
+                assert!((full[j] - act[j]).abs() < 1e-8, "seed={seed} j={j}");
+            }
+            let viol = lasso_kkt_residual(&v, &b, lambda, &act);
+            assert!(viol < 1e-8, "seed={seed} viol={viol}");
+        }
+    }
+
+    #[test]
+    fn active_all_zero_is_one_sweep() {
+        // λ dominates: the verification sweep finds nothing and stops.
+        let v = random_spd(5, 3);
+        let b = [0.1, -0.2, 0.05, 0.0, 0.15];
+        let mut beta = [0.0; 5];
+        let r = solve_lasso_cd_active(&v, &b, 1.0, &mut beta, 1e-12, 100);
+        assert!(r.converged);
+        assert!(beta.iter().all(|&x| x == 0.0));
+        assert_eq!(r.sweeps, 1);
+    }
+
+    #[test]
+    fn active_warm_start_from_solution_is_immediate() {
+        let v = random_spd(20, 9);
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        let b: Vec<f64> = (0..20).map(|_| rng.gaussian()).collect();
+        let mut beta = vec![0.0; 20];
+        solve_lasso_cd_active(&v, &b, 0.2, &mut beta, 1e-12, 10_000);
+        let mut warm = beta.clone();
+        let rw = solve_lasso_cd_active(&v, &b, 0.2, &mut warm, 1e-12, 10_000);
+        assert_eq!(rw.sweeps, 1, "clean verification sweep should terminate");
+        assert_eq!(warm, beta);
     }
 }

@@ -1,0 +1,255 @@
+//! Property tests for the tiered solve engine, via `proptest_lite`.
+//!
+//! The closed-form kernels and the active-set inner loop are perf
+//! optimizations that must be *semantically invisible*:
+//! - every block the closed-form tiers accept matches a tightly-converged
+//!   iterative solve to ≤ 1e-8 (and Θ·W = I to machine precision);
+//! - active-set coordinate descent lands on a bit-identical support and
+//!   the same coefficients as the full-sweep oracle it replaced;
+//! - the tiered coordinator path agrees with the legacy iterative-only
+//!   path, and tiered serial == tiered parallel bit-for-bit;
+//! - a λ grid with a repeated or ascending pair is rejected with an error
+//!   naming the offending indices and values.
+
+use covthresh::coordinator::path::solve_path;
+use covthresh::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
+use covthresh::datasets::synthetic::block_instance;
+use covthresh::linalg::Mat;
+use covthresh::proptest_lite::{check_property, CaseResult, PropConfig};
+use covthresh::solvers::closed_form::{classify, solve_closed_form, Tier};
+use covthresh::solvers::lasso_cd::{lasso_kkt_residual, solve_lasso_cd, solve_lasso_cd_active};
+use covthresh::solvers::{glasso, SolverKind, SolverOptions};
+use covthresh::util::rng::Xoshiro256;
+
+fn tight() -> SolverOptions {
+    SolverOptions {
+        tol: 1e-10,
+        inner_tol: 1e-12,
+        max_iter: 5000,
+        inner_max_iter: 2000,
+        ..Default::default()
+    }
+}
+
+/// Random tree-structured block: weights ±[0.25, 0.33) on a random
+/// spanning tree, diagonally dominant (hence PD).
+fn random_tree_block(p: usize, rng: &mut Xoshiro256) -> Mat {
+    let mut s = Mat::eye(p);
+    for v in 1..p {
+        let u = rng.uniform_usize(v);
+        let sign = if rng.uniform() < 0.5 { 1.0 } else { -1.0 };
+        let w = sign * rng.uniform_range(0.25, 0.33);
+        s.set(u, v, w);
+        s.set(v, u, w);
+    }
+    for v in 0..p {
+        let row: f64 = (0..p).filter(|&u| u != v).map(|u| s.get(v, u).abs()).sum();
+        s.set(v, v, 1.0 + row);
+    }
+    s
+}
+
+#[test]
+fn closed_form_matches_tight_iterative_solve() {
+    check_property(
+        "closed-form tier == tightly-converged GLASSO on random 1×1/2×2/tree blocks",
+        &PropConfig { cases: 25, min_size: 1, max_size: 8, base_seed: 0x71E5 },
+        |seed, size, rng| {
+            let penalize = rng.uniform() < 0.5;
+            let (s, lambda) = match size {
+                1 => {
+                    let mut s = Mat::eye(1);
+                    s.set(0, 0, rng.uniform_range(0.5, 2.0));
+                    (s, rng.uniform_range(0.05, 0.5))
+                }
+                2 => {
+                    let mut s = Mat::eye(2);
+                    let v = rng.uniform_range(-0.7, 0.7);
+                    s.set(0, 1, v);
+                    s.set(1, 0, v);
+                    (s, rng.uniform_range(0.05, 0.3))
+                }
+                p => (random_tree_block(p, rng), rng.uniform_range(0.05, 0.2)),
+            };
+            let Some((sol, tier)) = solve_closed_form(&s, lambda, penalize) else {
+                // a tree candidate failed KKT verification — the fallback
+                // contract, not a bug; nothing to compare
+                return CaseResult::Pass;
+            };
+            if tier != classify(&s, lambda) {
+                return CaseResult::Fail(format!("seed={seed}: tier mismatch {tier:?}"));
+            }
+            let opts = SolverOptions { penalize_diagonal: penalize, ..tight() };
+            let oracle = match glasso::solve(&s, lambda, &opts, None) {
+                Ok(o) => o,
+                Err(e) => return CaseResult::Fail(format!("seed={seed}: oracle failed: {e}")),
+            };
+            let diff = sol.theta.max_abs_diff(&oracle.theta);
+            if diff > 1e-8 {
+                return CaseResult::Fail(format!(
+                    "seed={seed} p={} tier={tier:?} λ={lambda}: |Δθ| = {diff:.3e}",
+                    s.rows()
+                ));
+            }
+            // Θ·W must be the identity to machine precision.
+            let prod = covthresh::linalg::gemm(&sol.theta, &sol.w);
+            let inv_err = prod.max_abs_diff(&Mat::eye(s.rows()));
+            CaseResult::from_bool(
+                inv_err < 1e-10,
+                &format!("seed={seed}: ΘW deviates from I by {inv_err:.3e}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn active_set_cd_is_bit_identical_on_support() {
+    check_property(
+        "active-set lasso CD == full-sweep oracle (support bit-identical)",
+        &PropConfig { cases: 30, min_size: 2, max_size: 16, base_seed: 0xAC7 },
+        |seed, size, rng| {
+            let b_mat = Mat::from_fn(size, size, |_, _| rng.gaussian());
+            let mut v = covthresh::linalg::gemm(&b_mat.transpose(), &b_mat);
+            for i in 0..size {
+                v.add_at(i, i, size as f64 * 0.5);
+            }
+            let b: Vec<f64> = (0..size).map(|_| rng.gaussian()).collect();
+            let lambda = rng.uniform_range(0.05, 0.6);
+            let mut full = vec![0.0; size];
+            let rf = solve_lasso_cd(&v, &b, lambda, &mut full, 1e-12, 10_000);
+            let mut act = vec![0.0; size];
+            let ra = solve_lasso_cd_active(&v, &b, lambda, &mut act, 1e-12, 10_000);
+            if !rf.converged || !ra.converged {
+                return CaseResult::Fail(format!("seed={seed}: did not converge"));
+            }
+            for j in 0..size {
+                if (full[j] != 0.0) != (act[j] != 0.0) {
+                    return CaseResult::Fail(format!(
+                        "seed={seed}: support differs at {j}: {} vs {}",
+                        full[j], act[j]
+                    ));
+                }
+                if (full[j] - act[j]).abs() > 1e-8 {
+                    return CaseResult::Fail(format!(
+                        "seed={seed}: β[{j}] differs by {:.3e}",
+                        (full[j] - act[j]).abs()
+                    ));
+                }
+            }
+            let viol = lasso_kkt_residual(&v, &b, lambda, &act);
+            CaseResult::from_bool(viol < 1e-8, &format!("seed={seed}: KKT residual {viol:.3e}"))
+        },
+    );
+}
+
+/// Random block-diagonal covariance mixing all four tiers; every in-block
+/// weight clears λ = 0.2, every cross-block entry is 0.
+fn mixed_tier_cov(n_blocks: usize, rng: &mut Xoshiro256) -> Mat {
+    let mut blocks: Vec<Mat> = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        blocks.push(match rng.uniform_usize(4) {
+            0 => {
+                let mut s = Mat::eye(1);
+                s.set(0, 0, rng.uniform_range(0.8, 1.5));
+                s
+            }
+            1 => {
+                let mut s = Mat::eye(2);
+                let sign = if rng.uniform() < 0.5 { 1.0 } else { -1.0 };
+                let v = sign * rng.uniform_range(0.3, 0.6);
+                s.set(0, 1, v);
+                s.set(1, 0, v);
+                s
+            }
+            2 => random_tree_block(3 + rng.uniform_usize(4), rng),
+            _ => {
+                // equicorrelation ρ = 0.3: complete graph, Iterative tier
+                let n = 3 + rng.uniform_usize(5);
+                Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.3 })
+            }
+        });
+    }
+    let p: usize = blocks.iter().map(|b| b.rows()).sum();
+    let mut s = Mat::eye(p);
+    let mut at = 0;
+    for b in &blocks {
+        for i in 0..b.rows() {
+            for j in 0..b.rows() {
+                s.set(at + i, at + j, b.get(i, j));
+            }
+        }
+        at += b.rows();
+    }
+    s
+}
+
+#[test]
+fn tiered_coordinator_agrees_with_legacy_and_parallel() {
+    let lambda = 0.2;
+    check_property(
+        "tiered dispatch == legacy iterative-only; tiered serial == parallel",
+        &PropConfig { cases: 12, min_size: 2, max_size: 8, base_seed: 0x7157 },
+        |seed, size, rng| {
+            let s = mixed_tier_cov(size, rng);
+            let backend = || NativeBackend::new(SolverKind::Glasso, tight());
+            let tiered = Coordinator::new(backend(), CoordinatorConfig::default())
+                .solve_screened(&s, lambda)
+                .unwrap();
+            let legacy = Coordinator::new(
+                backend(),
+                CoordinatorConfig { tiered: false, ..Default::default() },
+            )
+            .solve_screened(&s, lambda)
+            .unwrap();
+            let diff = tiered.global.theta_dense().max_abs_diff(&legacy.global.theta_dense());
+            if diff > 1e-6 {
+                return CaseResult::Fail(format!("seed={seed}: tiered vs legacy |Δθ|={diff:.3e}"));
+            }
+            if legacy.dispatch.closed_form_count() != legacy.dispatch.count(Tier::Singleton) {
+                return CaseResult::Fail(format!(
+                    "seed={seed}: legacy dispatch used closed-form block tiers: {}",
+                    legacy.dispatch.summary()
+                ));
+            }
+            if tiered.dispatch.total_count() != legacy.dispatch.total_count() {
+                return CaseResult::Fail(format!(
+                    "seed={seed}: dispatch totals differ: {} vs {}",
+                    tiered.dispatch.total_count(),
+                    legacy.dispatch.total_count()
+                ));
+            }
+            let parallel = Coordinator::new(
+                backend(),
+                CoordinatorConfig { parallel: true, n_machines: 4, ..Default::default() },
+            )
+            .solve_screened(&s, lambda)
+            .unwrap();
+            let pdiff = tiered.global.theta_dense().max_abs_diff(&parallel.global.theta_dense());
+            if pdiff > 1e-12 {
+                return CaseResult::Fail(format!("seed={seed}: serial vs parallel {pdiff:.3e}"));
+            }
+            for (a, b) in tiered.global.blocks.iter().zip(parallel.global.blocks.iter()) {
+                if a.tier != b.tier {
+                    return CaseResult::Fail(format!(
+                        "seed={seed}: component {} classified {:?} serial vs {:?} parallel",
+                        a.component, a.tier, b.tier
+                    ));
+                }
+            }
+            CaseResult::Pass
+        },
+    );
+}
+
+#[test]
+fn repeated_lambda_grid_is_rejected_with_named_pair() {
+    let inst = block_instance(2, 4, 2);
+    let coord = Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default());
+    let err = solve_path(&coord, &inst.s, &[0.9, 0.5, 0.5], true).unwrap_err().to_string();
+    assert!(err.contains("repeated"), "{err}");
+    assert!(err.contains("λ[1] = λ[2]"), "{err}");
+    assert!(err.contains("0.5"), "{err}");
+    let err = solve_path(&coord, &inst.s, &[0.9, 0.3, 0.4], true).unwrap_err().to_string();
+    assert!(err.contains("descending"), "{err}");
+    assert!(err.contains("λ[1] = 0.3 < λ[2] = 0.4"), "{err}");
+}
