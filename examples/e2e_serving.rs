@@ -1,4 +1,5 @@
-//! END-TO-END driver: the full three-layer stack serving a real workload.
+//! END-TO-END driver: the full three-layer stack serving a real workload,
+//! traced end to end by the `obs` subsystem.
 //!
 //! All layers compose here, with Python nowhere on the request path:
 //!   L1/L2  AOT JAX/Pallas `glasso_block` artifacts (built by
@@ -13,18 +14,29 @@
 //! routes every request through a `ScreenSession` (index + partition
 //! LRU), so per-request screening is two binary searches and a cache
 //! lookup — never an O(p²) rescan. Every response is KKT-certified
-//! online; the run reports latency percentiles, throughput,
-//! bucket-utilization, cache hits, and the screened-vs-unscreened
-//! comparison on a sample, then writes `e2e_serving_report.json`.
+//! online.
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_serving`
+//! Observability: the whole run records through `covthresh::obs` —
+//! per-request latency histograms, session-cache counters, per-block
+//! solver spans — and exports `e2e_serving_trace.json` (Chrome-trace,
+//! loadable in Perfetto / chrome://tracing) plus
+//! `e2e_serving_metrics.json` (the flat metrics export) at exit. The
+//! stdout summary is the obs tree view + pool utilization, not a
+//! hand-rolled report.
+//!
+//! Run: `cargo run --release --example e2e_serving`. Uses the AOT PJRT
+//! backend when `make artifacts` has been run; otherwise falls back to
+//! the native glasso backend so the serving loop (and its trace) still
+//! exercises the full coordinator stack.
 
-use covthresh::coordinator::{Coordinator, CoordinatorConfig, ScreenSession};
+use covthresh::coordinator::{
+    BlockSolver, Coordinator, CoordinatorConfig, NativeBackend, ScreenSession,
+};
 use covthresh::datasets::synthetic::block_instance_sizes;
+use covthresh::obs;
 use covthresh::runtime::XlaBackend;
 use covthresh::screen::index::ScreenIndex;
 use covthresh::solvers::kkt::check_kkt;
-use covthresh::util::json::Json;
 use covthresh::util::rng::Xoshiro256;
 use covthresh::util::timer::{fmt_secs, Stopwatch};
 use covthresh::util::{mean, quantile};
@@ -40,23 +52,10 @@ struct Request {
     lambda: f64,
 }
 
-fn main() -> anyhow::Result<()> {
-    // ---- load the AOT artifacts (the "model load" step) ----------------
-    let backend = XlaBackend::load("artifacts").map_err(|e| {
-        anyhow::anyhow!("{e}\nhint: run `make artifacts` first to build the AOT bundle")
-    })?;
-    let sw = Stopwatch::start();
-    backend.warmup()?;
-    println!(
-        "PJRT backend up: {} (compiled {} buckets in {})",
-        covthresh::coordinator::BlockSolver::name(&backend),
-        backend.buckets().len(),
-        fmt_secs(sw.elapsed_secs())
-    );
-
-    // ---- ingest studies: screen each covariance ONCE into an index ------
+/// Ingest studies: screen each covariance ONCE into an index.
+fn build_studies() -> Vec<Study> {
     let mut rng = Xoshiro256::seed_from_u64(2026);
-    let ingest_sw = Stopwatch::start();
+    let sw = Stopwatch::start();
     let studies: Vec<Study> = (0..20)
         .map(|study| {
             // blocks sized within the largest bucket (128): realistic post-
@@ -68,36 +67,49 @@ fn main() -> anyhow::Result<()> {
             Study { s: inst.s, index }
         })
         .collect();
-    let ingest_secs = ingest_sw.elapsed_secs();
-    let sessions: Vec<ScreenSession<'_>> =
-        studies.iter().map(|st| ScreenSession::new(&st.index)).collect();
-    println!("ingested 20 studies (screen indexes built) in {}", fmt_secs(ingest_secs));
+    obs::metrics::gauge_set("serve.ingest_secs", sw.elapsed_secs());
+    println!(
+        "ingested {} studies (screen indexes built) in {}",
+        studies.len(),
+        fmt_secs(sw.elapsed_secs())
+    );
+    studies
+}
 
-    // ---- build the request queue ---------------------------------------
-    let mut queue: Vec<Request> = Vec::new();
+fn build_queue(n_studies: usize) -> Vec<Request> {
+    let mut queue = Vec::new();
     let mut id = 0;
-    for study in 0..studies.len() {
+    for study in 0..n_studies {
         for lam in [0.95, 0.9, 0.85] {
             queue.push(Request { id, study, lambda: lam });
             id += 1;
         }
     }
-    println!("queue: {} requests across {} studies", queue.len(), studies.len());
+    queue
+}
 
-    // ---- serve -----------------------------------------------------------
-    let coord = Coordinator::new(
-        backend,
-        CoordinatorConfig { n_machines: 4, ..Default::default() },
-    );
+/// The serving loop, generic over the block-solver backend so the same
+/// code path runs on PJRT artifacts and on the native fallback.
+fn serve<B: BlockSolver>(
+    coord: &Coordinator<B>,
+    studies: &[Study],
+    queue: &[Request],
+) -> anyhow::Result<()> {
+    let sessions: Vec<ScreenSession<'_>> =
+        studies.iter().map(|st| ScreenSession::new(&st.index)).collect();
+
     let mut latencies = Vec::with_capacity(queue.len());
     let mut certified = 0usize;
     let total_sw = Stopwatch::start();
-    for req in &queue {
+    for req in queue {
         let study = &studies[req.study];
         let sw = Stopwatch::start();
-        let report = coord.solve_screened_indexed(&study.s, &sessions[req.study], req.lambda)?;
+        let report =
+            coord.solve_screened_indexed(&study.s, &sessions[req.study], req.lambda)?;
         let latency = sw.elapsed_secs();
         latencies.push(latency);
+        obs::metrics::hist_record("serve.latency_secs", latency);
+        obs::metrics::counter_add("serve.requests", 1);
 
         // online verification (Theorem 1 + KKT) on every response
         let dense = report.global.theta_dense();
@@ -110,23 +122,21 @@ fn main() -> anyhow::Result<()> {
             req.id
         );
         certified += 1;
+        obs::metrics::counter_add("serve.certified", 1);
     }
     let wall = total_sw.elapsed_secs();
-    // Per-session LRU observability: one `stats()` snapshot per session.
-    let session_stats: Vec<_> = sessions.iter().map(|s| s.stats()).collect();
-    let cache_hits: usize = session_stats.iter().map(|st| st.hits).sum();
-    let cache_misses: usize = session_stats.iter().map(|st| st.misses).sum();
-    let cache_lookups: usize = session_stats.iter().map(|st| st.lookups()).sum();
-    let hit_rate = if cache_lookups > 0 {
-        cache_hits as f64 / cache_lookups as f64
-    } else {
-        0.0
-    };
+    let (p50, p95, p99) = (
+        quantile(&latencies, 0.5),
+        quantile(&latencies, 0.95),
+        quantile(&latencies, 0.99),
+    );
+    obs::metrics::gauge_set("serve.wall_secs", wall);
+    obs::metrics::gauge_set("serve.throughput_rps", queue.len() as f64 / wall);
+    obs::metrics::gauge_set("serve.latency_mean_secs", mean(&latencies));
+    obs::metrics::gauge_set("serve.latency_p50_secs", p50);
+    obs::metrics::gauge_set("serve.latency_p95_secs", p95);
+    obs::metrics::gauge_set("serve.latency_p99_secs", p99);
 
-    // ---- report ----------------------------------------------------------
-    let p50 = quantile(&latencies, 0.5);
-    let p95 = quantile(&latencies, 0.95);
-    let p99 = quantile(&latencies, 0.99);
     println!("\nserved {certified}/{} requests in {}", queue.len(), fmt_secs(wall));
     println!(
         "latency: mean={} p50={} p95={} p99={}   throughput={:.1} req/s",
@@ -136,14 +146,12 @@ fn main() -> anyhow::Result<()> {
         fmt_secs(p99),
         queue.len() as f64 / wall
     );
-    println!("bucket executions: {:?}", coord.backend.execution_counts());
+    let hits: usize = sessions.iter().map(|s| s.stats().hits).sum();
+    let lookups: usize = sessions.iter().map(|s| s.stats().lookups()).sum();
     println!(
-        "partition cache: {cache_hits} hits / {cache_misses} misses across {} sessions \
-         ({:.0}% hit rate, {} / {} LRU entries occupied)",
-        sessions.len(),
-        100.0 * hit_rate,
-        session_stats.iter().map(|st| st.entries).sum::<usize>(),
-        session_stats.iter().map(|st| st.capacity).sum::<usize>()
+        "partition cache: {hits}/{lookups} hits across {} sessions \
+         (full counters in the metrics export)",
+        sessions.len()
     );
 
     // screened vs unscreened on one sampled request (the paper's headline)
@@ -159,37 +167,73 @@ fn main() -> anyhow::Result<()> {
         un_secs / screened.solve_secs_serial().max(1e-12)
     );
     println!("sample dispatch: {}", screened.dispatch.summary());
+    Ok(())
+}
 
-    let mut out = Json::obj();
-    out.set("requests", queue.len().into())
-        .set("certified", certified.into())
-        .set("screen_index_ingest_s", ingest_secs.into())
-        .set("partition_cache_hits", cache_hits.into())
-        .set("partition_cache_misses", cache_misses.into())
-        .set("partition_cache_hit_rate", hit_rate.into())
-        .set("wall_secs", wall.into())
-        .set("throughput_rps", (queue.len() as f64 / wall).into())
-        .set("latency_mean_s", mean(&latencies).into())
-        .set("latency_p50_s", p50.into())
-        .set("latency_p95_s", p95.into())
-        .set("latency_p99_s", p99.into())
-        .set(
-            "bucket_executions",
-            Json::Arr(
-                coord
-                    .backend
-                    .execution_counts()
-                    .iter()
-                    .map(|&(b, c)| {
-                        let mut o = Json::obj();
-                        o.set("bucket", b.into()).set("count", c.into());
-                        o
-                    })
-                    .collect(),
-            ),
-        )
-        .set("sample_speedup_vs_unscreened", (un_secs / screened.solve_secs_serial().max(1e-12)).into());
-    std::fs::write("e2e_serving_report.json", out.to_string())?;
-    println!("wrote e2e_serving_report.json");
+fn main() -> anyhow::Result<()> {
+    let obs_cfg = obs::ObsConfig {
+        enabled: true,
+        trace_path: Some("e2e_serving_trace.json".to_string()),
+        metrics_path: Some("e2e_serving_metrics.json".to_string()),
+        log_level: None,
+    }
+    .with_env();
+    obs::install(&obs_cfg);
+
+    let studies = build_studies();
+    let queue = build_queue(studies.len());
+    println!("queue: {} requests across {} studies", queue.len(), studies.len());
+
+    let cfg = CoordinatorConfig { n_machines: 4, ..Default::default() };
+    match XlaBackend::load("artifacts") {
+        Ok(backend) => {
+            let sw = Stopwatch::start();
+            backend.warmup()?;
+            println!(
+                "PJRT backend up: {} (compiled {} buckets in {})",
+                BlockSolver::name(&backend),
+                backend.buckets().len(),
+                fmt_secs(sw.elapsed_secs())
+            );
+            let coord = Coordinator::new(backend, cfg);
+            serve(&coord, &studies, &queue)?;
+            for &(bucket, count) in coord.backend.execution_counts().iter() {
+                obs::metrics::counter_add_owned(
+                    format!("runtime.bucket_{bucket}.executions"),
+                    count as u64,
+                );
+            }
+        }
+        Err(e) => {
+            covthresh::log_warn!(
+                "AOT artifacts unavailable ({e}); serving with the native glasso backend \
+                 (run `make artifacts` for the PJRT path)"
+            );
+            let coord = Coordinator::new(NativeBackend::glasso(), cfg);
+            serve(&coord, &studies, &queue)?;
+        }
+    }
+
+    // One drain at exit: tree view + pool utilization to stdout, then the
+    // Chrome-trace and metrics artifacts.
+    let sess = obs::drain();
+    print!("{}", obs::export::tree_view(&sess));
+    for u in obs::export::pool_utilization(&sess) {
+        println!(
+            "pool {}: {} tasks, busy {:.0}% ({})",
+            u.thread,
+            u.tasks,
+            100.0 * u.busy_frac,
+            fmt_secs(u.busy_us / 1e6)
+        );
+    }
+    if let Some(path) = obs_cfg.trace_path.as_deref() {
+        std::fs::write(path, obs::export::chrome_trace(&sess).to_string())?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = obs_cfg.metrics_path.as_deref() {
+        std::fs::write(path, obs::export::metrics_json(&sess.metrics).to_string())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }

@@ -12,7 +12,9 @@
 //!   1. end-to-end screened solve, tiered dispatch (default config);
 //!   2. the same solve with `tiered = false` (legacy LPT + iterative);
 //!   3. per-tier attribution of blocks and seconds (`report.dispatch`);
-//!   4. a cost-model fit on the legacy per-block timings.
+//!   4. a cost-model fit on the legacy per-block timings;
+//!   5. the same tiered solve with `obs` recording force-enabled — the
+//!      observability overhead ratio (acceptance: ≈ 1.0x).
 //!
 //! Output: human summary on stdout plus `bench_out/BENCH_solve.json`.
 //!
@@ -149,12 +151,27 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 1–2. end-to-end screened solves (serial Table-1 timing convention).
+    // Recording is forced off for the baselines so an ambient
+    // COVTHRESH_TRACE doesn't contaminate the overhead comparison below.
+    let obs_was = covthresh::obs::is_enabled();
+    covthresh::obs::set_enabled(false);
     let b_tiered =
         bench_auto("solve/tiered", budget, || tiered_coord.solve_screened(&s, LAMBDA).unwrap());
     println!("{}", b_tiered.summary());
     let b_legacy =
         bench_auto("solve/legacy", budget, || legacy_coord.solve_screened(&s, LAMBDA).unwrap());
     println!("{}", b_legacy.summary());
+
+    // 5. obs overhead: identical tiered solve, recording force-enabled.
+    covthresh::obs::set_enabled(true);
+    let b_traced = bench_auto("solve/tiered+trace", budget, || {
+        tiered_coord.solve_screened(&s, LAMBDA).unwrap()
+    });
+    covthresh::obs::set_enabled(obs_was);
+    let _ = covthresh::obs::drain();
+    println!("{}", b_traced.summary());
+    let obs_overhead = b_traced.median_s / b_tiered.median_s.max(1e-12);
+    println!("  obs recording overhead: {obs_overhead:.3}x (traced vs untraced median)");
 
     // 3. one report per mode for attribution + correctness.
     let rep_tiered = tiered_coord.solve_screened(&s, LAMBDA)?;
@@ -197,6 +214,8 @@ fn main() -> anyhow::Result<()> {
         .set("n_blocks", n_blocks.into())
         .set("tiered_median_s", b_tiered.median_s.into())
         .set("legacy_median_s", b_legacy.median_s.into())
+        .set("traced_median_s", b_traced.median_s.into())
+        .set("obs_overhead_ratio", obs_overhead.into())
         .set("end_to_end_speedup", speedup.into())
         .set("tiered_solve_secs_serial", tiered_solve.into())
         .set("legacy_solve_secs_serial", legacy_solve.into())
@@ -212,7 +231,12 @@ fn main() -> anyhow::Result<()> {
         )
         .set(
             "benches",
-            Json::Arr([&b_tiered, &b_legacy].iter().map(|b: &&BenchStats| b.to_json()).collect()),
+            Json::Arr(
+                [&b_tiered, &b_legacy, &b_traced]
+                    .iter()
+                    .map(|b: &&BenchStats| b.to_json())
+                    .collect(),
+            ),
         );
     std::fs::create_dir_all("bench_out")?;
     std::fs::write("bench_out/BENCH_solve.json", out.to_string())?;

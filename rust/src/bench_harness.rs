@@ -135,7 +135,7 @@ impl BenchRunner {
     }
 
     pub fn record(&mut self, stats: BenchStats) {
-        println!("{}", stats.summary());
+        crate::log_info!("{}", stats.summary());
         self.results.push(stats);
     }
 

@@ -26,6 +26,9 @@ pub struct RunConfig {
     /// directory with *.hlo.txt artifacts
     pub artifacts_dir: String,
     pub seed: u64,
+    /// observability: the `[obs]` table (env overlays via
+    /// `ObsConfig::with_env` at install time)
+    pub obs: crate::obs::ObsConfig,
 }
 
 impl Default for RunConfig {
@@ -38,6 +41,7 @@ impl Default for RunConfig {
             buckets: vec![16, 32, 64, 128],
             artifacts_dir: "artifacts".to_string(),
             seed: 42,
+            obs: crate::obs::ObsConfig::default(),
         }
     }
 }
@@ -123,6 +127,24 @@ impl RunConfig {
         if let Some(v) = doc.get("run", "seed") {
             cfg.seed = v.as_f64().context("run.seed must be a number")? as u64;
         }
+        if let Some(v) = doc.get("obs", "enabled") {
+            cfg.obs.enabled = v.as_bool().context("obs.enabled must be a bool")?;
+        }
+        if let Some(v) = doc.get("obs", "trace_path") {
+            cfg.obs.trace_path =
+                Some(v.as_str().context("obs.trace_path must be a string")?.to_string());
+        }
+        if let Some(v) = doc.get("obs", "metrics_path") {
+            cfg.obs.metrics_path =
+                Some(v.as_str().context("obs.metrics_path must be a string")?.to_string());
+        }
+        if let Some(v) = doc.get("obs", "log") {
+            let name = v.as_str().context("obs.log must be a string")?;
+            cfg.obs.log_level = Some(
+                crate::obs::log::Level::parse(name)
+                    .with_context(|| format!("unknown obs.log level '{name}'"))?,
+            );
+        }
         Ok(cfg)
     }
 
@@ -172,6 +194,12 @@ artifacts_dir = "my_artifacts"
 
 [run]
 seed = 7
+
+[obs]
+enabled = true
+trace_path = "trace.json"
+metrics_path = "metrics.json"
+log = "debug"
 "#;
         let cfg = RunConfig::from_toml(text).unwrap();
         assert_eq!(cfg.solver, SolverKind::Smacs);
@@ -188,6 +216,10 @@ seed = 7
         assert_eq!(cfg.buckets, vec![16, 64, 256]);
         assert_eq!(cfg.artifacts_dir, "my_artifacts");
         assert_eq!(cfg.seed, 7);
+        assert!(cfg.obs.enabled);
+        assert_eq!(cfg.obs.trace_path.as_deref(), Some("trace.json"));
+        assert_eq!(cfg.obs.metrics_path.as_deref(), Some("metrics.json"));
+        assert_eq!(cfg.obs.log_level, Some(crate::obs::log::Level::Debug));
     }
 
     #[test]
@@ -197,5 +229,6 @@ seed = 7
         assert!(RunConfig::from_toml("[coordinator]\nn_machines = 0").is_err());
         assert!(RunConfig::from_toml("[coordinator]\ndensity_floor = 1.5").is_err());
         assert!(RunConfig::from_toml("[runtime]\nbuckets = []").is_err());
+        assert!(RunConfig::from_toml("[obs]\nlog = \"loud\"").is_err());
     }
 }

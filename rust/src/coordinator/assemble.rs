@@ -22,6 +22,10 @@ pub struct SolvedBlock {
     pub machine: usize,
     /// solve tier that produced the solution
     pub tier: Tier,
+    /// solver convergence record (iterative tier, recording enabled);
+    /// `None` for closed-form tiers, untraced runs, or backends that
+    /// don't report one
+    pub convergence: Option<crate::obs::ConvergenceTrace>,
 }
 
 /// Block-diagonal global solution of problem (1).
@@ -170,6 +174,7 @@ mod tests {
                 secs: 0.0,
                 machine: 0,
                 tier: Tier::Iterative,
+                convergence: None,
             })
             .collect();
         let isolated: Vec<(usize, f64)> =

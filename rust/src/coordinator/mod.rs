@@ -202,6 +202,7 @@ impl<'a> ScreenSession<'a> {
                 let part = entry.1.clone();
                 cache.insert(0, entry);
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs::metrics::counter_add("session.cache.hits", 1);
                 return part;
             }
         }
@@ -216,6 +217,7 @@ impl<'a> ScreenSession<'a> {
             }
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
+        crate::obs::metrics::counter_add("session.cache.misses", 1);
         part
     }
 
@@ -290,19 +292,26 @@ impl<B: BlockSolver> Coordinator<B> {
         lambda: f64,
         warm: &[Option<WarmStart>],
     ) -> Result<ScreenReport> {
+        let _root = crate::span!("solve_screened", {"p": s.rows(), "lambda": lambda});
         let mut timings = PhaseTimings::new();
 
         // 1. screen: build the thresholded edge set.
         let sw = Stopwatch::start();
+        let mut sp = crate::span!("screen");
         let edges = crate::screen::threshold_edges(s, lambda);
         let n_edges = edges.len();
+        sp.arg("n_edges", n_edges as f64);
+        drop(sp);
         timings.add("screen", sw.elapsed_secs());
 
         // 2. partition: components + block extraction.
         let sw = Stopwatch::start();
+        let mut sp = crate::span!("partition");
         let g = crate::graph::CsrGraph::from_edges(s.rows(), &edges);
         let partition = crate::graph::components_bfs(&g);
+        sp.arg("n_components", partition.n_components() as f64);
         let parts = partition_with(s, partition);
+        drop(sp);
         timings.add("partition", sw.elapsed_secs());
 
         self.finish_solve(s, lambda, parts, warm, timings, n_edges)
@@ -342,17 +351,24 @@ impl<B: BlockSolver> Coordinator<B> {
             "request λ={lambda} below the session index floor {}",
             session.index().floor()
         );
+        let _root = crate::span!("solve_screened_indexed", {"p": s.rows(), "lambda": lambda});
         let mut timings = PhaseTimings::new();
 
         // 1. screen: O(log) reads on the index.
         let sw = Stopwatch::start();
+        let mut sp = crate::span!("screen");
         let n_edges = session.index().edge_count(lambda);
+        sp.arg("n_edges", n_edges as f64);
+        drop(sp);
         timings.add("screen", sw.elapsed_secs());
 
         // 2. partition: LRU hit or checkpoint replay + block extraction.
         let sw = Stopwatch::start();
+        let mut sp = crate::span!("partition");
         let partition = session.partition_at(lambda);
+        sp.arg("n_components", partition.n_components() as f64);
         let parts = partition_with_ref(s, &partition);
+        drop(sp);
         timings.add("partition", sw.elapsed_secs());
 
         self.finish_solve(s, lambda, parts, warm, timings, n_edges)
@@ -384,6 +400,10 @@ impl<B: BlockSolver> Coordinator<B> {
         // cost with tiny-block batching; legacy mode is size^J whole-block
         // LPT.
         let sw = Stopwatch::start();
+        let mut sp = crate::span!("schedule", {
+            "n_blocks": parts.subproblems.len(),
+            "n_machines": self.config.n_machines,
+        });
         let capacity = self.config.capacity.min(self.backend.max_block().unwrap_or(usize::MAX));
         let schedule = if self.config.tiered {
             let metas: Vec<BlockMeta> = parts
@@ -403,10 +423,22 @@ impl<B: BlockSolver> Coordinator<B> {
             let sizes: Vec<usize> = parts.subproblems.iter().map(|sp| sp.size()).collect();
             schedule_lpt(&sizes, self.config.n_machines, capacity, self.config.cost_model)?
         };
+        // Per-unit placement telemetry: how the LPT packer shaped the
+        // dispatch (all deterministic — schedule depends only on inputs).
+        if sp.active() {
+            sp.arg("n_units", schedule.units.len() as f64);
+            crate::obs::metrics::gauge_set("schedule.modeled_makespan", schedule.makespan());
+            crate::obs::metrics::gauge_set("schedule.modeled_serial", schedule.serial_time());
+            for unit in &schedule.units {
+                crate::obs::metrics::hist_record("schedule.unit_blocks", unit.len() as f64);
+            }
+        }
+        drop(sp);
         timings.add("schedule", sw.elapsed_secs());
 
         // 4. solve.
         let sw = Stopwatch::start();
+        let sp = crate::span!("solve", {"n_blocks": parts.subproblems.len()});
         let blocks = worker::run_blocks(
             &self.backend,
             &parts.subproblems,
@@ -416,14 +448,26 @@ impl<B: BlockSolver> Coordinator<B> {
             self.config.parallel,
             self.config.tiered,
         )?;
+        drop(sp);
         timings.add("solve", sw.elapsed_secs());
 
         // 5. assemble.
         let sw = Stopwatch::start();
+        let sp = crate::span!("assemble");
         let mut dispatch = DispatchStats::default();
         for b in &blocks {
             dispatch.record(b.tier, b.secs);
+            crate::obs::metrics::counter_add(
+                match b.tier {
+                    Tier::Singleton => "dispatch.singleton",
+                    Tier::Pair => "dispatch.pair",
+                    Tier::Tree => "dispatch.tree",
+                    Tier::Iterative => "dispatch.iterative",
+                },
+                1,
+            );
         }
+        crate::obs::metrics::counter_add("solve.isolated", parts.isolated.len() as u64);
         for _ in &parts.isolated {
             dispatch.record(Tier::Singleton, 0.0);
         }
@@ -436,6 +480,7 @@ impl<B: BlockSolver> Coordinator<B> {
             blocks,
             isolated,
         };
+        drop(sp);
         timings.add("assemble", sw.elapsed_secs());
 
         Ok(ScreenReport { global, schedule, timings, n_edges, dispatch })

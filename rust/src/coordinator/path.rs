@@ -56,23 +56,17 @@ pub fn solve_path<B: BlockSolver>(
     lambdas: &[f64],
     warm_start: bool,
 ) -> Result<PathResult> {
-    ensure!(!lambdas.is_empty(), "empty lambda grid");
+    validate_grid(lambdas)?;
     // One-time screen at the path floor (parallel edge extraction + sort).
     let floor = *lambdas.last().unwrap();
     let index = ScreenIndex::from_dense_above(s, floor);
     solve_path_with_index(coord, s, &index, lambdas, warm_start)
 }
 
-/// [`solve_path`] over a prebuilt index — the serving path when the same S
-/// takes several grids: the O(p²) screen and the edge sort are paid once
-/// at index build, never per path.
-pub fn solve_path_with_index<B: BlockSolver>(
-    coord: &Coordinator<B>,
-    s: &Mat,
-    index: &ScreenIndex,
-    lambdas: &[f64],
-    warm_start: bool,
-) -> Result<PathResult> {
+/// Shared λ-grid validation for both path entry points: non-empty,
+/// strictly descending, no repeated values. Guarantees the descriptive
+/// error for an empty grid before any `lambdas.last().unwrap()` runs.
+fn validate_grid(lambdas: &[f64]) -> Result<()> {
     ensure!(!lambdas.is_empty(), "empty lambda grid");
     for (i, w) in lambdas.windows(2).enumerate() {
         ensure!(
@@ -90,6 +84,20 @@ pub fn solve_path_with_index<B: BlockSolver>(
             w[1]
         );
     }
+    Ok(())
+}
+
+/// [`solve_path`] over a prebuilt index — the serving path when the same S
+/// takes several grids: the O(p²) screen and the edge sort are paid once
+/// at index build, never per path.
+pub fn solve_path_with_index<B: BlockSolver>(
+    coord: &Coordinator<B>,
+    s: &Mat,
+    index: &ScreenIndex,
+    lambdas: &[f64],
+    warm_start: bool,
+) -> Result<PathResult> {
+    validate_grid(lambdas)?;
     let p = s.rows();
     ensure!(index.p() == p, "index built for p={}, S has p={p}", index.p());
     ensure!(
@@ -286,6 +294,17 @@ mod tests {
         assert_eq!(again.points.len(), 2);
         // A grid dipping below the index floor is rejected.
         assert!(solve_path_with_index(&c, &inst.s, &index, &[0.9, 0.5], true).is_err());
+    }
+
+    #[test]
+    fn empty_grid_returns_descriptive_error() {
+        let inst = block_instance(2, 4, 2);
+        let c = coord();
+        let err = solve_path(&c, &inst.s, &[], true).unwrap_err();
+        assert!(err.to_string().contains("empty lambda grid"), "{err}");
+        let index = ScreenIndex::from_dense_above(&inst.s, 0.5);
+        let err = solve_path_with_index(&c, &inst.s, &index, &[], true).unwrap_err();
+        assert!(err.to_string().contains("empty lambda grid"), "{err}");
     }
 
     #[test]

@@ -46,12 +46,17 @@ pub fn run_blocks(
     assert_eq!(schedule.machine_of.len(), subproblems.len());
     assert!(warm.is_empty() || warm.len() == subproblems.len());
 
+    // Block spans adopt the caller's span (the coordinator's "solve"
+    // phase) as an explicit parent, so the logical span tree is the same
+    // on the serial path, the pooled path, and at any pool width.
+    let parent = crate::obs::current_span();
+
     if !parallel || schedule.n_machines() <= 1 || subproblems.len() <= 1 {
         // Serial path (paper's Table-1 timing methodology).
         let mut out = Vec::with_capacity(subproblems.len());
         for (i, sp) in subproblems.iter().enumerate() {
             let w = warm.get(i).and_then(|w| w.as_ref());
-            out.push(solve_one(backend, sp, w, lambda, schedule.machine_of[i], tiered)?);
+            out.push(solve_one(backend, sp, w, lambda, schedule.machine_of[i], tiered, parent)?);
         }
         return Ok(out);
     }
@@ -76,7 +81,7 @@ pub fn run_blocks(
                         let sp = &subproblems[c];
                         let w = warm.get(c).and_then(|w| w.as_ref());
                         let machine = schedule.machine_of[c];
-                        let r = solve_one(backend, sp, w, lambda, machine, tiered);
+                        let r = solve_one(backend, sp, w, lambda, machine, tiered, parent);
                         results.lock().unwrap()[c] = Some(r);
                     }
                 }) as crate::util::pool::Task<'_>
@@ -111,12 +116,17 @@ fn solve_one(
     lambda: f64,
     machine: usize,
     tiered: bool,
+    parent: u64,
 ) -> Result<SolvedBlock> {
     let sw = Stopwatch::start();
+    let mut span = crate::obs::SpanGuard::enter_under("block.solve", parent);
+    span.arg("component", sp.component as f64).arg("size", sp.size() as f64);
+    crate::obs::metrics::hist_record("block.size", sp.size() as f64);
     if tiered {
         if let Some((solution, tier)) =
             closed_form::solve_closed_form(&sp.s_block, lambda, backend.penalize_diagonal())
         {
+            span.arg("tier", tier.index() as f64);
             return Ok(SolvedBlock {
                 component: sp.component,
                 indices: sp.indices.clone(),
@@ -124,12 +134,21 @@ fn solve_one(
                 secs: sw.elapsed_secs(),
                 machine,
                 tier,
+                convergence: None,
             });
         }
     }
+    // Clear any stale trace left on this thread, so the one we take below
+    // is definitely from this solve (backends that don't record leave
+    // the slot empty).
+    let _ = crate::obs::trace::take_convergence();
     let solution = backend
         .solve_block(&sp.s_block, lambda, warm)
         .map_err(|e| anyhow!("component {} (size {}): {e}", sp.component, sp.size()))?;
+    let convergence = crate::obs::trace::take_convergence();
+    span.arg("tier", Tier::Iterative.index() as f64);
+    span.arg("iterations", solution.iterations as f64);
+    crate::obs::metrics::hist_record("solver.iterations", solution.iterations as f64);
     Ok(SolvedBlock {
         component: sp.component,
         indices: sp.indices.clone(),
@@ -137,6 +156,7 @@ fn solve_one(
         secs: sw.elapsed_secs(),
         machine,
         tier: Tier::Iterative,
+        convergence,
     })
 }
 

@@ -37,6 +37,11 @@
 //! a permit scheme that keeps nested parallelism from oversubscribing
 //! cores. Results are bit-identical at any pool width.
 //!
+//! Observability: `obs` provides crate-wide spans, metrics, solver
+//! convergence traces, pool-utilization stamps, and Chrome-trace/JSON
+//! exporters, all gated behind `COVTHRESH_TRACE` / the `[obs]` config
+//! table with zero hot-path cost when disabled.
+//!
 //! Layering (Python never runs at request time):
 //! - L3: this crate — screening (`ScreenIndex`), partitioning, scheduling,
 //!   serving.
@@ -51,6 +56,7 @@ pub mod coordinator;
 pub mod datasets;
 pub mod graph;
 pub mod linalg;
+pub mod obs;
 pub mod proptest_lite;
 pub mod report;
 pub mod runtime;

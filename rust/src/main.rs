@@ -26,11 +26,43 @@ use covthresh::screen::profile::{profile_grid, weighted_edges};
 use covthresh::solvers::{SolverKind, SolverOptions};
 use covthresh::util::timer::fmt_secs;
 
+/// The merged observability config (TOML `[obs]` + env), stashed by
+/// `load_config` so the exit path knows where to write artifacts even
+/// when enablement came from a config file rather than the environment.
+static OBS_CFG: std::sync::OnceLock<covthresh::obs::ObsConfig> = std::sync::OnceLock::new();
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = run(args) {
-        eprintln!("error: {e:#}");
+    covthresh::obs::install(&covthresh::obs::ObsConfig::from_env());
+    let outcome = run(args);
+    if covthresh::obs::is_enabled() {
+        let obs_cfg =
+            OBS_CFG.get().cloned().unwrap_or_else(covthresh::obs::ObsConfig::from_env);
+        finish_obs(&obs_cfg);
+    }
+    if let Err(e) = outcome {
+        covthresh::log_error!("{e:#}");
         std::process::exit(1);
+    }
+}
+
+/// Drain the trace session once at exit: print the tree-view summary and
+/// write the configured Chrome-trace / metrics artifacts.
+fn finish_obs(cfg: &covthresh::obs::ObsConfig) {
+    use covthresh::obs::export;
+    let sess = covthresh::obs::drain();
+    print!("{}", export::tree_view(&sess));
+    if let Some(path) = cfg.trace_path.as_deref() {
+        match std::fs::write(path, export::chrome_trace(&sess).to_string()) {
+            Ok(()) => covthresh::log_info!("wrote {path}"),
+            Err(e) => covthresh::log_warn!("trace export to {path} failed: {e:#}"),
+        }
+    }
+    if let Some(path) = cfg.metrics_path.as_deref() {
+        match std::fs::write(path, export::metrics_json(&sess.metrics).to_string()) {
+            Ok(()) => covthresh::log_info!("wrote {path}"),
+            Err(e) => covthresh::log_warn!("metrics export to {path} failed: {e:#}"),
+        }
     }
 }
 
@@ -79,6 +111,9 @@ fn load_config(args: &Args) -> Result<RunConfig> {
         cfg.coordinator.parallel = true;
     }
     cfg.seed = args.get_usize("seed", cfg.seed as usize)? as u64;
+    let obs = cfg.obs.clone().with_env();
+    covthresh::obs::install(&obs);
+    let _ = OBS_CFG.set(obs);
     Ok(cfg)
 }
 
@@ -154,7 +189,11 @@ fn print_report(report: &covthresh::coordinator::ScreenReport) {
         fmt_secs(g.makespan_secs(report.schedule.n_machines())),
         g.all_converged()
     );
-    println!("phases: {}", report.timings.summary());
+    // With tracing on, the exit-time tree view supersedes the flat
+    // phase summary (finish_obs prints nested spans with real timings).
+    if !covthresh::obs::is_enabled() {
+        println!("phases: {}", report.timings.summary());
+    }
     println!("objective: {:.6}", g.objective());
 }
 

@@ -1,0 +1,365 @@
+//! Exporters over a drained [`TraceSession`]: Chrome-trace JSON
+//! (Perfetto / `chrome://tracing`-loadable), flat metrics JSON, a human
+//! tree-view summary, a deterministic span-tree signature (for
+//! serial-vs-pooled identity tests), and per-worker pool utilization.
+
+use std::collections::HashMap;
+
+use super::metrics::{bucket_hi, bucket_lo, HistogramData, MetricsSnapshot, NBUCKETS};
+use super::trace::{SpanRecord, TraceSession};
+use crate::util::json::Json;
+use crate::util::timer::fmt_secs;
+
+/// Chrome-trace JSON: one `ph:"X"` duration event per span (ts/dur in
+/// microseconds), plus `thread_name` metadata events so Perfetto labels
+/// the pool workers.
+pub fn chrome_trace(sess: &TraceSession) -> Json {
+    let mut events = Vec::new();
+    for (tid, name) in sess.threads.iter().enumerate() {
+        let mut args = Json::obj();
+        args.set("name", name.as_str().into());
+        let mut m = Json::obj();
+        m.set("name", "thread_name".into())
+            .set("ph", "M".into())
+            .set("pid", 1usize.into())
+            .set("tid", tid.into())
+            .set("args", args);
+        events.push(m);
+    }
+    for s in &sess.spans {
+        let mut args = Json::obj();
+        args.set("span_id", (s.id as i64).into()).set("parent", (s.parent as i64).into());
+        for &(k, v) in &s.args {
+            args.set(k, v.into());
+        }
+        let mut e = Json::obj();
+        e.set("name", s.name.into())
+            .set("cat", "covthresh".into())
+            .set("ph", "X".into())
+            .set("pid", 1usize.into())
+            .set("tid", s.thread.into())
+            .set("ts", s.start_us.into())
+            .set("dur", s.dur_us.into())
+            .set("args", args);
+        events.push(e);
+    }
+    let mut out = Json::obj();
+    out.set("traceEvents", Json::Arr(events)).set("displayTimeUnit", "ms".into());
+    out
+}
+
+/// Flat metrics JSON: `{"counters": {..}, "gauges": {..}, "histograms":
+/// {name: {count, sum, min, max, buckets: [{lo, hi, count}, ..]}}}`.
+/// Only occupied buckets are emitted; `lo`/`hi` are the exact powers of
+/// two from [`bucket_lo`]/[`bucket_hi`], so they round-trip through the
+/// parser bit-for-bit.
+pub fn metrics_json(m: &MetricsSnapshot) -> Json {
+    let mut counters = Json::obj();
+    for (k, v) in &m.counters {
+        counters.set(k, (*v as i64).into());
+    }
+    let mut gauges = Json::obj();
+    for (k, v) in &m.gauges {
+        gauges.set(k, (*v).into());
+    }
+    let mut hists = Json::obj();
+    for (k, h) in &m.hists {
+        hists.set(k, histogram_json(h));
+    }
+    let mut out = Json::obj();
+    out.set("counters", counters).set("gauges", gauges).set("histograms", hists);
+    out
+}
+
+fn histogram_json(h: &HistogramData) -> Json {
+    let mut buckets = Vec::new();
+    for i in 0..NBUCKETS {
+        if h.buckets[i] > 0 {
+            let mut b = Json::obj();
+            b.set("lo", bucket_lo(i).into())
+                .set("hi", bucket_hi(i).into())
+                .set("count", (h.buckets[i] as i64).into());
+            buckets.push(b);
+        }
+    }
+    let mut o = Json::obj();
+    o.set("count", (h.count as i64).into()).set("sum", h.sum.into());
+    if h.count > 0 {
+        o.set("min", h.min.into()).set("max", h.max.into());
+    }
+    o.set("buckets", Json::Arr(buckets));
+    o
+}
+
+fn children_of(spans: &[SpanRecord]) -> (HashMap<u64, Vec<usize>>, Vec<usize>) {
+    let ids: std::collections::HashSet<u64> = spans.iter().map(|s| s.id).collect();
+    let mut children: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut roots = Vec::new();
+    for (i, s) in spans.iter().enumerate() {
+        if s.parent != 0 && ids.contains(&s.parent) {
+            children.entry(s.parent).or_default().push(i);
+        } else {
+            roots.push(i);
+        }
+    }
+    (children, roots)
+}
+
+/// Human tree view: spans grouped by name under their parent, with
+/// count / total / max durations — the replacement for the flat
+/// `PhaseTimings::summary()` line.
+pub fn tree_view(sess: &TraceSession) -> String {
+    let (children, roots) = children_of(&sess.spans);
+    let mut out = String::new();
+    emit_group(sess, &children, &roots, 0, &mut out);
+    if out.ends_with('\n') {
+        out.pop();
+    }
+    out
+}
+
+fn emit_group(
+    sess: &TraceSession,
+    children: &HashMap<u64, Vec<usize>>,
+    group: &[usize],
+    depth: usize,
+    out: &mut String,
+) {
+    // group siblings by name, first-seen order
+    let mut order: Vec<&'static str> = Vec::new();
+    let mut by_name: HashMap<&'static str, Vec<usize>> = HashMap::new();
+    for &i in group {
+        let name = sess.spans[i].name;
+        if !by_name.contains_key(name) {
+            order.push(name);
+        }
+        by_name.entry(name).or_default().push(i);
+    }
+    for name in order {
+        let members = &by_name[name];
+        let total: f64 = members.iter().map(|&i| sess.spans[i].dur_us).sum();
+        let indent = "  ".repeat(depth);
+        if members.len() == 1 {
+            let s = &sess.spans[members[0]];
+            let args: Vec<String> =
+                s.args.iter().map(|&(k, v)| format!("{k}={}", fmt_num(v))).collect();
+            let args = if args.is_empty() { String::new() } else { format!("  [{}]", args.join(" ")) };
+            out.push_str(&format!("{indent}{name}  {}s{args}\n", fmt_secs(total / 1e6)));
+        } else {
+            let max = members.iter().map(|&i| sess.spans[i].dur_us).fold(0.0, f64::max);
+            out.push_str(&format!(
+                "{indent}{name} ×{}  total={}s max={}s\n",
+                members.len(),
+                fmt_secs(total / 1e6),
+                fmt_secs(max / 1e6)
+            ));
+        }
+        let mut grandkids: Vec<usize> = Vec::new();
+        for &i in members {
+            if let Some(k) = children.get(&sess.spans[i].id) {
+                grandkids.extend_from_slice(k);
+            }
+        }
+        if !grandkids.is_empty() {
+            emit_group(sess, children, &grandkids, depth + 1, out);
+        }
+    }
+}
+
+fn fmt_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Deterministic structural signature of the span tree: names + numeric
+/// args, children sorted by their own signature. Durations, thread ids,
+/// and `pool.*` bookkeeping spans are excluded, so two runs of the same
+/// logical work — serial or pooled, any `COVTHRESH_THREADS` — produce
+/// the same signature.
+pub fn span_tree_signature(sess: &TraceSession) -> String {
+    let (children, roots) = children_of(&sess.spans);
+    let mut sigs: Vec<String> = roots
+        .iter()
+        .filter(|&&i| !sess.spans[i].name.starts_with("pool."))
+        .map(|&i| node_sig(sess, &children, i))
+        .collect();
+    sigs.sort();
+    sigs.join("\n")
+}
+
+fn node_sig(sess: &TraceSession, children: &HashMap<u64, Vec<usize>>, idx: usize) -> String {
+    let s = &sess.spans[idx];
+    let mut args: Vec<String> = s.args.iter().map(|&(k, v)| format!("{k}={}", fmt_num(v))).collect();
+    args.sort();
+    let mut kids: Vec<String> = children
+        .get(&s.id)
+        .map(|v| {
+            v.iter()
+                .filter(|&&c| !sess.spans[c].name.starts_with("pool."))
+                .map(|&c| node_sig(sess, children, c))
+                .collect()
+        })
+        .unwrap_or_default();
+    kids.sort();
+    format!("{}({})[{}]", s.name, args.join(","), kids.join(","))
+}
+
+/// Per-worker utilization over the session extent, from `pool.task`
+/// spans: busy time, task count, and busy fraction of the wall interval
+/// between the first and last recorded event.
+#[derive(Clone, Debug)]
+pub struct PoolUtil {
+    pub thread: String,
+    pub tasks: u64,
+    pub busy_us: f64,
+    pub busy_frac: f64,
+}
+
+pub fn pool_utilization(sess: &TraceSession) -> Vec<PoolUtil> {
+    let lo = sess.spans.iter().map(|s| s.start_us).fold(f64::INFINITY, f64::min);
+    let hi = sess.spans.iter().map(|s| s.start_us + s.dur_us).fold(f64::NEG_INFINITY, f64::max);
+    let extent = (hi - lo).max(1e-9);
+    let mut per: HashMap<usize, (u64, f64)> = HashMap::new();
+    for s in &sess.spans {
+        if s.name == "pool.task" {
+            let e = per.entry(s.thread).or_insert((0, 0.0));
+            e.0 += 1;
+            e.1 += s.dur_us;
+        }
+    }
+    let mut out: Vec<PoolUtil> = per
+        .into_iter()
+        .map(|(tid, (tasks, busy_us))| PoolUtil {
+            thread: sess.threads.get(tid).cloned().unwrap_or_else(|| format!("thread-{tid}")),
+            tasks,
+            busy_us,
+            busy_frac: busy_us / extent,
+        })
+        .collect();
+    out.sort_by(|a, b| a.thread.cmp(&b.thread));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+    use crate::util::json;
+
+    fn fake_session() -> TraceSession {
+        let sp = |id, parent, name, thread, start_us, dur_us, args: Vec<(&'static str, f64)>| {
+            SpanRecord { id, parent, name, thread, start_us, dur_us, args }
+        };
+        TraceSession {
+            spans: vec![
+                sp(1, 0, "solve_screened", 0, 0.0, 100.0, vec![("p", 12.0)]),
+                sp(2, 1, "screen", 0, 1.0, 10.0, vec![]),
+                sp(3, 1, "solve", 0, 20.0, 70.0, vec![]),
+                sp(4, 3, "block.solve", 1, 22.0, 30.0, vec![("size", 8.0)]),
+                sp(5, 3, "block.solve", 2, 23.0, 40.0, vec![("size", 4.0)]),
+                sp(6, 0, "pool.task", 1, 21.0, 35.0, vec![]),
+                sp(7, 0, "pool.task", 2, 22.0, 45.0, vec![]),
+            ],
+            threads: vec!["main".into(), "covthresh-pool-0".into(), "covthresh-pool-1".into()],
+            metrics: MetricsSnapshot::default(),
+        }
+    }
+
+    #[test]
+    fn chrome_trace_shape_parses_back() {
+        let sess = fake_session();
+        let text = chrome_trace(&sess).to_string();
+        let parsed = json::parse(&text).unwrap();
+        let events = parsed.get("traceEvents").unwrap().items();
+        // 3 thread_name metadata + 7 spans
+        assert_eq!(events.len(), 10);
+        let first_span = events
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("solve_screened"))
+            .unwrap();
+        assert_eq!(first_span.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(first_span.get("dur").unwrap().as_f64(), Some(100.0));
+        assert_eq!(first_span.get("args").unwrap().get("p").unwrap().as_f64(), Some(12.0));
+        let meta = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M"))
+            .unwrap();
+        assert_eq!(meta.get("name").unwrap().as_str(), Some("thread_name"));
+    }
+
+    #[test]
+    fn signature_ignores_threads_and_pool_spans() {
+        let mut a = fake_session();
+        let sig_a = span_tree_signature(&a);
+        assert!(!sig_a.contains("pool.task"));
+        // permute threads + reorder sibling spans: signature unchanged
+        for s in &mut a.spans {
+            s.thread = 0;
+            s.dur_us *= 3.0;
+        }
+        a.spans.swap(3, 4);
+        assert_eq!(span_tree_signature(&a), sig_a);
+        // but a structural change shows up
+        a.spans[1].name = "partition";
+        assert_ne!(span_tree_signature(&a), sig_a);
+    }
+
+    #[test]
+    fn tree_view_groups_repeats() {
+        let sess = fake_session();
+        let view = tree_view(&sess);
+        assert!(view.contains("solve_screened"), "{view}");
+        assert!(view.contains("block.solve ×2"), "{view}");
+        assert!(view.contains("p=12"), "{view}");
+    }
+
+    #[test]
+    fn pool_utilization_sums_tasks() {
+        let sess = fake_session();
+        let util = pool_utilization(&sess);
+        assert_eq!(util.len(), 2);
+        let w0 = util.iter().find(|u| u.thread == "covthresh-pool-0").unwrap();
+        assert_eq!(w0.tasks, 1);
+        assert!((w0.busy_us - 35.0).abs() < 1e-9);
+        assert!(w0.busy_frac > 0.0 && w0.busy_frac <= 1.0);
+    }
+
+    #[test]
+    fn histogram_boundaries_roundtrip_through_json() {
+        let _g = obs::test_guard();
+        let mut h = HistogramData::default();
+        for v in [0.25, 1.0, 3.0, 1024.0, 5e-7] {
+            h.record(v);
+        }
+        let m = MetricsSnapshot {
+            counters: vec![("c".into(), 3)],
+            gauges: vec![("g".into(), 1.5)],
+            hists: vec![("h".into(), h.clone())],
+        };
+        let text = metrics_json(&m).to_string();
+        let parsed = json::parse(&text).unwrap();
+        assert_eq!(parsed.get("counters").unwrap().get("c").unwrap().as_f64(), Some(3.0));
+        let hj = parsed.get("histograms").unwrap().get("h").unwrap();
+        assert_eq!(hj.get("count").unwrap().as_f64(), Some(5.0));
+        let buckets = hj.get("buckets").unwrap().items();
+        let occupied: usize = h.buckets.iter().filter(|&&c| c > 0).count();
+        assert_eq!(buckets.len(), occupied);
+        for b in buckets {
+            let lo = b.get("lo").unwrap().as_f64().unwrap();
+            let hi = b.get("hi").unwrap().as_f64().unwrap();
+            // recover the bucket index from the exact boundary and check
+            // the exporter's edges bit-for-bit
+            let i = crate::obs::metrics::bucket_index(lo);
+            assert_eq!(lo, bucket_lo(i), "lo edge must round-trip exactly");
+            assert_eq!(hi, bucket_hi(i), "hi edge must round-trip exactly");
+            assert_eq!(
+                b.get("count").unwrap().as_f64().unwrap() as u64,
+                h.buckets[i],
+                "bucket {i}"
+            );
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Leveled logging facade: `log_error!` / `log_warn!` / `log_info!` /
+//! `log_debug!` write `[level] …` lines to **stderr** — library code
+//! never writes to stdout directly. Verbosity comes from
+//! `COVTHRESH_LOG=error|warn|info|debug` (default `info`) or
+//! [`set_level`] (e.g. from the TOML `[obs] log` key).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn from_env() -> Option<Level> {
+        std::env::var("COVTHRESH_LOG").ok().and_then(|s| Level::parse(&s))
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static ENV_INIT: Once = Once::new();
+
+/// Set the verbosity explicitly (overrides the env default).
+pub fn set_level(l: Level) {
+    ENV_INIT.call_once(|| {});
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Current verbosity; the first call consults `COVTHRESH_LOG`.
+pub fn level() -> Level {
+    ENV_INIT.call_once(|| {
+        if let Some(l) = Level::from_env() {
+            LEVEL.store(l as u8, Ordering::Relaxed);
+        }
+    });
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        _ => Level::Debug,
+    }
+}
+
+/// Would a message at `l` print?
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Macro sink — prefix with the level, write to stderr.
+pub fn write(l: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(l) {
+        eprintln!("[{}] {}", l.name(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Error, format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Warn, format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Info, format_args!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        $crate::obs::log::write($crate::obs::log::Level::Debug, format_args!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("quiet"), None);
+    }
+
+    #[test]
+    fn ordering_gates_verbosity() {
+        assert!(Level::Error < Level::Warn && Level::Warn < Level::Info);
+        let _g = crate::obs::test_guard();
+        let was = level();
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error) && enabled(Level::Warn));
+        assert!(!enabled(Level::Info) && !enabled(Level::Debug));
+        set_level(was);
+    }
+}

@@ -1,0 +1,301 @@
+//! Metrics registry: named counters, gauges, and log₂-bucket histograms
+//! in per-thread shards, merged name-sorted at drain.
+//!
+//! Determinism: counters are integer sums and histograms bucket by an
+//! exact function of the value, so totals over *deterministic*
+//! observations (sizes, sweep counts, replay depths) are identical no
+//! matter how work was spread across threads. Histogram `sum` is also
+//! exact whenever the observed values are integers (f64 addition of
+//! integers below 2⁵³ is associative). Wall-clock observations are
+//! run-dependent by nature; by convention their names end in `_secs` so
+//! determinism tests can exclude them.
+
+use std::borrow::Cow;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Number of histogram buckets.
+pub const NBUCKETS: usize = 64;
+
+/// Bucket i starts at 2^(i - BUCKET_EXP_OFFSET): bucket 0 at 2⁻³⁰
+/// (~9.3e-10 — sub-nanosecond durations), bucket 63 at 2³³ (~8.6e9).
+const BUCKET_EXP_OFFSET: i64 = 30;
+
+/// Log₂-scale bucket index, read straight off the IEEE-754 exponent
+/// field — exact and branch-free, so a given value always lands in the
+/// same bucket regardless of platform or thread.
+pub fn bucket_index(v: f64) -> usize {
+    if v.is_nan() || v <= 0.0 {
+        return 0;
+    }
+    if v.is_infinite() {
+        return NBUCKETS - 1;
+    }
+    let exp = ((v.to_bits() >> 52) & 0x7ff) as i64 - 1023;
+    (exp + BUCKET_EXP_OFFSET).clamp(0, NBUCKETS as i64 - 1) as usize
+}
+
+/// Lower edge of bucket `i`: 2^(i − 30). Exactly representable, so the
+/// boundaries round-trip through the JSON exporter bit-for-bit.
+pub fn bucket_lo(i: usize) -> f64 {
+    2f64.powi(i as i32 - BUCKET_EXP_OFFSET as i32)
+}
+
+/// Upper edge of bucket `i` (= `bucket_lo(i + 1)`).
+pub fn bucket_hi(i: usize) -> f64 {
+    2f64.powi(i as i32 + 1 - BUCKET_EXP_OFFSET as i32)
+}
+
+/// One histogram's merged state.
+#[derive(Clone, Debug)]
+pub struct HistogramData {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub buckets: [u64; NBUCKETS],
+}
+
+impl Default for HistogramData {
+    fn default() -> Self {
+        HistogramData {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: [0; NBUCKETS],
+        }
+    }
+}
+
+impl HistogramData {
+    pub fn record(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.buckets[bucket_index(v)] += 1;
+    }
+
+    pub fn merge(&mut self, other: &HistogramData) {
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for i in 0..NBUCKETS {
+            self.buckets[i] += other.buckets[i];
+        }
+    }
+}
+
+#[derive(Default)]
+struct Shard {
+    counters: HashMap<Cow<'static, str>, u64>,
+    gauges: HashMap<Cow<'static, str>, f64>,
+    hists: HashMap<Cow<'static, str>, HistogramData>,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Mutex<Shard>>>> {
+    static REG: OnceLock<Mutex<Vec<Arc<Mutex<Shard>>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<Arc<Mutex<Shard>>>> = const { RefCell::new(None) };
+}
+
+fn with_local(f: impl FnOnce(&mut Shard)) {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        if l.is_none() {
+            let shard = Arc::new(Mutex::new(Shard::default()));
+            registry().lock().unwrap_or_else(|e| e.into_inner()).push(shard.clone());
+            *l = Some(shard);
+        }
+        let shard = l.as_ref().unwrap();
+        f(&mut shard.lock().unwrap_or_else(|e| e.into_inner()))
+    })
+}
+
+/// Add to a counter (no-op when recording is disabled).
+pub fn counter_add(name: &'static str, delta: u64) {
+    if !super::is_enabled() {
+        return;
+    }
+    with_local(|s| *s.counters.entry(Cow::Borrowed(name)).or_insert(0) += delta);
+}
+
+/// Counter with a runtime-built name (allocates — keep off hot paths).
+pub fn counter_add_owned(name: String, delta: u64) {
+    if !super::is_enabled() {
+        return;
+    }
+    with_local(|s| *s.counters.entry(Cow::Owned(name)).or_insert(0) += delta);
+}
+
+/// Set a gauge. Shards merge gauges by **max** at drain — deterministic
+/// for the common single-writer case and for high-water marks.
+pub fn gauge_set(name: &'static str, value: f64) {
+    if !super::is_enabled() {
+        return;
+    }
+    with_local(|s| {
+        s.gauges.insert(Cow::Borrowed(name), value);
+    });
+}
+
+/// Record one histogram observation.
+pub fn hist_record(name: &'static str, value: f64) {
+    if !super::is_enabled() {
+        return;
+    }
+    with_local(|s| s.hists.entry(Cow::Borrowed(name)).or_default().record(value));
+}
+
+/// Merged, name-sorted view of all shards at one drain.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, f64)>,
+    pub hists: Vec<(String, HistogramData)>,
+}
+
+impl MetricsSnapshot {
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(k, _)| k == name).map_or(0, |(_, v)| *v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistogramData> {
+        self.hists.iter().find(|(k, _)| k == name).map(|(_, v)| v)
+    }
+}
+
+/// Merge every thread shard (name-sorted) and reset them.
+pub fn snapshot_and_reset() -> MetricsSnapshot {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let mut counters: HashMap<String, u64> = HashMap::new();
+    let mut gauges: HashMap<String, f64> = HashMap::new();
+    let mut hists: HashMap<String, HistogramData> = HashMap::new();
+    for shard in reg.iter() {
+        let mut s = shard.lock().unwrap_or_else(|e| e.into_inner());
+        for (k, v) in s.counters.drain() {
+            *counters.entry(k.into_owned()).or_insert(0) += v;
+        }
+        for (k, v) in s.gauges.drain() {
+            let e = gauges.entry(k.into_owned()).or_insert(f64::NEG_INFINITY);
+            if v > *e {
+                *e = v;
+            }
+        }
+        for (k, v) in s.hists.drain() {
+            hists.entry(k.into_owned()).or_default().merge(&v);
+        }
+    }
+    drop(reg);
+    let mut counters: Vec<_> = counters.into_iter().collect();
+    counters.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut gauges: Vec<_> = gauges.into_iter().collect();
+    gauges.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut hists: Vec<_> = hists.into_iter().collect();
+    hists.sort_by(|a, b| a.0.cmp(&b.0));
+    MetricsSnapshot { counters, gauges, hists }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(f64::INFINITY), NBUCKETS - 1);
+        assert_eq!(bucket_index(1e-300), 0, "tiny values clamp to bucket 0");
+        assert_eq!(bucket_index(1e300), NBUCKETS - 1, "huge values clamp to the last bucket");
+        // 1.0 = 2^0 → exponent 0 → bucket 30; the exact boundary belongs
+        // to the bucket it opens.
+        assert_eq!(bucket_index(1.0), 30);
+        assert_eq!(bucket_index(bucket_lo(30)), 30);
+        assert_eq!(bucket_index(bucket_lo(30) * 1.999), 30);
+        assert_eq!(bucket_index(bucket_hi(30)), 31);
+        for i in 0..NBUCKETS {
+            assert_eq!(bucket_index(bucket_lo(i) * 1.5), i);
+            assert_eq!(bucket_hi(i), bucket_lo(i + 1), "buckets tile the line");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_matches_single_shard() {
+        let values = [0.5, 1.0, 2.0, 3.0, 100.0, 1e-8];
+        let mut whole = HistogramData::default();
+        for &v in &values {
+            whole.record(v);
+        }
+        let mut a = HistogramData::default();
+        let mut b = HistogramData::default();
+        for (i, &v) in values.iter().enumerate() {
+            if i % 2 == 0 {
+                a.record(v)
+            } else {
+                b.record(v)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count, whole.count);
+        assert_eq!(a.buckets, whole.buckets);
+        assert_eq!(a.min, whole.min);
+        assert_eq!(a.max, whole.max);
+        assert!((a.sum - whole.sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shards_merge_to_exact_totals_across_threads() {
+        let _g = obs::test_guard();
+        obs::drain();
+        obs::set_enabled(true);
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for i in 0..25 {
+                        counter_add("test.metrics.events", 1);
+                        hist_record("test.metrics.size", ((t * 25 + i) % 7 + 1) as f64);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        counter_add_owned(format!("test.metrics.dyn_{}", 3), 2);
+        gauge_set("test.metrics.gauge", 42.0);
+        obs::set_enabled(false);
+        let snap = snapshot_and_reset();
+        assert_eq!(snap.counter("test.metrics.events"), 100);
+        assert_eq!(snap.counter("test.metrics.dyn_3"), 2);
+        assert_eq!(snap.gauge("test.metrics.gauge"), Some(42.0));
+        let h = snap.hist("test.metrics.size").unwrap();
+        assert_eq!(h.count, 100);
+        assert_eq!(h.sum, (0..100).map(|x| (x % 7 + 1) as f64).sum::<f64>());
+        // a second drain sees reset shards
+        let again = snapshot_and_reset();
+        assert_eq!(again.counter("test.metrics.events"), 0);
+    }
+
+    #[test]
+    fn disabled_recording_is_dropped() {
+        let _g = obs::test_guard();
+        obs::set_enabled(false);
+        counter_add("test.metrics.off", 5);
+        hist_record("test.metrics.off_h", 1.0);
+        let snap = snapshot_and_reset();
+        assert_eq!(snap.counter("test.metrics.off"), 0);
+        assert!(snap.hist("test.metrics.off_h").is_none());
+    }
+}

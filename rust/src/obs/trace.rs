@@ -1,0 +1,317 @@
+//! Hierarchical span tracer: RAII guards, per-thread shards, parent and
+//! thread tracking, and the thread-local convergence-trace handoff.
+//!
+//! Every thread that records gets a slot in a global registry (its shard
+//! plus its thread name); pushes lock only the pusher's own shard, so the
+//! only cross-thread contention is at drain time. Parent linkage is a
+//! thread-local span stack; work that hops threads (pool tasks) adopts an
+//! explicit parent via [`SpanGuard::enter_under`] so the logical tree is
+//! identical at any pool width.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::metrics::MetricsSnapshot;
+
+/// One completed span.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    /// Unique id (process-wide, starts at 1; 0 means "no span").
+    pub id: u64,
+    /// Enclosing span id (0 = root).
+    pub parent: u64,
+    pub name: &'static str,
+    /// Registry slot of the recording thread (index into
+    /// [`TraceSession::threads`]).
+    pub thread: usize,
+    /// Microseconds since the process trace epoch.
+    pub start_us: f64,
+    pub dur_us: f64,
+    /// Numeric metadata (sizes, counts, iterations — never wall-clock).
+    pub args: Vec<(&'static str, f64)>,
+}
+
+/// Terminal state of one iterative block solve, attached to
+/// `coordinator::assemble::SolvedBlock` by the worker. Fields not
+/// meaningful for a solver are 0.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ConvergenceTrace {
+    pub solver: &'static str,
+    /// Outer iterations (GLASSO sweeps; ADMM / SMACS iterations).
+    pub iterations: usize,
+    /// Total inner coordinate-descent passes across columns (GLASSO).
+    pub inner_iterations: usize,
+    /// Active-set size at termination, summed over columns (GLASSO).
+    pub active_set: usize,
+    /// Final stationarity measure: avg |ΔW| for GLASSO, primal residual
+    /// for ADMM.
+    pub kkt_violation: f64,
+    /// Final duality gap (SMACS) or dual residual (ADMM).
+    pub dual_gap: f64,
+    pub converged: bool,
+}
+
+/// Everything one drain collected: spans (start-time ordered), the
+/// thread-slot names, and the merged metrics snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSession {
+    pub spans: Vec<SpanRecord>,
+    pub threads: Vec<String>,
+    pub metrics: MetricsSnapshot,
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> f64 {
+    epoch().elapsed().as_secs_f64() * 1e6
+}
+
+struct Registry {
+    names: Vec<String>,
+    shards: Vec<Arc<Mutex<Vec<SpanRecord>>>>,
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REG: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Registry { names: Vec::new(), shards: Vec::new() }))
+}
+
+struct LocalShard {
+    slot: usize,
+    buf: Arc<Mutex<Vec<SpanRecord>>>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<LocalShard>> = const { RefCell::new(None) };
+    static STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+    static LAST_CONVERGENCE: Cell<Option<ConvergenceTrace>> = const { Cell::new(None) };
+}
+
+fn with_shard<R>(f: impl FnOnce(usize, &Mutex<Vec<SpanRecord>>) -> R) -> R {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        if l.is_none() {
+            let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+            let slot = reg.shards.len();
+            let name = std::thread::current().name().unwrap_or("main").to_string();
+            let buf = Arc::new(Mutex::new(Vec::new()));
+            reg.names.push(name);
+            reg.shards.push(buf.clone());
+            *l = Some(LocalShard { slot, buf });
+        }
+        let s = l.as_ref().unwrap();
+        f(s.slot, &s.buf)
+    })
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Id of the innermost open span on this thread (0 if none / disabled).
+pub fn current_span() -> u64 {
+    STACK.with(|s| s.borrow().last().copied().unwrap_or(0))
+}
+
+/// RAII span: records on drop. When recording is disabled the guard is
+/// inert — no clock read, no allocation.
+pub struct SpanGuard {
+    rec: Option<SpanRecord>,
+    t0: f64,
+}
+
+impl SpanGuard {
+    pub fn enter(name: &'static str) -> SpanGuard {
+        Self::enter_impl(name, None)
+    }
+
+    /// Enter with an explicit parent id — cross-thread linkage for work
+    /// scheduled on the pool (the task adopts the span that dispatched
+    /// it, keeping the logical tree identical at any pool width).
+    pub fn enter_under(name: &'static str, parent: u64) -> SpanGuard {
+        Self::enter_impl(name, Some(parent))
+    }
+
+    fn enter_impl(name: &'static str, parent: Option<u64>) -> SpanGuard {
+        if !super::is_enabled() {
+            return SpanGuard { rec: None, t0: 0.0 };
+        }
+        let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        let parent = parent.unwrap_or_else(current_span);
+        STACK.with(|s| s.borrow_mut().push(id));
+        let t0 = now_us();
+        SpanGuard {
+            rec: Some(SpanRecord {
+                id,
+                parent,
+                name,
+                thread: 0,
+                start_us: t0,
+                dur_us: 0.0,
+                args: Vec::new(),
+            }),
+            t0,
+        }
+    }
+
+    pub fn active(&self) -> bool {
+        self.rec.is_some()
+    }
+
+    /// This span's id (0 when recording is disabled).
+    pub fn id(&self) -> u64 {
+        self.rec.as_ref().map_or(0, |r| r.id)
+    }
+
+    /// Attach a numeric argument (no-op when disabled).
+    pub fn arg(&mut self, key: &'static str, value: f64) -> &mut Self {
+        if let Some(r) = self.rec.as_mut() {
+            r.args.push((key, value));
+        }
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(mut rec) = self.rec.take() {
+            rec.dur_us = now_us() - self.t0;
+            STACK.with(|s| {
+                let mut s = s.borrow_mut();
+                if let Some(pos) = s.iter().rposition(|&x| x == rec.id) {
+                    s.remove(pos);
+                }
+            });
+            with_shard(move |slot, buf| {
+                rec.thread = slot;
+                buf.lock().unwrap_or_else(|e| e.into_inner()).push(rec);
+            });
+        }
+    }
+}
+
+/// Record the convergence trace of the solve that just finished on this
+/// thread; `take_convergence` hands it to the block dispatcher. No-op
+/// when recording is disabled.
+pub fn record_convergence(t: ConvergenceTrace) {
+    if super::is_enabled() {
+        LAST_CONVERGENCE.with(|c| c.set(Some(t)));
+    }
+}
+
+/// Take (and clear) the last convergence trace recorded on this thread.
+pub fn take_convergence() -> Option<ConvergenceTrace> {
+    LAST_CONVERGENCE.with(|c| c.take())
+}
+
+pub(super) fn drain_spans() -> Vec<SpanRecord> {
+    let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let mut all = Vec::new();
+    for shard in &reg.shards {
+        let mut s = shard.lock().unwrap_or_else(|e| e.into_inner());
+        all.append(&mut s);
+    }
+    drop(reg);
+    all.sort_by(|a, b| {
+        a.start_us.partial_cmp(&b.start_us).unwrap_or(std::cmp::Ordering::Equal).then(a.id.cmp(&b.id))
+    });
+    all
+}
+
+pub(super) fn thread_names() -> Vec<String> {
+    registry().lock().unwrap_or_else(|e| e.into_inner()).names.clone()
+}
+
+/// `span!("name")` / `span!("name", {"k": v, ..})` — enter a span guard;
+/// hold the returned value for the span's extent. Keys are string
+/// literals, values anything castable `as f64`. Inert when recording is
+/// off.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::trace::SpanGuard::enter($name)
+    };
+    ($name:expr, { $($k:literal : $v:expr),* $(,)? }) => {{
+        let mut g = $crate::obs::trace::SpanGuard::enter($name);
+        if g.active() {
+            $( g.arg($k, $v as f64); )*
+        }
+        g
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    fn my_spans(sess: &TraceSession, prefix: &str) -> Vec<SpanRecord> {
+        sess.spans.iter().filter(|s| s.name.starts_with(prefix)).cloned().collect()
+    }
+
+    #[test]
+    fn disabled_guards_are_inert() {
+        let _g = obs::test_guard();
+        obs::set_enabled(false);
+        let sp = span!("test.trace.never", {"x": 3usize});
+        assert!(!sp.active());
+        assert_eq!(sp.id(), 0);
+        drop(sp);
+        let sess = obs::drain();
+        assert!(my_spans(&sess, "test.trace.never").is_empty());
+    }
+
+    #[test]
+    fn nesting_links_parents() {
+        let _g = obs::test_guard();
+        obs::drain();
+        obs::set_enabled(true);
+        {
+            let outer = span!("test.trace.outer", {"p": 7usize});
+            let outer_id = outer.id();
+            assert_eq!(current_span(), outer_id);
+            {
+                let inner = span!("test.trace.inner");
+                assert_eq!(inner.rec.as_ref().unwrap().parent, outer_id);
+            }
+            let adopted = SpanGuard::enter_under("test.trace.adopted", outer_id);
+            assert_eq!(adopted.rec.as_ref().unwrap().parent, outer_id);
+        }
+        obs::set_enabled(false);
+        let sess = obs::drain();
+        let got = my_spans(&sess, "test.trace.");
+        assert_eq!(got.len(), 3, "{got:?}");
+        let outer = got.iter().find(|s| s.name == "test.trace.outer").unwrap();
+        assert_eq!(outer.args, vec![("p", 7.0)]);
+        for child in ["test.trace.inner", "test.trace.adopted"] {
+            let c = got.iter().find(|s| s.name == child).unwrap();
+            assert_eq!(c.parent, outer.id);
+            assert!(c.start_us >= outer.start_us);
+        }
+    }
+
+    #[test]
+    fn convergence_handoff_is_per_thread() {
+        let _g = obs::test_guard();
+        obs::set_enabled(true);
+        let t = ConvergenceTrace {
+            solver: "test",
+            iterations: 5,
+            inner_iterations: 12,
+            active_set: 3,
+            kkt_violation: 1e-9,
+            dual_gap: 0.0,
+            converged: true,
+        };
+        record_convergence(t);
+        assert_eq!(take_convergence(), Some(t));
+        assert_eq!(take_convergence(), None);
+        obs::set_enabled(false);
+        record_convergence(t);
+        assert_eq!(take_convergence(), None, "disabled recording must not store");
+        obs::drain();
+    }
+}

@@ -134,7 +134,7 @@ mod tests {
     #[test]
     fn loads_real_manifest_when_built() {
         let Some(m) = repo_manifest() else {
-            eprintln!("skipping: artifacts not built");
+            crate::log_info!("skipping: artifacts not built");
             return;
         };
         assert!(!m.artifacts.is_empty());

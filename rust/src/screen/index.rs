@@ -117,6 +117,7 @@ impl ScreenIndex {
         floor: f64,
         checkpoint_every: Option<usize>,
     ) -> ScreenIndex {
+        let mut span = crate::obs::SpanGuard::enter("screen.index.build");
         // Deterministic total order regardless of how construction was
         // parallelized: weight descending, then (i, j) ascending.
         edges.sort_unstable_by(|a, b| {
@@ -157,6 +158,14 @@ impl ScreenIndex {
             idx = end;
         }
         group_start.push(edges.len());
+
+        crate::obs::metrics::counter_add("screen.index.builds", 1);
+        if span.active() {
+            span.arg("p", p as f64)
+                .arg("n_edges", edges.len() as f64)
+                .arg("n_groups", group_w.len() as f64)
+                .arg("n_checkpoints", checkpoints.len() as f64);
+        }
 
         ScreenIndex {
             p,
@@ -278,8 +287,12 @@ impl ScreenIndex {
     /// restore the nearest checkpoint, replay ≤ K unions. Bit-identical to
     /// `threshold_partition(S, λ)` (canonical first-appearance labels).
     pub fn partition_at(&self, lambda: f64) -> Partition {
+        let mut span = crate::obs::SpanGuard::enter("screen.partition_at");
         let m = self.tie_group_of(lambda);
-        let mut uf = self.replay_to(m);
+        let (mut uf, depth) = self.replay_to(m);
+        if span.active() {
+            span.arg("tie_group", m as f64).arg("replay_depth", depth as f64);
+        }
         Partition::from_labels(&uf.labels())
     }
 
@@ -298,15 +311,18 @@ impl ScreenIndex {
         counts
     }
 
-    /// Union-find with the first `m` tie groups applied.
-    fn replay_to(&self, m: usize) -> UnionFind {
+    /// Union-find with the first `m` tie groups applied, plus the number
+    /// of edge activations replayed past the restored checkpoint.
+    fn replay_to(&self, m: usize) -> (UnionFind, usize) {
         let ci = self.checkpoints.partition_point(|c| c.groups_applied <= m) - 1;
         let ck = &self.checkpoints[ci];
         let mut uf = UnionFind::from_snapshot(&ck.snap);
+        let depth = self.group_start[m] - self.group_start[ck.groups_applied];
         for e in &self.edges[self.group_start[ck.groups_applied]..self.group_start[m]] {
             uf.union(e.i as usize, e.j as usize);
         }
-        uf
+        crate::obs::metrics::hist_record("screen.replay_depth", depth as f64);
+        (uf, depth)
     }
 
     /// Smallest λ with no component above `p_max` (§2 consequence 5):

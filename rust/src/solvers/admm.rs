@@ -51,6 +51,8 @@ pub fn solve(
     let mut theta = z.clone();
     let mut converged = false;
     let mut iters = 0usize;
+    let mut last_primal = f64::INFINITY;
+    let mut last_dual = f64::INFINITY;
 
     while iters < opts.max_iter {
         iters += 1;
@@ -92,7 +94,9 @@ pub fn solve(
             }
         }
         let scale = (p as f64).max(1.0);
-        if primal.sqrt() <= opts.tol * scale && rho * dual.sqrt() <= opts.tol * scale {
+        last_primal = primal.sqrt();
+        last_dual = rho * dual.sqrt();
+        if last_primal <= opts.tol * scale && last_dual <= opts.tol * scale {
             converged = true;
             break;
         }
@@ -113,6 +117,18 @@ pub fn solve(
         tr += crate::linalg::dot(s.row(i), theta_out.row(i));
     }
     let objective = -chol.logdet() + tr + lambda * theta_out.abs_sum();
+
+    if crate::obs::is_enabled() {
+        crate::obs::trace::record_convergence(crate::obs::ConvergenceTrace {
+            solver: "admm",
+            iterations: iters,
+            inner_iterations: 0,
+            active_set: theta_out.offdiag_nnz(0.0),
+            kkt_violation: last_primal,
+            dual_gap: last_dual,
+            converged,
+        });
+    }
 
     Ok(Solution { theta: theta_out, w, iterations: iters, converged, objective })
 }

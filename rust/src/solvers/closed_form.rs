@@ -214,10 +214,12 @@ pub fn solve_tree(
     for i in 0..p {
         for k in (i + 1)..p {
             if (w.get(i, k) - s.get(i, k)).abs() > lambda + KKT_SLACK {
+                crate::obs::metrics::counter_add("tier.tree.kkt_reject", 1);
                 return None;
             }
         }
     }
+    crate::obs::metrics::counter_add("tier.tree.kkt_accept", 1);
 
     let objective = block_objective(s, &theta, logdet_w, lambda, penalize_diagonal);
     Some(Solution { theta, w, iterations: 0, converged: true, objective })

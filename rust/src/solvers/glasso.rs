@@ -86,6 +86,8 @@ pub fn solve(
     let mut active: Vec<usize> = Vec::with_capacity(p);
     let mut converged = false;
     let mut sweeps = 0usize;
+    let mut total_inner = 0usize;
+    let mut last_avg_change = f64::INFINITY;
 
     while sweeps < opts.max_iter {
         sweeps += 1;
@@ -184,6 +186,7 @@ pub fn solve(
                     }
                 }
             }
+            total_inner += inner;
 
             // w₁₂ ← W₁₁ β̂  (vbeta restricted to i ≠ j).
             for i in 0..p {
@@ -196,10 +199,31 @@ pub fn solve(
         }
 
         let avg_change = total_change / (p * (p - 1)) as f64;
+        last_avg_change = avg_change;
         if avg_change <= thr {
             converged = true;
             break;
         }
+    }
+
+    if crate::obs::is_enabled() {
+        let mut active_set = 0usize;
+        for j in 0..p {
+            for i in 0..p {
+                if i != j && betas.get(i, j) != 0.0 {
+                    active_set += 1;
+                }
+            }
+        }
+        crate::obs::trace::record_convergence(crate::obs::ConvergenceTrace {
+            solver: "glasso",
+            iterations: sweeps,
+            inner_iterations: total_inner,
+            active_set,
+            kkt_violation: last_avg_change,
+            dual_gap: 0.0,
+            converged,
+        });
     }
 
     // Recover Θ column-wise: θ₂₂ = 1/(w₂₂ − w₁₂ᵀβ), θ₁₂ = −β·θ₂₂.

@@ -75,6 +75,7 @@ pub fn solve_lasso_cd(
         }
     }
 
+    crate::obs::metrics::hist_record("lasso_cd.sweeps", sweeps as f64);
     LassoResult { beta: beta.to_vec(), sweeps, converged }
 }
 
@@ -163,6 +164,7 @@ pub fn solve_lasso_cd_active(
         }
     }
 
+    crate::obs::metrics::hist_record("lasso_cd.sweeps", sweeps as f64);
     LassoResult { beta: beta.to_vec(), sweeps, converged }
 }
 

@@ -87,6 +87,7 @@ pub fn solve(
     let mut converged = false;
     let mut iters = 0usize;
     let mut theta = chol.inverse();
+    let mut last_gap = f64::INFINITY;
 
     while iters < opts.max_iter {
         iters += 1;
@@ -160,6 +161,7 @@ pub fn solve(
             tr_s_theta += crate::linalg::dot(s.row(i), theta.row(i));
         }
         let gap = tr_s_theta + lambda * theta.abs_sum() - p as f64;
+        last_gap = gap;
         if gap.abs() <= opts.tol {
             converged = true;
             break;
@@ -176,6 +178,18 @@ pub fn solve(
         tr += crate::linalg::dot(s.row(i), theta.row(i));
     }
     let objective = logdet_w + tr + lambda * theta.abs_sum();
+
+    if crate::obs::is_enabled() {
+        crate::obs::trace::record_convergence(crate::obs::ConvergenceTrace {
+            solver: "smacs",
+            iterations: iters,
+            inner_iterations: 0,
+            active_set: theta.offdiag_nnz(0.0),
+            kkt_violation: 0.0,
+            dual_gap: last_gap,
+            converged,
+        });
+    }
 
     Ok(Solution { theta, w, iterations: iters, converged, objective })
 }

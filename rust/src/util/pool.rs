@@ -90,9 +90,17 @@ impl<'a> Batch<'a> {
             return false;
         }
         if let Some(task) = self.tasks[i].lock().unwrap().take() {
+            // Utilization stamp: one root `pool.task` span per claimed
+            // task (rooted deliberately — the drain computes per-worker
+            // busy fractions from these; the logical span tree links
+            // through explicit parents instead).
+            let mut sp = crate::obs::trace::SpanGuard::enter_under("pool.task", 0);
+            sp.arg("slot", i as f64);
+            crate::obs::metrics::counter_add("pool.tasks", 1);
             let was = IN_POOL.with(|flag| flag.replace(true));
             let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
             IN_POOL.with(|flag| flag.set(was));
+            drop(sp);
             if result.is_err() {
                 self.panicked.store(true, Ordering::SeqCst);
             }

@@ -1,0 +1,206 @@
+//! Integration properties for the observability subsystem: recording must
+//! be deterministic across execution widths and invisible to numerics.
+//!
+//! - serial (parallel=false) and pooled (parallel=true) runs of the same
+//!   solve report identical deterministic metric totals and identical
+//!   logical span trees (pool bookkeeping and wall-clock metrics excluded
+//!   by convention: `pool.*` names and names ending `_secs`);
+//! - tracing on vs tracing off produces bit-identical partitions and Θ;
+//! - histogram bucket boundaries survive the JSON exporter bit-for-bit.
+//!
+//! Every test serializes on `obs::test_guard()` — they toggle the global
+//! recording flag and compare drained totals.
+
+use covthresh::coordinator::{
+    Coordinator, CoordinatorConfig, NativeBackend, ScreenReport, ScreenSession,
+};
+use covthresh::datasets::synthetic::block_instance;
+use covthresh::obs::metrics::{bucket_hi, bucket_index, bucket_lo, MetricsSnapshot};
+use covthresh::obs::{self, export, metrics};
+use covthresh::screen::index::ScreenIndex;
+use covthresh::util::json;
+
+const LAMBDA: f64 = 0.85;
+
+fn coord(parallel: bool) -> Coordinator<NativeBackend> {
+    Coordinator::new(
+        NativeBackend::glasso(),
+        CoordinatorConfig { parallel, n_machines: 4, ..Default::default() },
+    )
+}
+
+/// One traced solve: clear the shards, run, drain.
+fn traced_solve(parallel: bool) -> (ScreenReport, obs::TraceSession) {
+    let inst = block_instance(3, 6, 7);
+    let _ = obs::drain();
+    let report = coord(parallel).solve_screened(&inst.s, LAMBDA).unwrap();
+    (report, obs::drain())
+}
+
+/// Counters that must be identical at any execution width: everything
+/// except the `pool.*` occupancy bookkeeping.
+fn deterministic_counters(m: &MetricsSnapshot) -> Vec<(String, u64)> {
+    m.counters.iter().filter(|(k, _)| !k.starts_with("pool.")).cloned().collect()
+}
+
+/// Histograms over integer-valued observations (sizes, sweeps, depths)
+/// are deterministic; wall-clock histograms (`*_secs`) are not.
+fn deterministic_hists(m: &MetricsSnapshot) -> Vec<(String, u64, f64, Vec<u64>)> {
+    m.hists
+        .iter()
+        .filter(|(k, _)| !k.ends_with("_secs"))
+        .map(|(k, h)| (k.clone(), h.count, h.sum, h.buckets.to_vec()))
+        .collect()
+}
+
+#[test]
+fn serial_and_pooled_report_identical_metrics_and_span_trees() {
+    let _g = obs::test_guard();
+    let was = obs::is_enabled();
+    obs::set_enabled(true);
+
+    let (serial_report, serial_sess) = traced_solve(false);
+    let (pooled_report, pooled_sess) = traced_solve(true);
+
+    obs::set_enabled(was);
+
+    // Solutions bit-identical (the pool contract), so the telemetry must
+    // describe the same work.
+    assert_eq!(
+        serial_report.global.theta_dense().max_abs_diff(&pooled_report.global.theta_dense()),
+        0.0
+    );
+
+    assert_eq!(
+        deterministic_counters(&serial_sess.metrics),
+        deterministic_counters(&pooled_sess.metrics),
+        "counter totals must not depend on execution width"
+    );
+    assert_eq!(
+        deterministic_hists(&serial_sess.metrics),
+        deterministic_hists(&pooled_sess.metrics),
+        "integer-valued histograms must not depend on execution width"
+    );
+    assert_eq!(
+        export::span_tree_signature(&serial_sess),
+        export::span_tree_signature(&pooled_sess),
+        "logical span tree must not depend on execution width"
+    );
+    // and the tree is the full nested phase structure, not a flat list
+    let sig = export::span_tree_signature(&serial_sess);
+    for phase in ["solve_screened", "screen", "partition", "schedule", "solve", "assemble"] {
+        assert!(sig.contains(phase), "missing phase '{phase}' in {sig}");
+    }
+    assert!(sig.contains("block.solve"), "missing per-block spans in {sig}");
+
+    // Solver convergence traces attach identically on both paths.
+    for (a, b) in serial_report.global.blocks.iter().zip(pooled_report.global.blocks.iter()) {
+        assert_eq!(a.convergence, b.convergence, "component {}", a.component);
+    }
+}
+
+#[test]
+fn tracing_does_not_perturb_indexed_solves() {
+    let _g = obs::test_guard();
+    let was = obs::is_enabled();
+    let inst = block_instance(3, 5, 21);
+    let index = ScreenIndex::from_dense(&inst.s);
+    let c = coord(false);
+
+    obs::set_enabled(false);
+    let session_off = ScreenSession::new(&index);
+    let off = c.solve_screened_indexed(&inst.s, &session_off, 0.9).unwrap();
+
+    obs::set_enabled(true);
+    let session_on = ScreenSession::new(&index);
+    let on = c.solve_screened_indexed(&inst.s, &session_on, 0.9).unwrap();
+
+    obs::set_enabled(was);
+    let _ = obs::drain();
+
+    assert!(on.global.partition.equals(&off.global.partition));
+    assert_eq!(
+        on.global.theta_dense().max_abs_diff(&off.global.theta_dense()),
+        0.0,
+        "recording must never feed back into numerics"
+    );
+    // Untraced runs record nothing (the zero-overhead contract's visible
+    // half): the traced run attached convergence data, the untraced did not.
+    assert!(off.global.blocks.iter().all(|b| b.convergence.is_none()));
+}
+
+#[test]
+fn chrome_trace_of_indexed_solve_parses_back_with_phase_spans() {
+    let _g = obs::test_guard();
+    let was = obs::is_enabled();
+    obs::set_enabled(true);
+    let _ = obs::drain();
+
+    let inst = block_instance(3, 6, 5);
+    let index = ScreenIndex::from_dense(&inst.s);
+    let session = ScreenSession::new(&index);
+    coord(true).solve_screened_indexed(&inst.s, &session, 0.9).unwrap();
+    let sess = obs::drain();
+    obs::set_enabled(was);
+
+    let text = export::chrome_trace(&sess).to_string();
+    let doc = json::parse(&text).unwrap();
+    let events = doc.get("traceEvents").unwrap().items();
+    let names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+        .collect();
+    // The acceptance trace: root + nested phases + per-block solver spans
+    // + the index-layer replay span, all as Perfetto duration events.
+    let want = [
+        "solve_screened_indexed",
+        "screen",
+        "partition",
+        "screen.partition_at",
+        "schedule",
+        "solve",
+        "assemble",
+        "block.solve",
+    ];
+    for name in want {
+        assert!(names.contains(&name), "missing span '{name}' in {names:?}");
+    }
+    // thread_name metadata present for Perfetto's track labels
+    assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M")));
+}
+
+#[test]
+fn histogram_bucket_boundaries_roundtrip_through_exporter() {
+    let _g = obs::test_guard();
+    let was = obs::is_enabled();
+    obs::set_enabled(true);
+    let _ = obs::drain();
+
+    let values = [0.75, 3.0, 100.0, 1e-6, 6.0, 1024.0];
+    for v in values {
+        metrics::hist_record("obs_it.roundtrip", v);
+    }
+    let sess = obs::drain();
+    obs::set_enabled(was);
+
+    let text = export::metrics_json(&sess.metrics).to_string();
+    let parsed = json::parse(&text).unwrap();
+    let hj = parsed.get("histograms").unwrap().get("obs_it.roundtrip").unwrap();
+    assert_eq!(hj.get("count").unwrap().as_f64(), Some(values.len() as f64));
+
+    let recorded = sess.metrics.hist("obs_it.roundtrip").unwrap();
+    let mut total = 0u64;
+    for b in hj.get("buckets").unwrap().items() {
+        let lo = b.get("lo").unwrap().as_f64().unwrap();
+        let hi = b.get("hi").unwrap().as_f64().unwrap();
+        let count = b.get("count").unwrap().as_f64().unwrap() as u64;
+        // the exact power-of-two edges survive Display → parse bit-for-bit
+        let i = bucket_index(lo);
+        assert_eq!(lo, bucket_lo(i), "lo edge must round-trip exactly");
+        assert_eq!(hi, bucket_hi(i), "hi edge must round-trip exactly");
+        assert_eq!(count, recorded.buckets[i], "bucket {i}");
+        total += count;
+    }
+    assert_eq!(total, values.len() as u64);
+}

@@ -9,7 +9,9 @@
 //! - the tiered coordinator path agrees with the legacy iterative-only
 //!   path, and tiered serial == tiered parallel bit-for-bit;
 //! - a λ grid with a repeated or ascending pair is rejected with an error
-//!   naming the offending indices and values.
+//!   naming the offending indices and values;
+//! - `obs` recording is semantically invisible too: tracing on vs off
+//!   yields bit-identical partitions, Θ, and tier classifications.
 
 use covthresh::coordinator::path::solve_path;
 use covthresh::coordinator::{Coordinator, CoordinatorConfig, NativeBackend};
@@ -252,4 +254,35 @@ fn repeated_lambda_grid_is_rejected_with_named_pair() {
     let err = solve_path(&coord, &inst.s, &[0.9, 0.3, 0.4], true).unwrap_err().to_string();
     assert!(err.contains("descending"), "{err}");
     assert!(err.contains("λ[1] = 0.3 < λ[2] = 0.4"), "{err}");
+}
+
+#[test]
+fn tracing_is_invisible_to_tiered_solves() {
+    let _g = covthresh::obs::test_guard();
+    let was = covthresh::obs::is_enabled();
+    let mut rng = Xoshiro256::seed_from_u64(0x0B5);
+    // Mixed-tier covariance: singleton/pair/tree/iterative blocks all hit
+    // their recording paths (tree-KKT counters, convergence traces, …).
+    let s = mixed_tier_cov(6, &mut rng);
+    let coord = Coordinator::new(
+        NativeBackend::new(SolverKind::Glasso, tight()),
+        CoordinatorConfig::default(),
+    );
+
+    covthresh::obs::set_enabled(false);
+    let off = coord.solve_screened(&s, 0.2).unwrap();
+    covthresh::obs::set_enabled(true);
+    let on = coord.solve_screened(&s, 0.2).unwrap();
+    covthresh::obs::set_enabled(was);
+    let _ = covthresh::obs::drain();
+
+    assert!(on.global.partition.equals(&off.global.partition));
+    assert_eq!(
+        on.global.theta_dense().max_abs_diff(&off.global.theta_dense()),
+        0.0,
+        "recording must never perturb numerics"
+    );
+    for (a, b) in on.global.blocks.iter().zip(off.global.blocks.iter()) {
+        assert_eq!(a.tier, b.tier, "component {}: tier flipped under tracing", a.component);
+    }
 }
