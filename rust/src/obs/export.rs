@@ -2,8 +2,13 @@
 //! (Perfetto / `chrome://tracing`-loadable), flat metrics JSON, a human
 //! tree-view summary, a deterministic span-tree signature (for
 //! serial-vs-pooled identity tests), and per-worker pool utilization.
+//!
+//! All grouping here is over ordered collections (`BTreeMap`/`BTreeSet`
+//! or explicit first-seen order) so exported artifacts are byte-stable:
+//! exporting the same session twice — or two identical runs — yields
+//! identical bytes.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use super::metrics::{bucket_hi, bucket_lo, HistogramData, MetricsSnapshot, NBUCKETS};
 use super::trace::{SpanRecord, TraceSession};
@@ -91,9 +96,9 @@ fn histogram_json(h: &HistogramData) -> Json {
     o
 }
 
-fn children_of(spans: &[SpanRecord]) -> (HashMap<u64, Vec<usize>>, Vec<usize>) {
-    let ids: std::collections::HashSet<u64> = spans.iter().map(|s| s.id).collect();
-    let mut children: HashMap<u64, Vec<usize>> = HashMap::new();
+fn children_of(spans: &[SpanRecord]) -> (BTreeMap<u64, Vec<usize>>, Vec<usize>) {
+    let ids: BTreeSet<u64> = spans.iter().map(|s| s.id).collect();
+    let mut children: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
     let mut roots = Vec::new();
     for (i, s) in spans.iter().enumerate() {
         if s.parent != 0 && ids.contains(&s.parent) {
@@ -120,14 +125,14 @@ pub fn tree_view(sess: &TraceSession) -> String {
 
 fn emit_group(
     sess: &TraceSession,
-    children: &HashMap<u64, Vec<usize>>,
+    children: &BTreeMap<u64, Vec<usize>>,
     group: &[usize],
     depth: usize,
     out: &mut String,
 ) {
     // group siblings by name, first-seen order
     let mut order: Vec<&'static str> = Vec::new();
-    let mut by_name: HashMap<&'static str, Vec<usize>> = HashMap::new();
+    let mut by_name: BTreeMap<&'static str, Vec<usize>> = BTreeMap::new();
     for &i in group {
         let name = sess.spans[i].name;
         if !by_name.contains_key(name) {
@@ -190,7 +195,7 @@ pub fn span_tree_signature(sess: &TraceSession) -> String {
     sigs.join("\n")
 }
 
-fn node_sig(sess: &TraceSession, children: &HashMap<u64, Vec<usize>>, idx: usize) -> String {
+fn node_sig(sess: &TraceSession, children: &BTreeMap<u64, Vec<usize>>, idx: usize) -> String {
     let s = &sess.spans[idx];
     let mut args: Vec<String> = s.args.iter().map(|&(k, v)| format!("{k}={}", fmt_num(v))).collect();
     args.sort();
@@ -222,7 +227,7 @@ pub fn pool_utilization(sess: &TraceSession) -> Vec<PoolUtil> {
     let lo = sess.spans.iter().map(|s| s.start_us).fold(f64::INFINITY, f64::min);
     let hi = sess.spans.iter().map(|s| s.start_us + s.dur_us).fold(f64::NEG_INFINITY, f64::max);
     let extent = (hi - lo).max(1e-9);
-    let mut per: HashMap<usize, (u64, f64)> = HashMap::new();
+    let mut per: BTreeMap<usize, (u64, f64)> = BTreeMap::new();
     for s in &sess.spans {
         if s.name == "pool.task" {
             let e = per.entry(s.thread).or_insert((0, 0.0));

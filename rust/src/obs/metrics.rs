@@ -1,6 +1,11 @@
 //! Metrics registry: named counters, gauges, and log₂-bucket histograms
 //! in per-thread shards, merged name-sorted at drain.
 //!
+//! Shards and the drain accumulators are `BTreeMap`s, so every iteration —
+//! per-shard drain and the merged snapshot — is name-ordered. Merge order
+//! therefore never depends on hash seeds, and two identical runs export
+//! byte-identical metrics JSON (`tests/obs_properties.rs` locks this in).
+//!
 //! Determinism: counters are integer sums and histograms bucket by an
 //! exact function of the value, so totals over *deterministic*
 //! observations (sizes, sweep counts, replay depths) are identical no
@@ -12,7 +17,7 @@
 
 use std::borrow::Cow;
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// Number of histogram buckets.
@@ -91,9 +96,9 @@ impl HistogramData {
 
 #[derive(Default)]
 struct Shard {
-    counters: HashMap<Cow<'static, str>, u64>,
-    gauges: HashMap<Cow<'static, str>, f64>,
-    hists: HashMap<Cow<'static, str>, HistogramData>,
+    counters: BTreeMap<Cow<'static, str>, u64>,
+    gauges: BTreeMap<Cow<'static, str>, f64>,
+    hists: BTreeMap<Cow<'static, str>, HistogramData>,
 }
 
 fn registry() -> &'static Mutex<Vec<Arc<Mutex<Shard>>>> {
@@ -175,35 +180,35 @@ impl MetricsSnapshot {
     }
 }
 
-/// Merge every thread shard (name-sorted) and reset them.
+/// Merge every thread shard and reset them. Accumulators are `BTreeMap`s
+/// drained in name order, so the snapshot vectors come out sorted without
+/// a final sort and the merge order is byte-reproducible run to run.
 pub fn snapshot_and_reset() -> MetricsSnapshot {
     let reg = registry().lock().unwrap_or_else(|e| e.into_inner());
-    let mut counters: HashMap<String, u64> = HashMap::new();
-    let mut gauges: HashMap<String, f64> = HashMap::new();
-    let mut hists: HashMap<String, HistogramData> = HashMap::new();
+    let mut counters: BTreeMap<String, u64> = BTreeMap::new();
+    let mut gauges: BTreeMap<String, f64> = BTreeMap::new();
+    let mut hists: BTreeMap<String, HistogramData> = BTreeMap::new();
     for shard in reg.iter() {
         let mut s = shard.lock().unwrap_or_else(|e| e.into_inner());
-        for (k, v) in s.counters.drain() {
+        for (k, v) in std::mem::take(&mut s.counters) {
             *counters.entry(k.into_owned()).or_insert(0) += v;
         }
-        for (k, v) in s.gauges.drain() {
+        for (k, v) in std::mem::take(&mut s.gauges) {
             let e = gauges.entry(k.into_owned()).or_insert(f64::NEG_INFINITY);
             if v > *e {
                 *e = v;
             }
         }
-        for (k, v) in s.hists.drain() {
+        for (k, v) in std::mem::take(&mut s.hists) {
             hists.entry(k.into_owned()).or_default().merge(&v);
         }
     }
     drop(reg);
-    let mut counters: Vec<_> = counters.into_iter().collect();
-    counters.sort_by(|a, b| a.0.cmp(&b.0));
-    let mut gauges: Vec<_> = gauges.into_iter().collect();
-    gauges.sort_by(|a, b| a.0.cmp(&b.0));
-    let mut hists: Vec<_> = hists.into_iter().collect();
-    hists.sort_by(|a, b| a.0.cmp(&b.0));
-    MetricsSnapshot { counters, gauges, hists }
+    MetricsSnapshot {
+        counters: counters.into_iter().collect(),
+        gauges: gauges.into_iter().collect(),
+        hists: hists.into_iter().collect(),
+    }
 }
 
 #[cfg(test)]
@@ -260,19 +265,18 @@ mod tests {
         let _g = obs::test_guard();
         obs::drain();
         obs::set_enabled(true);
-        let handles: Vec<_> = (0..4)
-            .map(|t| {
-                std::thread::spawn(move || {
-                    for i in 0..25 {
-                        counter_add("test.metrics.events", 1);
-                        hist_record("test.metrics.size", ((t * 25 + i) % 7 + 1) as f64);
-                    }
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().unwrap();
-        }
+        // Cross-thread recording goes through the crate's own pool — the
+        // pool-only threading contract applies to this test too. A private
+        // 4-wide pool guarantees multiple shards even when the global pool
+        // is pinned to width 1 (COVTHRESH_THREADS=1 CI job).
+        let pool = crate::util::pool::ThreadPool::new(4);
+        pool.run(4, |t| {
+            for i in 0..25 {
+                counter_add("test.metrics.events", 1);
+                hist_record("test.metrics.size", ((t * 25 + i) % 7 + 1) as f64);
+            }
+        });
+        drop(pool);
         counter_add_owned(format!("test.metrics.dyn_{}", 3), 2);
         gauge_set("test.metrics.gauge", 42.0);
         obs::set_enabled(false);

@@ -28,6 +28,12 @@
 //! `chrome://tracing`), a flat metrics JSON, a human tree-view summary,
 //! and per-worker pool-utilization fractions.
 //!
+//! **Name registry** ([`names`]): every metric and span name is listed in
+//! one inventory; `cargo run -p xtask -- lint` statically rejects any
+//! recording site whose literal is not registered (typos cannot silently
+//! split a metric stream). Test-only names use the reserved `test.`
+//! prefix.
+//!
 //! **Overhead contract:** recording is gated on [`is_enabled`] — two
 //! relaxed atomic loads when off, so instrumented hot paths cost nothing
 //! measurable (tracked by `benches/block_solve.rs`). Recording never
@@ -42,6 +48,7 @@
 pub mod export;
 pub mod log;
 pub mod metrics;
+pub mod names;
 pub mod trace;
 
 use std::sync::atomic::{AtomicBool, Ordering};

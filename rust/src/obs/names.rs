@@ -1,0 +1,153 @@
+//! Central inventory of every metric and span name the crate records.
+//!
+//! This file is the single source of truth for observability names — the
+//! executable replacement for the prose metric inventory that used to live
+//! only in ROADMAP.md. The `xtask lint` pass (rule `metric-names`) parses
+//! this file and requires every string literal passed to
+//! [`super::metrics::counter_add`] / [`super::metrics::gauge_set`] /
+//! [`super::metrics::hist_record`] / `span!` / `SpanGuard::enter*` to
+//! appear here, so a typo can never silently split a metric stream into
+//! two.
+//!
+//! Conventions:
+//!
+//! - Names ending `_secs` are wall-clock observations: nondeterministic by
+//!   nature and excluded from determinism comparisons. Only gauges and
+//!   histograms may carry them (enforced by a unit test below and by the
+//!   lint's `wallclock-name` rule at the recording site).
+//! - Names starting `test.` are reserved for unit/integration tests and
+//!   intentionally unregistered.
+//! - Runtime-built names (`counter_add_owned`) cannot be checked
+//!   statically; the prefixes in use are `runtime.bucket_*` (per-bucket
+//!   PJRT execution counts in `examples/e2e_serving.rs`).
+//! - Span *argument* keys (`"size"`, `"tier"`, ...) are not metric streams
+//!   and are not registered.
+//!
+//! Each list is sorted (binary-searched by [`is_known`]) and the four
+//! lists are pairwise disjoint.
+
+/// Span names (`span!` / `SpanGuard::enter*`). `pool.task` spans are
+/// rooted occupancy stamps, excluded from span-tree signatures.
+pub const SPANS: &[&str] = &[
+    "assemble",
+    "block.solve",
+    "partition",
+    "pool.task",
+    "schedule",
+    "screen",
+    "screen.index.build",
+    "screen.partition_at",
+    "solve",
+    "solve_screened",
+    "solve_screened_indexed",
+];
+
+/// Counter names (merge across shards by sum; deterministic at any pool
+/// width except the `pool.*` occupancy bookkeeping).
+pub const COUNTERS: &[&str] = &[
+    "dispatch.iterative",
+    "dispatch.pair",
+    "dispatch.singleton",
+    "dispatch.tree",
+    "pool.tasks",
+    "screen.index.builds",
+    "serve.certified",
+    "serve.requests",
+    "session.cache.hits",
+    "session.cache.misses",
+    "solve.isolated",
+    "tier.tree.kkt_accept",
+    "tier.tree.kkt_reject",
+];
+
+/// Gauge names (merge across shards by max).
+pub const GAUGES: &[&str] = &[
+    "schedule.modeled_makespan",
+    "schedule.modeled_serial",
+    "serve.ingest_secs",
+    "serve.latency_mean_secs",
+    "serve.latency_p50_secs",
+    "serve.latency_p95_secs",
+    "serve.latency_p99_secs",
+    "serve.throughput_rps",
+    "serve.wall_secs",
+];
+
+/// Histogram names (log₂ buckets; integer-valued observations are
+/// deterministic, `_secs` ones are wall-clock).
+pub const HISTOGRAMS: &[&str] = &[
+    "block.size",
+    "lasso_cd.sweeps",
+    "schedule.unit_blocks",
+    "screen.replay_depth",
+    "serve.latency_secs",
+    "solver.iterations",
+];
+
+/// Every registered name, spans first.
+pub fn all() -> impl Iterator<Item = &'static str> {
+    SPANS
+        .iter()
+        .chain(COUNTERS.iter())
+        .chain(GAUGES.iter())
+        .chain(HISTOGRAMS.iter())
+        .copied()
+}
+
+/// Whether `name` is a registered metric/span name.
+pub fn is_known(name: &str) -> bool {
+    SPANS.binary_search(&name).is_ok()
+        || COUNTERS.binary_search(&name).is_ok()
+        || GAUGES.binary_search(&name).is_ok()
+        || HISTOGRAMS.binary_search(&name).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    fn assert_sorted_unique(list: &[&str], what: &str) {
+        for w in list.windows(2) {
+            assert!(w[0] < w[1], "{what} not sorted/unique at '{}' vs '{}'", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn lists_are_sorted_unique_and_disjoint() {
+        assert_sorted_unique(SPANS, "SPANS");
+        assert_sorted_unique(COUNTERS, "COUNTERS");
+        assert_sorted_unique(GAUGES, "GAUGES");
+        assert_sorted_unique(HISTOGRAMS, "HISTOGRAMS");
+        let total = SPANS.len() + COUNTERS.len() + GAUGES.len() + HISTOGRAMS.len();
+        let set: BTreeSet<&str> = all().collect();
+        assert_eq!(set.len(), total, "a name appears in more than one list");
+    }
+
+    #[test]
+    fn is_known_matches_the_lists() {
+        for name in all() {
+            assert!(is_known(name), "{name}");
+        }
+        assert!(!is_known("no.such.metric"));
+        assert!(!is_known("screen.index.bulids"), "typos must not resolve");
+    }
+
+    #[test]
+    fn wall_clock_suffix_only_on_gauges_and_histograms() {
+        for name in SPANS.iter().chain(COUNTERS.iter()) {
+            assert!(
+                !name.ends_with("_secs"),
+                "{name}: spans and counters must be deterministic — `_secs` \
+                 (wall-clock) names are gauges or histograms only"
+            );
+        }
+    }
+
+    #[test]
+    fn test_prefix_is_reserved() {
+        for name in all() {
+            assert!(!name.starts_with("test."), "{name}: `test.` is reserved for tests");
+        }
+    }
+}

@@ -203,13 +203,13 @@ impl ThreadPool {
             return;
         }
         let batch = Arc::new(Batch::new(tasks));
-        // Lifetime erasure so batches can sit in the workers' queue: the
-        // queue type is `Arc<Batch<'static>>` but this batch borrows from
-        // the caller. Sound because `scope` does not return until every
-        // task has been claimed, executed, and dropped (`wait_all`), and
-        // any queue entries still referencing the batch afterwards only
-        // touch its counters (`run_one` finds nothing left to claim) —
-        // the Arc keeps the allocation itself alive.
+        // SAFETY: lifetime erasure so batches can sit in the workers'
+        // queue: the queue type is `Arc<Batch<'static>>` but this batch
+        // borrows from the caller. Sound because `scope` does not return
+        // until every task has been claimed, executed, and dropped
+        // (`wait_all`), and any queue entries still referencing the batch
+        // afterwards only touch its counters (`run_one` finds nothing
+        // left to claim) — the Arc keeps the allocation itself alive.
         let erased: Arc<Batch<'static>> = unsafe {
             std::mem::transmute::<Arc<Batch<'a>>, Arc<Batch<'static>>>(Arc::clone(&batch))
         };

@@ -6,6 +6,8 @@
 //!   logical span trees (pool bookkeeping and wall-clock metrics excluded
 //!   by convention: `pool.*` names and names ending `_secs`);
 //! - tracing on vs tracing off produces bit-identical partitions and Θ;
+//! - two identical runs export byte-identical metrics JSON (artifacts
+//!   are diffable);
 //! - histogram bucket boundaries survive the JSON exporter bit-for-bit.
 //!
 //! Every test serializes on `obs::test_guard()` — they toggle the global
@@ -170,6 +172,50 @@ fn chrome_trace_of_indexed_solve_parses_back_with_phase_spans() {
     assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M")));
 }
 
+/// Byte-stability of exported artifacts: the metrics JSON (and the span
+/// tree signature) from two identical pooled runs must match byte for
+/// byte, not just semantically. Shards and drain accumulators are
+/// `BTreeMap`s and the exporter's grouping is ordered, so nothing in the
+/// pipeline depends on hash seeds or thread arrival order. Wall-clock
+/// values are excluded the same way the cross-width test excludes them:
+/// this workload records none (no serve-layer `_secs` gauges fire inside
+/// `solve_screened_indexed`), which the test asserts first.
+#[test]
+fn metrics_export_is_byte_stable_across_identical_runs() {
+    let _g = obs::test_guard();
+    let was = obs::is_enabled();
+
+    let run = || {
+        let inst = block_instance(3, 6, 7);
+        let index = ScreenIndex::from_dense(&inst.s);
+        let session = ScreenSession::new(&index);
+        let _ = obs::drain();
+        obs::set_enabled(true);
+        coord(true).solve_screened_indexed(&inst.s, &session, LAMBDA).unwrap();
+        obs::set_enabled(false);
+        obs::drain()
+    };
+    let a = run();
+    let b = run();
+    obs::set_enabled(was);
+
+    assert!(
+        a.metrics.gauges.iter().all(|(k, _)| !k.ends_with("_secs"))
+            && a.metrics.hists.iter().all(|(k, _)| !k.ends_with("_secs")),
+        "workload unexpectedly records wall-clock metrics; exclude them here"
+    );
+    assert_eq!(
+        export::metrics_json(&a.metrics).to_string(),
+        export::metrics_json(&b.metrics).to_string(),
+        "identical runs must export byte-identical metrics JSON"
+    );
+    assert_eq!(
+        export::span_tree_signature(&a),
+        export::span_tree_signature(&b),
+        "identical runs must produce identical span-tree signatures"
+    );
+}
+
 #[test]
 fn histogram_bucket_boundaries_roundtrip_through_exporter() {
     let _g = obs::test_guard();
@@ -179,17 +225,17 @@ fn histogram_bucket_boundaries_roundtrip_through_exporter() {
 
     let values = [0.75, 3.0, 100.0, 1e-6, 6.0, 1024.0];
     for v in values {
-        metrics::hist_record("obs_it.roundtrip", v);
+        metrics::hist_record("test.obs.roundtrip", v);
     }
     let sess = obs::drain();
     obs::set_enabled(was);
 
     let text = export::metrics_json(&sess.metrics).to_string();
     let parsed = json::parse(&text).unwrap();
-    let hj = parsed.get("histograms").unwrap().get("obs_it.roundtrip").unwrap();
+    let hj = parsed.get("histograms").unwrap().get("test.obs.roundtrip").unwrap();
     assert_eq!(hj.get("count").unwrap().as_f64(), Some(values.len() as f64));
 
-    let recorded = sess.metrics.hist("obs_it.roundtrip").unwrap();
+    let recorded = sess.metrics.hist("test.obs.roundtrip").unwrap();
     let mut total = 0u64;
     for b in hj.get("buckets").unwrap().items() {
         let lo = b.get("lo").unwrap().as_f64().unwrap();

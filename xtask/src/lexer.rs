@@ -1,0 +1,329 @@
+//! Minimal Rust tokenizer for the lint engine.
+//!
+//! Not a full lexer — just enough structure for per-file invariant rules:
+//! identifiers, string literals (regular / raw / byte, with the literal's
+//! content decoded far enough to compare metric names), numbers, single-char
+//! punctuation, and lifetimes (so `'static` is never confused with an
+//! unterminated char literal). Comments are skipped from the token stream
+//! but captured separately with their line numbers, because two rule
+//! mechanisms live in comments: the `// lint:allow(<rule>) <reason>` escape
+//! hatch and the `// SAFETY:` requirement next to `unsafe`.
+
+/// Token classes the rules distinguish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `thread`, `HashMap`, ...).
+    Ident,
+    /// String literal; `text` holds the (escape-collapsed) content.
+    Str,
+    /// Numeric or char literal (content is irrelevant to every rule).
+    Num,
+    /// Single punctuation character.
+    Punct,
+    /// Lifetime (`'a`, `'static`), without the leading quote.
+    Lifetime,
+}
+
+/// One token with its starting line (1-based).
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One comment (line or block, including the delimiters) with its
+/// starting line.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub text: String,
+    pub line: usize,
+}
+
+/// Tokenize `src`, returning the code tokens and the comments separately.
+pub fn tokenize(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+            let start = i;
+            while i < b.len() && b[i] != '\n' {
+                i += 1;
+            }
+            comments.push(Comment { text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        if c == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push(Comment { text: b[start..i].iter().collect(), line: start_line });
+            continue;
+        }
+        if c == 'r' || c == 'b' {
+            if let Some((tok, ni, nl)) = try_prefixed_string(&b, i, line) {
+                toks.push(tok);
+                i = ni;
+                line = nl;
+                continue;
+            }
+        }
+        if c == '"' {
+            let start_line = line;
+            let (text, ni, nl) = scan_string(&b, i + 1, line);
+            toks.push(Tok { kind: TokKind::Str, text, line: start_line });
+            i = ni;
+            line = nl;
+            continue;
+        }
+        if c == '\'' {
+            // Lifetime unless this is provably a char literal: a lifetime
+            // is `'` + ident with no closing quote right after one char.
+            let next_is_ident =
+                i + 1 < b.len() && (b[i + 1].is_alphabetic() || b[i + 1] == '_');
+            let closes_as_char = i + 2 < b.len() && b[i + 2] == '\'';
+            if next_is_ident && !closes_as_char {
+                let start = i + 1;
+                i += 1;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            // Char literal: skip the (possibly escaped, possibly \u{..})
+            // body up to the closing quote.
+            i += 1;
+            if i < b.len() && b[i] == '\\' {
+                i += 2;
+            } else {
+                i += 1;
+            }
+            while i < b.len() && b[i] != '\'' {
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            i += 1;
+            toks.push(Tok { kind: TokKind::Num, text: String::new(), line });
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok { kind: TokKind::Num, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// Try to lex a raw/byte string starting at `i` (`r"`, `r#"`, `b"`,
+/// `br#"`...). Returns None when the prefix is actually an identifier.
+fn try_prefixed_string(b: &[char], i: usize, line: usize) -> Option<(Tok, usize, usize)> {
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    let mut raw = false;
+    if j < b.len() && b[j] == 'r' {
+        raw = true;
+        j += 1;
+    }
+    let mut hashes = 0;
+    if raw {
+        while j < b.len() && b[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+    }
+    if j >= b.len() || b[j] != '"' {
+        return None;
+    }
+    // `b` alone (no `r`) still introduces an escaped string (`b"..."`).
+    if !raw {
+        let start_line = line;
+        let (text, ni, nl) = scan_string(b, j + 1, line);
+        return Some((Tok { kind: TokKind::Str, text, line: start_line }, ni, nl));
+    }
+    j += 1;
+    let start = j;
+    let start_line = line;
+    let mut nl = line;
+    while j < b.len() {
+        if b[j] == '\n' {
+            nl += 1;
+            j += 1;
+            continue;
+        }
+        if b[j] == '"' && b[j + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes
+        {
+            let text: String = b[start..j].iter().collect();
+            return Some((
+                Tok { kind: TokKind::Str, text, line: start_line },
+                j + 1 + hashes,
+                nl,
+            ));
+        }
+        j += 1;
+    }
+    let text: String = b[start..].iter().collect();
+    Some((Tok { kind: TokKind::Str, text, line: start_line }, b.len(), nl))
+}
+
+/// Scan a regular (escaped) string body starting just after the opening
+/// quote; returns (content, next index, current line).
+fn scan_string(b: &[char], mut j: usize, mut line: usize) -> (String, usize, usize) {
+    let mut text = String::new();
+    while j < b.len() {
+        match b[j] {
+            '\\' => {
+                if j + 1 < b.len() {
+                    if b[j + 1] == '\n' {
+                        line += 1;
+                    }
+                    text.push(b[j + 1]);
+                }
+                j += 2;
+            }
+            '"' => {
+                j += 1;
+                break;
+            }
+            c => {
+                if c == '\n' {
+                    line += 1;
+                }
+                text.push(c);
+                j += 1;
+            }
+        }
+    }
+    (text, j, line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    fn strs(src: &str) -> Vec<String> {
+        tokenize(src)
+            .0
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn idents_and_puncts_with_lines() {
+        let (toks, comments) = tokenize("fn main() {\n    let x = 1;\n}\n");
+        assert!(comments.is_empty());
+        let main = toks.iter().find(|t| t.text == "main").unwrap();
+        assert_eq!((main.kind, main.line), (TokKind::Ident, 1));
+        let x = toks.iter().find(|t| t.text == "x").unwrap();
+        assert_eq!(x.line, 2);
+        let one = toks.iter().find(|t| t.kind == TokKind::Num).unwrap();
+        assert_eq!(one.text, "1");
+    }
+
+    #[test]
+    fn strings_raw_strings_and_escapes() {
+        assert_eq!(strs(r#"f("pool.tasks", 1)"#), vec!["pool.tasks"]);
+        assert_eq!(strs("let s = \"a\\\"b\";"), vec!["a\"b"]);
+        assert_eq!(strs("let s = r\"no \\ escapes\";"), vec!["no \\ escapes"]);
+        assert_eq!(strs("let s = r#\"has \"quote\"\"#;"), vec!["has \"quote\""]);
+        assert_eq!(strs("let s = b\"bytes\";"), vec!["bytes"]);
+        // `r` / `b` followed by ident chars stay identifiers
+        assert_eq!(idents("let result = bytes;"), vec!["let", "result", "bytes"]);
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let (toks, comments) = tokenize(
+            "// lint:allow(x) reason\nfn f() {} /* block\nover lines */\n//! doc\n",
+        );
+        assert_eq!(comments.len(), 3);
+        assert_eq!(comments[0].line, 1);
+        assert!(comments[0].text.contains("lint:allow(x)"));
+        assert_eq!(comments[1].line, 2);
+        assert!(toks.iter().all(|t| !t.text.contains("lint")));
+        // nested block comments close correctly
+        let (t2, c2) = tokenize("/* a /* b */ c */ fn g() {}");
+        assert_eq!(c2.len(), 1);
+        assert_eq!(t2.iter().filter(|t| t.kind == TokKind::Ident).count(), 2);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let (toks, _) = tokenize("fn f<'a>(x: &'a str, c: char) { let y = 'z'; let s: &'static str = \"n\"; }");
+        let lifetimes: Vec<_> =
+            toks.iter().filter(|t| t.kind == TokKind::Lifetime).map(|t| t.text.clone()).collect();
+        assert_eq!(lifetimes, vec!["a", "a", "static"]);
+        // the 'z' char literal did not swallow the rest of the file
+        assert_eq!(strs("let y = '\\''; let s = \"after\";"), vec!["after"]);
+    }
+
+    #[test]
+    fn string_contents_do_not_confuse_structure() {
+        let (toks, _) = tokenize("f(\"has ) paren and // comment\", g('('))");
+        let strc = toks.iter().filter(|t| t.kind == TokKind::Str).count();
+        assert_eq!(strc, 1);
+        let parens = toks.iter().filter(|t| t.text == "(").count();
+        assert_eq!(parens, 2, "only code parens are tokens");
+    }
+}

@@ -1,0 +1,12 @@
+//! Workspace automation for the covthresh repo.
+//!
+//! The only task so far is `lint`: a dependency-free static-analysis pass
+//! that enforces the crate's determinism and pool contracts at the source
+//! level (see [`rules`] for the rule inventory). Run it with:
+//!
+//! ```text
+//! cargo run -p xtask -- lint
+//! ```
+
+pub mod lexer;
+pub mod rules;

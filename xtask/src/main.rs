@@ -1,0 +1,69 @@
+//! `cargo run -p xtask -- lint [--root <dir>]`
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/configuration error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xtask::rules;
+
+fn usage() {
+    eprintln!("usage: cargo run -p xtask -- lint [--root <repo-root>]");
+    eprintln!();
+    eprintln!("Runs the crate-invariant lint over {:?}.", rules::SCAN_DIRS);
+    eprintln!("Rules: {}.", rules::RULES.join(", "));
+    eprintln!("Suppress one finding with `// lint:allow(<rule>) <reason>` on the");
+    eprintln!("violating line or the line above; the reason is mandatory.");
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => {}
+        _ => {
+            usage();
+            return ExitCode::from(2);
+        }
+    }
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives one level under the repo root")
+        .to_path_buf();
+    while let Some(flag) = args.next() {
+        match flag.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("--root requires a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown argument '{other}'");
+                usage();
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let (n_files, findings) = match rules::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    if n_files == 0 {
+        eprintln!("xtask lint: no .rs files found under {} — wrong --root?", root.display());
+        return ExitCode::from(2);
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("xtask lint: clean ({n_files} files)");
+        ExitCode::SUCCESS
+    } else {
+        println!("xtask lint: {} finding(s) in {n_files} files", findings.len());
+        ExitCode::from(1)
+    }
+}

@@ -1,0 +1,502 @@
+//! Per-file rule engine: the crate's architecture notes as machine-checked
+//! invariants.
+//!
+//! Each rule walks the token stream of one file (comments stripped, so
+//! nothing inside strings or docs can trigger) and reports findings with
+//! `file:line`. A finding can be suppressed with an inline escape hatch on
+//! the same line or the line directly above:
+//!
+//! ```text
+//! // lint:allow(<rule>) <justification — required>
+//! ```
+//!
+//! An allow with no justification (or naming an unknown rule) is itself a
+//! finding, so every suppression in the tree carries its reason.
+//!
+//! Rule inventory (ids are what `lint:allow` takes):
+//!
+//! | id                    | invariant |
+//! |-----------------------|-----------|
+//! | `pool-threading`      | no `std::thread::{spawn,scope,Builder}` outside `util/pool.rs` — the shared pool is the only threading entry point |
+//! | `ambient-time`        | `Instant`/`SystemTime` only in `util/timer.rs`, `obs/`, benches, examples |
+//! | `wallclock-name`      | a metric recording an elapsed/stopwatch value must have a name ending `_secs` (the determinism-exclusion convention) |
+//! | `metric-names`        | string literals passed to `counter_add`/`gauge_set`/`hist_record`/`span!`/`SpanGuard::enter*` must appear in `rust/src/obs/names.rs` (`test.`-prefixed names are reserved for tests and exempt) |
+//! | `determinism-hygiene` | no `HashMap`/`HashSet` in `screen/`, `solvers/`, `linalg/`, `coordinator/`, `obs/` — iteration order must never feed exports or numerics; use `BTreeMap`/`BTreeSet` |
+//! | `unsafe-allowlist`    | `unsafe` only in allowlisted files, and only with a `// SAFETY:` comment within the preceding lines |
+//! | `print-facade`        | no `println!`/`eprintln!` outside the log facade, the CLI, `report/`, benches, tests, examples |
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::lexer::{tokenize, Comment, Tok, TokKind};
+
+/// Every suppressible rule id.
+pub const RULES: &[&str] = &[
+    "pool-threading",
+    "ambient-time",
+    "wallclock-name",
+    "metric-names",
+    "determinism-hygiene",
+    "unsafe-allowlist",
+    "print-facade",
+];
+
+/// Directories scanned by [`lint_tree`], relative to the repo root.
+pub const SCAN_DIRS: &[&str] = &["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Where the metric/span name inventory lives, relative to the repo root.
+pub const INVENTORY_PATH: &str = "rust/src/obs/names.rs";
+
+// Per-rule allowlists (paths are repo-relative, '/'-separated).
+const POOL_FILES: &[&str] = &["rust/src/util/pool.rs"];
+const TIME_FILES: &[&str] = &["rust/src/util/timer.rs"];
+const TIME_DIRS: &[&str] = &["rust/src/obs/", "rust/benches/", "examples/"];
+const HYGIENE_DIRS: &[&str] = &[
+    "rust/src/screen/",
+    "rust/src/solvers/",
+    "rust/src/linalg/",
+    "rust/src/coordinator/",
+    "rust/src/obs/",
+];
+const UNSAFE_FILES: &[&str] = &["rust/src/util/pool.rs"];
+const PRINT_FILES: &[&str] = &[
+    "rust/src/obs/log.rs",
+    "rust/src/cli.rs",
+    "rust/src/main.rs",
+    "rust/src/bench_harness.rs",
+];
+const PRINT_DIRS: &[&str] = &["rust/src/report/", "rust/benches/", "rust/tests/", "examples/"];
+
+/// How many lines above an `unsafe` token a `// SAFETY:` comment may start.
+const SAFETY_WINDOW: usize = 12;
+
+const METRIC_FNS: &[&str] = &["counter_add", "gauge_set", "hist_record"];
+const WALLCLOCK_IDENTS: &[&str] = &["elapsed", "elapsed_secs", "elapsed_us", "Stopwatch"];
+
+/// One diagnostic: `path:line: [rule] msg`.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// The metric/span name inventory: every string literal in
+/// `rust/src/obs/names.rs`.
+pub struct Inventory {
+    names: BTreeSet<String>,
+}
+
+impl Inventory {
+    /// Collect every string literal of the inventory file's non-test code.
+    /// Collection stops at `mod tests` — the inventory's own unit tests
+    /// mention deliberately-unregistered names (typos, `test.` examples)
+    /// that must not leak into the registry.
+    pub fn from_source(src: &str) -> Inventory {
+        let (toks, _) = tokenize(src);
+        let mut names = BTreeSet::new();
+        for w in 0..toks.len() {
+            let t = &toks[w];
+            if t.kind == TokKind::Ident
+                && t.text == "mod"
+                && is_ident(toks.get(w + 1), "tests")
+            {
+                break;
+            }
+            if t.kind == TokKind::Str {
+                names.insert(t.text.clone());
+            }
+        }
+        Inventory { names }
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.names.contains(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+struct Allow {
+    rule: String,
+    line: usize,
+    reason: String,
+}
+
+fn parse_allows(comments: &[Comment]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for c in comments {
+        let mut rest = c.text.as_str();
+        while let Some(pos) = rest.find("lint:allow(") {
+            let after = &rest[pos + "lint:allow(".len()..];
+            let Some(close) = after.find(')') else { break };
+            let rule = after[..close].trim().to_string();
+            let tail = after[close + 1..].trim_start();
+            let reason = tail.strip_prefix(':').unwrap_or(tail).trim().to_string();
+            out.push(Allow { rule, line: c.line, reason });
+            rest = &after[close + 1..];
+        }
+    }
+    out
+}
+
+fn is_ident(t: Option<&Tok>, s: &str) -> bool {
+    t.map_or(false, |t| t.kind == TokKind::Ident && t.text == s)
+}
+
+fn is_punct(t: Option<&Tok>, c: char) -> bool {
+    t.map_or(false, |t| t.kind == TokKind::Punct && t.text.len() == 1 && t.text.starts_with(c))
+}
+
+fn path_sep(toks: &[Tok], i: usize) -> bool {
+    is_punct(toks.get(i), ':') && is_punct(toks.get(i + 1), ':')
+}
+
+fn in_any_dir(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(d))
+}
+
+/// Walk one call's tokens starting just past the opening parenthesis.
+/// Returns the string literals of the *first* argument (depth-0 comma
+/// terminates it; literals nested in a `match` or block inside that
+/// argument are included) and every identifier anywhere in the call.
+fn scan_call(toks: &[Tok], start: usize) -> (Vec<(String, usize)>, Vec<String>) {
+    let mut depth = 1usize;
+    let mut in_first_arg = true;
+    let mut lits = Vec::new();
+    let mut idents = Vec::new();
+    let mut j = start;
+    while j < toks.len() && depth > 0 {
+        let t = &toks[j];
+        match t.kind {
+            TokKind::Punct => match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                "," if depth == 1 => in_first_arg = false,
+                _ => {}
+            },
+            TokKind::Str => {
+                if in_first_arg {
+                    lits.push((t.text.clone(), t.line));
+                }
+            }
+            TokKind::Ident => idents.push(t.text.clone()),
+            _ => {}
+        }
+        j += 1;
+    }
+    (lits, idents)
+}
+
+fn rule_pool_threading(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if POOL_FILES.contains(&rel) {
+        return;
+    }
+    for i in 0..toks.len() {
+        if is_ident(toks.get(i), "thread") && path_sep(toks, i + 1) {
+            if let Some(t) = toks.get(i + 3) {
+                if t.kind == TokKind::Ident
+                    && matches!(t.text.as_str(), "spawn" | "scope" | "Builder")
+                {
+                    out.push(Finding {
+                        path: rel.to_string(),
+                        line: t.line,
+                        rule: "pool-threading",
+                        msg: format!(
+                            "`std::thread::{}` outside util/pool.rs — all parallelism \
+                             must go through the shared pool (util::pool)",
+                            t.text
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn rule_ambient_time(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if TIME_FILES.contains(&rel) || in_any_dir(rel, TIME_DIRS) {
+        return;
+    }
+    for t in toks {
+        if t.kind == TokKind::Ident && (t.text == "Instant" || t.text == "SystemTime") {
+            out.push(Finding {
+                path: rel.to_string(),
+                line: t.line,
+                rule: "ambient-time",
+                msg: format!(
+                    "ambient wall-clock type `{}` outside util/timer.rs and obs/ — \
+                     use util::timer::Stopwatch",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+fn rule_wallclock_name(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        let Some(t) = toks.get(i) else { break };
+        if t.kind != TokKind::Ident
+            || !METRIC_FNS.contains(&t.text.as_str())
+            || !is_punct(toks.get(i + 1), '(')
+        {
+            continue;
+        }
+        let (lits, idents) = scan_call(toks, i + 2);
+        let Some((name, line)) = lits.first() else { continue };
+        if name.ends_with("_secs") {
+            continue;
+        }
+        if idents.iter().any(|id| WALLCLOCK_IDENTS.contains(&id.as_str())) {
+            out.push(Finding {
+                path: rel.to_string(),
+                line: *line,
+                rule: "wallclock-name",
+                msg: format!(
+                    "metric `{name}` records a wall-clock value but its name does not \
+                     end in `_secs` — wall-clock metrics must be excluded from \
+                     determinism checks by naming convention"
+                ),
+            });
+        }
+    }
+}
+
+fn rule_metric_names(rel: &str, toks: &[Tok], inv: &Inventory, out: &mut Vec<Finding>) {
+    if rel == INVENTORY_PATH {
+        return;
+    }
+    for i in 0..toks.len() {
+        let start = if toks.get(i).map_or(false, |t| {
+            t.kind == TokKind::Ident && METRIC_FNS.contains(&t.text.as_str())
+        }) && is_punct(toks.get(i + 1), '(')
+        {
+            i + 2
+        } else if is_ident(toks.get(i), "span")
+            && is_punct(toks.get(i + 1), '!')
+            && is_punct(toks.get(i + 2), '(')
+        {
+            i + 3
+        } else if is_ident(toks.get(i), "SpanGuard")
+            && path_sep(toks, i + 1)
+            && toks.get(i + 3).map_or(false, |t| {
+                t.kind == TokKind::Ident && (t.text == "enter" || t.text == "enter_under")
+            })
+            && is_punct(toks.get(i + 4), '(')
+        {
+            i + 5
+        } else {
+            continue;
+        };
+        let (lits, _) = scan_call(toks, start);
+        for (name, line) in lits {
+            if name.starts_with("test.") || inv.contains(&name) {
+                continue;
+            }
+            out.push(Finding {
+                path: rel.to_string(),
+                line,
+                rule: "metric-names",
+                msg: format!(
+                    "metric/span name \"{name}\" is not in the obs::names inventory \
+                     ({INVENTORY_PATH}) — register it there (or use a `test.` prefix \
+                     in tests) so typos cannot silently split a metric stream"
+                ),
+            });
+        }
+    }
+}
+
+fn rule_determinism_hygiene(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if !in_any_dir(rel, HYGIENE_DIRS) {
+        return;
+    }
+    for t in toks {
+        if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+            out.push(Finding {
+                path: rel.to_string(),
+                line: t.line,
+                rule: "determinism-hygiene",
+                msg: format!(
+                    "`{}` in a determinism-sensitive module — its iteration order may \
+                     never feed exports, reports, or numeric accumulation; use \
+                     BTreeMap/BTreeSet or a sorted drain",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+fn rule_unsafe_allowlist(rel: &str, toks: &[Tok], comments: &[Comment], out: &mut Vec<Finding>) {
+    for t in toks {
+        if t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        if !UNSAFE_FILES.contains(&rel) {
+            out.push(Finding {
+                path: rel.to_string(),
+                line: t.line,
+                rule: "unsafe-allowlist",
+                msg: "`unsafe` outside the allowlisted files — the crate is safe \
+                      Rust everywhere except util/pool.rs"
+                    .to_string(),
+            });
+            continue;
+        }
+        let lo = t.line.saturating_sub(SAFETY_WINDOW);
+        let documented = comments
+            .iter()
+            .any(|c| c.line >= lo && c.line <= t.line && c.text.contains("SAFETY:"));
+        if !documented {
+            out.push(Finding {
+                path: rel.to_string(),
+                line: t.line,
+                rule: "unsafe-allowlist",
+                msg: "`unsafe` without an adjacent `// SAFETY:` comment justifying \
+                      soundness"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn rule_print_facade(rel: &str, toks: &[Tok], out: &mut Vec<Finding>) {
+    if PRINT_FILES.contains(&rel) || in_any_dir(rel, PRINT_DIRS) {
+        return;
+    }
+    for i in 0..toks.len() {
+        let Some(t) = toks.get(i) else { break };
+        if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "println" | "eprintln" | "print" | "eprint")
+            && is_punct(toks.get(i + 1), '!')
+        {
+            out.push(Finding {
+                path: rel.to_string(),
+                line: t.line,
+                rule: "print-facade",
+                msg: format!(
+                    "`{}!` outside the CLI / log facade — library code must log via \
+                     obs::log (log_info!/log_warn!/...)",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+/// Lint one file's source. `rel` is the repo-relative path ('/'-separated);
+/// rule scoping and allowlists key off it.
+pub fn lint_file(rel: &str, src: &str, inv: &Inventory) -> Vec<Finding> {
+    let (toks, comments) = tokenize(src);
+    let allows = parse_allows(&comments);
+    let mut raw = Vec::new();
+    rule_pool_threading(rel, &toks, &mut raw);
+    rule_ambient_time(rel, &toks, &mut raw);
+    rule_wallclock_name(rel, &toks, &mut raw);
+    rule_metric_names(rel, &toks, inv, &mut raw);
+    rule_determinism_hygiene(rel, &toks, &mut raw);
+    rule_unsafe_allowlist(rel, &toks, &comments, &mut raw);
+    rule_print_facade(rel, &toks, &mut raw);
+    let suppressed = |f: &Finding| {
+        allows
+            .iter()
+            .any(|a| a.rule == f.rule && (a.line == f.line || a.line + 1 == f.line))
+    };
+    let mut out: Vec<Finding> = raw.into_iter().filter(|f| !suppressed(f)).collect();
+    // The escape hatch itself is checked: unknown rule ids and missing
+    // justifications are findings (never suppressible).
+    for a in &allows {
+        if !RULES.contains(&a.rule.as_str()) {
+            out.push(Finding {
+                path: rel.to_string(),
+                line: a.line,
+                rule: "lint-allow",
+                msg: format!(
+                    "lint:allow names unknown rule `{}` (known: {})",
+                    a.rule,
+                    RULES.join(", ")
+                ),
+            });
+        } else if a.reason.is_empty() {
+            out.push(Finding {
+                path: rel.to_string(),
+                line: a.line,
+                rule: "lint-allow",
+                msg: format!(
+                    "lint:allow({}) requires a justification after the closing \
+                     parenthesis",
+                    a.rule
+                ),
+            });
+        }
+    }
+    out.sort();
+    out
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map_or(false, |e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole tree under `root`. Returns the number of files scanned
+/// and the (sorted) findings.
+pub fn lint_tree(root: &Path) -> io::Result<(usize, Vec<Finding>)> {
+    let inv_path = root.join(INVENTORY_PATH);
+    let inv_src = fs::read_to_string(&inv_path).map_err(|e| {
+        io::Error::new(
+            e.kind(),
+            format!("cannot read the metric/span inventory {}: {e}", inv_path.display()),
+        )
+    })?;
+    let inv = Inventory::from_source(&inv_src);
+    let mut files = Vec::new();
+    for d in SCAN_DIRS {
+        collect_rs(&root.join(d), &mut files)?;
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = fs::read_to_string(f)?;
+        findings.extend(lint_file(&rel, &src, &inv));
+    }
+    findings.sort();
+    Ok((files.len(), findings))
+}

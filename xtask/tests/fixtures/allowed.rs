@@ -1,0 +1,7 @@
+// Violation suppressed by the escape hatch, with a justification.
+pub fn watchdog() {
+    // lint:allow(pool-threading) watchdog must outlive the pool to observe its shutdown
+    std::thread::spawn(|| loop_forever());
+}
+
+fn loop_forever() {}

@@ -1,0 +1,6 @@
+// Seeded violation: reads the ambient clock directly instead of going
+// through util::timer::Stopwatch.
+pub fn time_a_solve() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,10 @@
+// Seeded violation: a HashMap in a determinism-sensitive module.
+use std::collections::HashMap;
+
+pub fn accumulate(xs: &[(usize, f64)]) -> Vec<(usize, f64)> {
+    let mut m = HashMap::new();
+    for &(k, v) in xs {
+        *m.entry(k).or_insert(0.0) += v;
+    }
+    m.into_iter().collect()
+}

@@ -1,0 +1,5 @@
+// Seeded violation: a typo'd metric name ("bulids") that is not in the
+// obs::names inventory — exactly the silent stream-split the rule kills.
+pub fn count_build() {
+    crate::obs::metrics::counter_add("screen.index.bulids", 1);
+}

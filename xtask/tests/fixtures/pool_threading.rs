@@ -1,0 +1,8 @@
+// Seeded violation: spawns a raw OS thread instead of using util::pool.
+pub fn drain_in_background() {
+    std::thread::spawn(|| {
+        do_work();
+    });
+}
+
+fn do_work() {}

@@ -1,0 +1,4 @@
+// Seeded violation: library code writing to stdout directly.
+pub fn announce(p: usize) {
+    println!("screening {p} columns");
+}

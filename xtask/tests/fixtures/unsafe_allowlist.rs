@@ -1,0 +1,5 @@
+// Seeded violation: unsafe outside the allowlisted files (and, when the
+// pretend path IS allowlisted, unsafe with no SAFETY comment).
+pub fn read_raw(p: *const u8) -> u8 {
+    unsafe { *p }
+}

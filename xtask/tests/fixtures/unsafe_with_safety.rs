@@ -1,0 +1,7 @@
+// Clean when linted under an allowlisted path: the unsafe block carries an
+// adjacent SAFETY justification.
+pub fn read_raw(p: *const u8) -> u8 {
+    // SAFETY: callers guarantee `p` is non-null, aligned, and points to a
+    // live byte for the duration of the call.
+    unsafe { *p }
+}

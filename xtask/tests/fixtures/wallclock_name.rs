@@ -1,0 +1,5 @@
+// Seeded violation: records a stopwatch reading under a name that does not
+// end in `_secs`, so determinism checks would not know to exclude it.
+pub fn report(sw: &crate::util::timer::Stopwatch) {
+    crate::obs::metrics::gauge_set("serve.throughput_rps", sw.elapsed_secs());
+}

