@@ -1,0 +1,85 @@
+//! Fleet boot: build a ScreenIndex once, persist it as an artifact, and
+//! boot N serving replicas from the file instead of rescreening per
+//! process.
+//!
+//! The builder process pays the one O(p²) scan + sort and writes the
+//! versioned, checksummed artifact (`ScreenIndex::save_to`). Each replica
+//! then opens a [`ScreenSession`] over the artifact via
+//! `ScreenSession::builder().artifact_path(..)` — zero-copy, validated on
+//! load — and serves the same partitions bit-identically. A corrupted
+//! file is also demonstrated: the load fails with a typed
+//! `CovthreshError::Artifact` naming the bad section, never a wrong
+//! partition.
+//!
+//! Run: `cargo run --release --example fleet_boot`
+
+use covthresh::prelude::*;
+use covthresh::util::rng::Xoshiro256;
+
+fn random_cov(p: usize, seed: u64) -> Mat {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let x = Mat::from_fn(2 * p, p, |_, _| rng.gaussian());
+    let mut s = covthresh::linalg::syrk_t(&x);
+    s.scale(1.0 / (2 * p) as f64);
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let p = 400;
+    let replicas = 4;
+    let s = random_cov(p, 11);
+    let max_off = s.max_abs_offdiag();
+    let lambdas = [0.8 * max_off, 0.5 * max_off, 0.2 * max_off];
+
+    let path = std::env::temp_dir().join(format!("covthresh_fleet_{}.cvx", std::process::id()));
+    let path = path.to_str().expect("temp path is valid UTF-8").to_string();
+
+    // Builder process: one scan, one file.
+    let index = ScreenIndex::from_dense(&s);
+    let n_bytes = index.save_to(&path)?;
+    println!(
+        "built p={p} index ({} edges, {} tie groups) → {path} ({n_bytes} bytes)",
+        index.n_edges(),
+        index.distinct_magnitudes().len()
+    );
+
+    // Fresh-index answers: the reference the fleet must reproduce.
+    let reference: Vec<Partition> = lambdas.iter().map(|&l| index.partition_at(l)).collect();
+
+    // Each replica boots from the artifact — no covariance matrix, no
+    // rebuild — and serves the same partitions bit-identically.
+    let backend = NativeBackend::glasso();
+    for r in 0..replicas {
+        let session = ScreenSession::builder().artifact_path(&path).build()?;
+        for (i, &lambda) in lambdas.iter().enumerate() {
+            let part = session.partition_at(lambda);
+            assert!(part.equals(&reference[i]), "replica {r} diverged at λ={lambda}");
+        }
+        let report = session.solve(&backend, &s, lambdas[0])?;
+        println!(
+            "replica {r}: booted from artifact, {} components at λ={:.4}, objective {:.6}",
+            report.global.partition.n_components(),
+            lambdas[0],
+            report.global.objective()
+        );
+    }
+
+    // Corruption is a typed load error, never a wrong partition.
+    let mut bytes = std::fs::read(&path)?;
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    let corrupt = path.clone() + ".corrupt";
+    std::fs::write(&corrupt, &bytes)?;
+    match ScreenSession::builder().artifact_path(&corrupt).build() {
+        Err(CovthreshError::Artifact(ae)) => {
+            println!("corrupted copy rejected as expected: {ae}")
+        }
+        Ok(_) => anyhow::bail!("corrupted artifact must not load"),
+        Err(other) => anyhow::bail!("expected an artifact error, got: {other}"),
+    }
+
+    std::fs::remove_file(&path).ok();
+    std::fs::remove_file(&corrupt).ok();
+    println!("fleet of {replicas} replicas served bit-identical partitions ✓");
+    Ok(())
+}

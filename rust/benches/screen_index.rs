@@ -17,7 +17,7 @@ use covthresh::bench_harness::{bench_auto, fmt_time, BenchStats};
 use covthresh::linalg::Mat;
 use covthresh::screen::grid::uniform_grid_desc;
 use covthresh::screen::index::ScreenIndex;
-use covthresh::screen::threshold_partition;
+use covthresh::screen::{threshold_partition, ArtifactIndex};
 use covthresh::util::json::Json;
 use covthresh::util::rng::Xoshiro256;
 
@@ -80,6 +80,35 @@ fn main() -> anyhow::Result<()> {
         build.median_s / (grid_naive.median_s / 100.0).max(1e-12)
     );
 
+    // 5. artifact: persist once, then measure the fleet-boot path —
+    // loading the validated artifact (zero-copy and materialized) against
+    // rebuilding the index from S.
+    std::fs::create_dir_all("bench_out")?;
+    let artifact_path = "bench_out/screen_index.cvx";
+    let artifact_bytes = index.save_to(artifact_path)?;
+    let art_load = bench_auto("artifact/load_zero_copy", 3.0, || {
+        ArtifactIndex::load(artifact_path).expect("artifact load")
+    });
+    println!("{}", art_load.summary());
+    let art_materialize = bench_auto("artifact/load_materialized", 3.0, || {
+        ScreenIndex::load(artifact_path).expect("artifact load")
+    });
+    println!("{}", art_materialize.summary());
+    // The loaded index must serve the same answers it was saved with.
+    let art = ArtifactIndex::load(artifact_path)?;
+    for &lam in &[grid[0], mid, *grid.last().unwrap()] {
+        assert!(art.partition_at(lam).equals(&index.partition_at(lam)), "λ={lam}");
+        assert_eq!(art.edge_count(lam), index.edge_count(lam), "λ={lam}");
+    }
+    let load_vs_rebuild = build.median_s / art_load.median_s.max(1e-12);
+    let materialize_vs_rebuild = build.median_s / art_materialize.median_s.max(1e-12);
+    println!(
+        "artifact: {artifact_bytes} bytes; boot {} vs rebuild {} — {load_vs_rebuild:.1}x \
+         (materialized: {materialize_vs_rebuild:.1}x)",
+        fmt_time(art_load.median_s),
+        fmt_time(build.median_s)
+    );
+
     let mut out = Json::obj();
     out.set("p", p.into())
         .set("grid_points", grid.len().into())
@@ -92,13 +121,25 @@ fn main() -> anyhow::Result<()> {
         .set("dense_scans_at_build", 1usize.into())
         .set("dense_rescans_per_query", 0usize.into())
         .set("grid100_speedup_vs_naive", speedup.into())
+        .set("artifact_bytes", (artifact_bytes as usize).into())
+        .set("artifact_load_vs_rebuild", load_vs_rebuild.into())
+        .set("artifact_materialize_vs_rebuild", materialize_vs_rebuild.into())
         .set(
             "benches",
             Json::Arr(
-                [&build, &grid_index, &grid_naive, &q_partition, &q_edges, &q_naive]
-                    .iter()
-                    .map(|b: &&BenchStats| b.to_json())
-                    .collect(),
+                [
+                    &build,
+                    &grid_index,
+                    &grid_naive,
+                    &q_partition,
+                    &q_edges,
+                    &q_naive,
+                    &art_load,
+                    &art_materialize,
+                ]
+                .iter()
+                .map(|b: &&BenchStats| b.to_json())
+                .collect(),
             ),
         );
     std::fs::create_dir_all("bench_out")?;

@@ -8,9 +8,22 @@
 pub mod toml_lite;
 
 use crate::coordinator::{CoordinatorConfig, CostModel};
+use crate::error::CovthreshError;
 use crate::solvers::{SolverKind, SolverOptions};
 use anyhow::{bail, Context, Result};
 use toml_lite::TomlDoc;
+
+/// The `[artifact]` table: where a persisted screen-index artifact lives
+/// and how densely the index checkpoints when built fresh.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactConfig {
+    /// Path of the screen-index artifact file (`covthresh index build
+    /// --out`, or the default source for `--artifact`-less serving).
+    pub path: Option<String>,
+    /// Union-find checkpoint cadence for fresh builds (None = the
+    /// index's own heuristic, ~n_groups/32).
+    pub checkpoint_every: Option<usize>,
+}
 
 /// Full run configuration.
 #[derive(Clone, Debug)]
@@ -29,6 +42,8 @@ pub struct RunConfig {
     /// observability: the `[obs]` table (env overlays via
     /// `ObsConfig::with_env` at install time)
     pub obs: crate::obs::ObsConfig,
+    /// persisted screen-index artifact: the `[artifact]` table
+    pub artifact: ArtifactConfig,
 }
 
 impl Default for RunConfig {
@@ -42,13 +57,21 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".to_string(),
             seed: 42,
             obs: crate::obs::ObsConfig::default(),
+            artifact: ArtifactConfig::default(),
         }
     }
 }
 
 impl RunConfig {
-    /// Parse from TOML text, starting from defaults.
-    pub fn from_toml(text: &str) -> Result<RunConfig> {
+    /// Parse from TOML text, starting from defaults. Failures surface as
+    /// [`CovthreshError::Config`] with the offending key in the source
+    /// chain.
+    pub fn from_toml(text: &str) -> std::result::Result<RunConfig, CovthreshError> {
+        RunConfig::from_toml_impl(text)
+            .map_err(|e| CovthreshError::config("invalid run configuration", e))
+    }
+
+    fn from_toml_impl(text: &str) -> Result<RunConfig> {
         let doc = TomlDoc::parse(text)?;
         let mut cfg = RunConfig::default();
 
@@ -145,13 +168,25 @@ impl RunConfig {
                     .with_context(|| format!("unknown obs.log level '{name}'"))?,
             );
         }
+        if let Some(v) = doc.get("artifact", "path") {
+            cfg.artifact.path =
+                Some(v.as_str().context("artifact.path must be a string")?.to_string());
+        }
+        if let Some(v) = doc.get("artifact", "checkpoint_every") {
+            let every = v.as_f64().context("artifact.checkpoint_every must be a number")? as usize;
+            if every == 0 {
+                bail!("artifact.checkpoint_every must be >= 1");
+            }
+            cfg.artifact.checkpoint_every = Some(every);
+        }
         Ok(cfg)
     }
 
     /// Load from a file path.
-    pub fn from_file(path: &str) -> Result<RunConfig> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading config file {path}"))?;
+    pub fn from_file(path: &str) -> std::result::Result<RunConfig, CovthreshError> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            CovthreshError::config(format!("reading config file {path}"), anyhow::Error::new(e))
+        })?;
         RunConfig::from_toml(&text)
     }
 }
@@ -230,5 +265,29 @@ log = "debug"
         assert!(RunConfig::from_toml("[coordinator]\ndensity_floor = 1.5").is_err());
         assert!(RunConfig::from_toml("[runtime]\nbuckets = []").is_err());
         assert!(RunConfig::from_toml("[obs]\nlog = \"loud\"").is_err());
+        assert!(RunConfig::from_toml("[artifact]\ncheckpoint_every = 0").is_err());
+    }
+
+    #[test]
+    fn artifact_table_parses() {
+        let cfg = RunConfig::from_toml("").unwrap();
+        assert!(cfg.artifact.path.is_none());
+        assert!(cfg.artifact.checkpoint_every.is_none());
+        let text = "[artifact]\npath = \"bench_out/idx.cvx\"\ncheckpoint_every = 512\n";
+        let cfg = RunConfig::from_toml(text).unwrap();
+        assert_eq!(cfg.artifact.path.as_deref(), Some("bench_out/idx.cvx"));
+        assert_eq!(cfg.artifact.checkpoint_every, Some(512));
+    }
+
+    #[test]
+    fn config_errors_are_typed_with_cause_chain() {
+        let err = RunConfig::from_toml("[obs]\nlog = \"loud\"").unwrap_err();
+        assert!(matches!(err, CovthreshError::Config { .. }), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("invalid run configuration"), "{msg}");
+        assert!(msg.contains("loud"), "{msg}");
+        let err = RunConfig::from_file("/nonexistent/covthresh.toml").unwrap_err();
+        assert!(matches!(err, CovthreshError::Config { .. }), "{err}");
+        assert!(err.to_string().contains("reading config file"), "{err}");
     }
 }

@@ -47,15 +47,21 @@ pub use partitioner::{
 pub use scheduler::{schedule_blocks, schedule_lpt, BlockMeta, CostModel, Schedule};
 pub use solver_backend::{BlockSolver, NativeBackend};
 
+use crate::error::CovthreshError;
 use crate::graph::Partition;
 use crate::linalg::Mat;
-use crate::screen::index::ScreenIndex;
+use crate::screen::artifact::ArtifactIndex;
+use crate::screen::index::{IndexOps, ScreenIndex};
 use crate::solvers::closed_form::{self, Tier};
 use crate::solvers::WarmStart;
 use crate::util::timer::{PhaseTimings, Stopwatch};
-use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Boundary result alias: every public coordinator entry point returns a
+/// typed [`CovthreshError`]. Internal plumbing (backend SPI, schedulers,
+/// workers) stays on `anyhow` and is wrapped at this layer.
+type Result<T> = std::result::Result<T, CovthreshError>;
 
 /// Coordinator configuration (the simulated distributed fabric).
 #[derive(Clone, Debug)]
@@ -159,42 +165,109 @@ impl ScreenReport {
 /// falls into (all λ between two adjacent |S_ij| magnitudes share one
 /// partition, so the key collapses an interval of λ to one entry).
 ///
+/// The index behind a session is anything implementing [`IndexOps`]: a
+/// freshly built [`ScreenIndex`], or an [`ArtifactIndex`] booted zero-copy
+/// from a persisted artifact file. [`ScreenSession::builder`] is the one
+/// typed entry point covering every source.
+///
 /// Shared-state is interior (`Mutex`/atomics), so one session can serve
 /// concurrent requests behind `&self`.
 pub struct ScreenSession<'a> {
-    index: &'a ScreenIndex,
+    index: IndexHandle<'a>,
     /// MRU-first list of (tie group, partition); tiny, so linear scan wins.
     cache: Mutex<Vec<(usize, Arc<Partition>)>>,
     capacity: usize,
     hits: AtomicUsize,
     misses: AtomicUsize,
+    /// Fabric config used by the [`ScreenSession::solve`] /
+    /// [`ScreenSession::solve_path`] conveniences.
+    config: CoordinatorConfig,
+}
+
+/// How a session holds its index: borrowed from the caller (one index
+/// shared across many sessions/replicas) or owned outright (built or
+/// booted by the [`SessionBuilder`]).
+enum IndexHandle<'a> {
+    Borrowed(&'a dyn IndexOps),
+    Owned(Box<dyn IndexOps>),
+}
+
+impl IndexHandle<'_> {
+    fn get(&self) -> &dyn IndexOps {
+        match self {
+            IndexHandle::Borrowed(ix) => *ix,
+            IndexHandle::Owned(ix) => ix.as_ref(),
+        }
+    }
 }
 
 impl<'a> ScreenSession<'a> {
     /// Default cache: 16 tie groups — covers a typical exploratory λ grid
     /// re-visited out of order.
-    pub fn new(index: &'a ScreenIndex) -> ScreenSession<'a> {
+    pub fn new(index: &'a dyn IndexOps) -> ScreenSession<'a> {
         ScreenSession::with_cache_capacity(index, 16)
     }
 
-    pub fn with_cache_capacity(index: &'a ScreenIndex, capacity: usize) -> ScreenSession<'a> {
+    pub fn with_cache_capacity(index: &'a dyn IndexOps, capacity: usize) -> ScreenSession<'a> {
+        let handle = IndexHandle::Borrowed(index);
+        ScreenSession::from_handle(handle, capacity, CoordinatorConfig::default())
+    }
+
+    /// Start a [`SessionBuilder`] — the typed front door for every
+    /// covariance source (dense S, standardized data matrix, shared
+    /// index, persisted artifact).
+    pub fn builder() -> SessionBuilder<'a> {
+        SessionBuilder::new()
+    }
+
+    fn from_handle(
+        index: IndexHandle<'a>,
+        capacity: usize,
+        config: CoordinatorConfig,
+    ) -> ScreenSession<'a> {
         ScreenSession {
             index,
             cache: Mutex::new(Vec::new()),
             capacity: capacity.max(1),
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
+            config,
         }
     }
 
-    pub fn index(&self) -> &'a ScreenIndex {
-        self.index
+    pub fn index(&self) -> &dyn IndexOps {
+        self.index.get()
+    }
+
+    /// Fabric config the `solve`/`solve_path` conveniences run under.
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.config
+    }
+
+    /// Screened solve at λ through this session (index reads + partition
+    /// LRU), using the session's coordinator config and the given backend.
+    pub fn solve<B: BlockSolver>(&self, backend: &B, s: &Mat, lambda: f64) -> Result<ScreenReport> {
+        Coordinator::new(backend, self.config.clone()).solve_screened_indexed(s, self, lambda)
+    }
+
+    /// λ-grid path solve over this session's index. The grid goes through
+    /// the same [`path::validate_grid`] as [`path::solve_path_with_index`]
+    /// — identical rejection text for identical bad grids.
+    pub fn solve_path<B: BlockSolver>(
+        &self,
+        backend: &B,
+        s: &Mat,
+        lambdas: &[f64],
+        warm_start: bool,
+    ) -> Result<path::PathResult> {
+        let coord = Coordinator::new(backend, self.config.clone());
+        path::solve_path_with_index(&coord, s, self.index.get(), lambdas, warm_start)
     }
 
     /// Partition at λ, served from the LRU when this λ's tie group was
     /// seen before; otherwise a checkpoint replay on the index.
     pub fn partition_at(&self, lambda: f64) -> Arc<Partition> {
-        let key = self.index.tie_group_of(lambda);
+        let key = self.index.get().tie_group_of(lambda);
         {
             let mut cache = self.cache.lock().unwrap();
             if let Some(pos) = cache.iter().position(|(k, _)| *k == key) {
@@ -208,7 +281,7 @@ impl<'a> ScreenSession<'a> {
         }
         // Replay outside the lock: misses on distinct tie groups proceed
         // in parallel (duplicated work on a race, never a wrong answer).
-        let part = Arc::new(self.index.partition_at(lambda));
+        let part = Arc::new(self.index.get().partition_at(lambda));
         let mut cache = self.cache.lock().unwrap();
         if !cache.iter().any(|(k, _)| *k == key) {
             cache.insert(0, (key, part.clone()));
@@ -264,6 +337,163 @@ impl SessionStats {
         } else {
             0.0
         }
+    }
+}
+
+/// The covariance source a [`SessionBuilder`] turns into a session index.
+enum SessionSource<'a> {
+    /// Dense sample covariance — index built by an O(p²) parallel scan.
+    Dense(&'a Mat),
+    /// Standardized n×p data matrix — index built by the streaming Gram
+    /// screen (never materializes S).
+    Standardized(&'a Mat),
+    /// A prebuilt index borrowed from the caller (shared across sessions).
+    Shared(&'a dyn IndexOps),
+    /// A prebuilt index the session takes ownership of.
+    OwnedIndex(ScreenIndex),
+    /// A validated artifact already loaded in memory.
+    Artifact(ArtifactIndex),
+    /// Path to a persisted artifact file, loaded (and fully validated)
+    /// at `build()`.
+    ArtifactPath(String),
+}
+
+/// Builder for a [`ScreenSession`] — one typed entry point for every way
+/// a serving process obtains its screening index:
+///
+/// ```text
+/// ScreenSession::builder().dense(&s).floor(0.1).build()?          // scan S
+/// ScreenSession::builder().standardized(&z).floor(0.2).build()?   // stream X
+/// ScreenSession::builder().index(&shared).build()?                // share one index
+/// ScreenSession::builder().artifact_path("idx.cvx").build()?      // fleet boot
+/// ```
+///
+/// `build()` fails with a typed [`CovthreshError`]: `Screen` when no
+/// source was given, `Artifact` (naming the malformed section) when a
+/// persisted artifact is rejected.
+pub struct SessionBuilder<'a> {
+    source: Option<SessionSource<'a>>,
+    floor: f64,
+    stream_block: usize,
+    checkpoint_every: Option<usize>,
+    cache_capacity: usize,
+    config: CoordinatorConfig,
+}
+
+impl<'a> SessionBuilder<'a> {
+    fn new() -> SessionBuilder<'a> {
+        SessionBuilder {
+            source: None,
+            floor: 0.0,
+            stream_block: 256,
+            checkpoint_every: None,
+            cache_capacity: 16,
+            config: CoordinatorConfig::default(),
+        }
+    }
+
+    /// Source: dense sample covariance S (index built at `build()`).
+    pub fn dense(mut self, s: &'a Mat) -> Self {
+        self.source = Some(SessionSource::Dense(s));
+        self
+    }
+
+    /// Source: standardized n×p data matrix Z — the streaming Gram screen
+    /// builds the index without ever materializing S (example (C) scale).
+    pub fn standardized(mut self, z: &'a Mat) -> Self {
+        self.source = Some(SessionSource::Standardized(z));
+        self
+    }
+
+    /// Source: a prebuilt index borrowed from the caller — one
+    /// [`ScreenIndex`] or [`ArtifactIndex`] shared by many sessions.
+    pub fn index(mut self, index: &'a dyn IndexOps) -> Self {
+        self.source = Some(SessionSource::Shared(index));
+        self
+    }
+
+    /// Source: a prebuilt index the session takes ownership of.
+    pub fn owned_index(mut self, index: ScreenIndex) -> Self {
+        self.source = Some(SessionSource::OwnedIndex(index));
+        self
+    }
+
+    /// Source: an already-loaded artifact (validated at load time).
+    pub fn artifact(mut self, artifact: ArtifactIndex) -> Self {
+        self.source = Some(SessionSource::Artifact(artifact));
+        self
+    }
+
+    /// Source: a persisted artifact file — the fleet-boot path. The file
+    /// is read and fully validated (checksums, semantic invariants,
+    /// sampled-λ self-check) at `build()`.
+    pub fn artifact_path(mut self, path: impl Into<String>) -> Self {
+        self.source = Some(SessionSource::ArtifactPath(path.into()));
+        self
+    }
+
+    /// Magnitude floor for `dense`/`standardized` builds: edges with
+    /// |S_ij| ≤ floor are not indexed (queries below it panic). Default
+    /// 0.0 — the full positive-λ range.
+    pub fn floor(mut self, floor: f64) -> Self {
+        self.floor = floor;
+        self
+    }
+
+    /// Column block size for the `standardized` streaming screen
+    /// (default 256).
+    pub fn stream_block(mut self, block: usize) -> Self {
+        self.stream_block = block.max(1);
+        self
+    }
+
+    /// Union-find checkpoint cadence for `dense`/`standardized` builds
+    /// (default: the index's own heuristic, ~n_groups/32).
+    pub fn checkpoint_every(mut self, every: usize) -> Self {
+        self.checkpoint_every = Some(every.max(1));
+        self
+    }
+
+    /// Partition-LRU capacity in tie groups (default 16).
+    pub fn cache_capacity(mut self, capacity: usize) -> Self {
+        self.cache_capacity = capacity.max(1);
+        self
+    }
+
+    /// Fabric config used by [`ScreenSession::solve`] /
+    /// [`ScreenSession::solve_path`] (default [`CoordinatorConfig::default`]).
+    pub fn coordinator(mut self, config: CoordinatorConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn build(self) -> Result<ScreenSession<'a>> {
+        let source = self.source.ok_or_else(|| {
+            CovthreshError::screen(
+                "ScreenSession::builder(): no covariance source — call \
+                 dense()/standardized()/index()/artifact()/artifact_path() first",
+            )
+        })?;
+        let handle = match source {
+            SessionSource::Dense(s) => IndexHandle::Owned(Box::new(
+                ScreenIndex::from_dense_with_options(s, self.floor, self.checkpoint_every),
+            )),
+            SessionSource::Standardized(z) => {
+                IndexHandle::Owned(Box::new(ScreenIndex::from_standardized_with_options(
+                    z,
+                    self.floor,
+                    self.stream_block,
+                    self.checkpoint_every,
+                )))
+            }
+            SessionSource::Shared(ix) => IndexHandle::Borrowed(ix),
+            SessionSource::OwnedIndex(ix) => IndexHandle::Owned(Box::new(ix)),
+            SessionSource::Artifact(art) => IndexHandle::Owned(Box::new(art)),
+            SessionSource::ArtifactPath(path) => {
+                IndexHandle::Owned(Box::new(ArtifactIndex::load(&path)?))
+            }
+        };
+        Ok(ScreenSession::from_handle(handle, self.cache_capacity, self.config))
     }
 }
 
@@ -338,19 +568,21 @@ impl<B: BlockSolver> Coordinator<B> {
         lambda: f64,
         warm: &[Option<WarmStart>],
     ) -> Result<ScreenReport> {
-        ensure!(
-            s.rows() == session.index().p(),
-            "session index built for p={}, request has p={}",
-            session.index().p(),
-            s.rows()
-        );
+        if s.rows() != session.index().p() {
+            return Err(CovthreshError::screen(format!(
+                "session index built for p={}, request has p={}",
+                session.index().p(),
+                s.rows()
+            )));
+        }
         // A request below the index floor must be a clean serving error,
         // not the index's internal panic.
-        ensure!(
-            lambda >= session.index().floor(),
-            "request λ={lambda} below the session index floor {}",
-            session.index().floor()
-        );
+        if !(lambda >= session.index().floor()) {
+            return Err(CovthreshError::screen(format!(
+                "request λ={lambda} below the session index floor {}",
+                session.index().floor()
+            )));
+        }
         let _root = crate::span!("solve_screened_indexed", {"p": s.rows(), "lambda": lambda});
         let mut timings = PhaseTimings::new();
 
@@ -418,10 +650,12 @@ impl<B: BlockSolver> Coordinator<B> {
                     }
                 })
                 .collect();
-            schedule_blocks(&metas, self.config.n_machines, capacity, self.config.cost_model)?
+            schedule_blocks(&metas, self.config.n_machines, capacity, self.config.cost_model)
+                .map_err(|e| CovthreshError::solver("scheduling failed", e))?
         } else {
             let sizes: Vec<usize> = parts.subproblems.iter().map(|sp| sp.size()).collect();
-            schedule_lpt(&sizes, self.config.n_machines, capacity, self.config.cost_model)?
+            schedule_lpt(&sizes, self.config.n_machines, capacity, self.config.cost_model)
+                .map_err(|e| CovthreshError::solver("scheduling failed", e))?
         };
         // Per-unit placement telemetry: how the LPT packer shaped the
         // dispatch (all deterministic — schedule depends only on inputs).
@@ -447,7 +681,8 @@ impl<B: BlockSolver> Coordinator<B> {
             lambda,
             self.config.parallel,
             self.config.tiered,
-        )?;
+        )
+        .map_err(|e| CovthreshError::solver("block solve failed", e))?;
         drop(sp);
         timings.add("solve", sw.elapsed_secs());
 
@@ -489,7 +724,10 @@ impl<B: BlockSolver> Coordinator<B> {
     /// Baseline: solve the full p×p problem with no screening.
     pub fn solve_unscreened(&self, s: &Mat, lambda: f64) -> Result<(crate::solvers::Solution, f64)> {
         let sw = Stopwatch::start();
-        let sol = self.backend.solve_block(s, lambda, None)?;
+        let sol = self
+            .backend
+            .solve_block(s, lambda, None)
+            .map_err(|e| CovthreshError::solver("unscreened solve failed", e))?;
         Ok((sol, sw.elapsed_secs()))
     }
 }
@@ -687,6 +925,42 @@ mod tests {
         // closed-form is exact: objective can only be ≤ the iterative one
         // (slack covers the iterative solver's own objective evaluation)
         assert!(tiered.global.objective() <= legacy.global.objective() + 1e-6);
+    }
+
+    #[test]
+    fn builder_covers_sources_and_requires_one() {
+        let inst = block_instance(2, 5, 3);
+        let err = ScreenSession::builder().build().unwrap_err();
+        assert!(matches!(err, CovthreshError::Screen { .. }), "{err}");
+        assert!(err.to_string().contains("no covariance source"), "{err}");
+
+        let built = ScreenSession::builder().dense(&inst.s).cache_capacity(4).build().unwrap();
+        let index = ScreenIndex::from_dense(&inst.s);
+        let shared = ScreenSession::builder().index(&index).build().unwrap();
+        let owned = ScreenSession::builder()
+            .owned_index(ScreenIndex::from_dense(&inst.s))
+            .build()
+            .unwrap();
+        for lambda in [0.9, 0.5, 0.2] {
+            let a = built.partition_at(lambda);
+            assert!(a.equals(&shared.partition_at(lambda)), "λ={lambda}");
+            assert!(a.equals(&owned.partition_at(lambda)), "λ={lambda}");
+        }
+    }
+
+    #[test]
+    fn session_solve_convenience_matches_coordinator() {
+        let inst = block_instance(3, 8, 42);
+        let session = ScreenSession::builder().dense(&inst.s).build().unwrap();
+        let backend = NativeBackend::glasso();
+        let a = session.solve(&backend, &inst.s, 0.9).unwrap();
+        let b = Coordinator::new(NativeBackend::glasso(), CoordinatorConfig::default())
+            .solve_screened(&inst.s, 0.9)
+            .unwrap();
+        assert!(a.global.partition.equals(&b.global.partition));
+        assert_eq!(a.n_edges, b.n_edges);
+        let diff = a.global.theta_dense().max_abs_diff(&b.global.theta_dense());
+        assert!(diff < 1e-12, "diff={diff}");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 
 use crate::graph::Partition;
 use crate::linalg::Mat;
-use crate::screen::index::ScreenIndex;
+use crate::screen::index::IndexOps;
 use crate::screen::threshold_partition;
 
 /// One independent sub-problem: global indices + the S block on them.
@@ -71,9 +71,12 @@ pub fn partition_problem(s: &Mat, lambda: f64) -> Partitioned {
     partition_with(s, partition)
 }
 
-/// Slice S at λ using a prebuilt screening index: the partition comes from
+/// Slice S at λ using a prebuilt screening index (fresh [`ScreenIndex`]
+/// or loaded [`crate::screen::ArtifactIndex`]): the partition comes from
 /// a checkpoint replay, never an O(p²) rescan of S.
-pub fn partition_indexed(s: &Mat, index: &ScreenIndex, lambda: f64) -> Partitioned {
+///
+/// [`ScreenIndex`]: crate::screen::ScreenIndex
+pub fn partition_indexed(s: &Mat, index: &dyn IndexOps, lambda: f64) -> Partitioned {
     assert_eq!(s.rows(), index.p(), "index built for a different S");
     partition_with(s, index.partition_at(lambda))
 }
@@ -115,6 +118,7 @@ fn split_blocks(s: &Mat, partition: &Partition) -> (Vec<SubProblem>, Vec<(usize,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::screen::index::ScreenIndex;
 
     fn demo_s() -> Mat {
         let mut s = Mat::eye(5);

@@ -14,11 +14,16 @@
 
 use super::solver_backend::BlockSolver;
 use super::{partition_with, Coordinator, ScreenReport};
+use crate::error::CovthreshError;
 use crate::linalg::Mat;
-use crate::screen::index::ScreenIndex;
+use crate::screen::index::{IndexOps, ScreenIndex};
 use crate::solvers::WarmStart;
 use crate::util::timer::Stopwatch;
-use anyhow::{ensure, Result};
+
+/// Boundary result alias — path entry points return typed
+/// [`CovthreshError`]s (`Grid` for λ-grid misuse, `Screen` for
+/// index/request mismatches, `Solver` bubbling up from the coordinator).
+type Result<T> = std::result::Result<T, CovthreshError>;
 
 /// One grid point's outcome.
 #[derive(Clone, Debug)]
@@ -63,49 +68,64 @@ pub fn solve_path<B: BlockSolver>(
     solve_path_with_index(coord, s, &index, lambdas, warm_start)
 }
 
-/// Shared λ-grid validation for both path entry points: non-empty,
-/// strictly descending, no repeated values. Guarantees the descriptive
-/// error for an empty grid before any `lambdas.last().unwrap()` runs.
-fn validate_grid(lambdas: &[f64]) -> Result<()> {
-    ensure!(!lambdas.is_empty(), "empty lambda grid");
+/// Shared λ-grid validation for every path entry point — [`solve_path`],
+/// [`solve_path_with_index`], and [`super::ScreenSession::solve_path`] all
+/// route through this one function, so the same bad grid produces the
+/// same [`CovthreshError::Grid`] everywhere. Checks: non-empty, strictly
+/// descending, no repeated values. Guarantees the descriptive error for
+/// an empty grid before any `lambdas.last().unwrap()` runs.
+pub fn validate_grid(lambdas: &[f64]) -> Result<()> {
+    if lambdas.is_empty() {
+        return Err(CovthreshError::grid("empty lambda grid"));
+    }
     for (i, w) in lambdas.windows(2).enumerate() {
-        ensure!(
-            w[0] != w[1],
-            "lambda grid has a repeated value: λ[{i}] = λ[{}] = {} — dedupe the grid \
-             (equal λ re-solve the identical problem)",
-            i + 1,
-            w[0]
-        );
-        ensure!(
-            w[0] > w[1],
-            "lambda grid must be strictly descending: λ[{i}] = {} < λ[{}] = {}",
-            w[0],
-            i + 1,
-            w[1]
-        );
+        if w[0] == w[1] {
+            return Err(CovthreshError::grid(format!(
+                "lambda grid has a repeated value: λ[{i}] = λ[{}] = {} — dedupe the grid \
+                 (equal λ re-solve the identical problem)",
+                i + 1,
+                w[0]
+            )));
+        }
+        if !(w[0] > w[1]) {
+            return Err(CovthreshError::grid(format!(
+                "lambda grid must be strictly descending: λ[{i}] = {} < λ[{}] = {}",
+                w[0],
+                i + 1,
+                w[1]
+            )));
+        }
     }
     Ok(())
 }
 
 /// [`solve_path`] over a prebuilt index — the serving path when the same S
 /// takes several grids: the O(p²) screen and the edge sort are paid once
-/// at index build, never per path.
+/// at index build, never per path. Accepts anything implementing
+/// [`IndexOps`] — a fresh [`ScreenIndex`] or a loaded
+/// [`crate::screen::ArtifactIndex`].
 pub fn solve_path_with_index<B: BlockSolver>(
     coord: &Coordinator<B>,
     s: &Mat,
-    index: &ScreenIndex,
+    index: &dyn IndexOps,
     lambdas: &[f64],
     warm_start: bool,
 ) -> Result<PathResult> {
     validate_grid(lambdas)?;
     let p = s.rows();
-    ensure!(index.p() == p, "index built for p={}, S has p={p}", index.p());
-    ensure!(
-        *lambdas.last().unwrap() >= index.floor(),
-        "grid floor {} below index floor {}",
-        lambdas.last().unwrap(),
-        index.floor()
-    );
+    if index.p() != p {
+        return Err(CovthreshError::screen(format!(
+            "index built for p={}, S has p={p}",
+            index.p()
+        )));
+    }
+    if !(*lambdas.last().unwrap() >= index.floor()) {
+        return Err(CovthreshError::screen(format!(
+            "grid floor {} below index floor {}",
+            lambdas.last().unwrap(),
+            index.floor()
+        )));
+    }
 
     let mut sweep = index.sweep();
 
@@ -121,11 +141,12 @@ pub fn solve_path_with_index<B: BlockSolver>(
         // Theorem 2 live check: the previous (larger-λ) partition must
         // refine the current one.
         if let Some(prev_report) = &prev {
-            ensure!(
-                prev_report.global.partition.is_refinement_of(&partition),
-                "Theorem-2 nesting violated between λ={} and λ={lambda}",
-                prev_report.global.lambda
-            );
+            if !prev_report.global.partition.is_refinement_of(&partition) {
+                return Err(CovthreshError::screen(format!(
+                    "Theorem-2 nesting violated between λ={} and λ={lambda}",
+                    prev_report.global.lambda
+                )));
+            }
         }
 
         let parts = partition_with(s, partition);
@@ -313,6 +334,30 @@ mod tests {
         let c = coord();
         assert!(solve_path(&c, &inst.s, &[0.5, 0.9], true).is_err());
         assert!(solve_path(&c, &inst.s, &[], true).is_err());
+    }
+
+    #[test]
+    fn session_path_and_indexed_path_share_grid_validation() {
+        use crate::coordinator::ScreenSession;
+        let inst = block_instance(2, 4, 2);
+        let c = coord();
+        let index = ScreenIndex::from_dense(&inst.s);
+        let session = ScreenSession::new(&index);
+        let backend = NativeBackend::glasso();
+        // Every malformed grid must be rejected with the SAME typed error
+        // and the SAME text by both entry points (regression: the session
+        // path used to carry its own copy of the validation).
+        let bad_grids: [&[f64]; 3] = [&[], &[1.0, 0.9, 0.9, 0.8], &[1.0, 0.7, 0.8]];
+        for grid in bad_grids {
+            let via_session = session.solve_path(&backend, &inst.s, grid, true).unwrap_err();
+            let via_index = solve_path_with_index(&c, &inst.s, &index, grid, true).unwrap_err();
+            assert!(matches!(via_session, CovthreshError::Grid { .. }), "{via_session}");
+            assert_eq!(via_session.to_string(), via_index.to_string());
+            assert_eq!(via_index.to_string(), validate_grid(grid).unwrap_err().to_string());
+        }
+        // A good grid goes through identically.
+        let ok = session.solve_path(&backend, &inst.s, &[0.95, 0.9], true).unwrap();
+        assert_eq!(ok.points.len(), 2);
     }
 
     #[test]

@@ -29,6 +29,27 @@ pub trait BlockSolver: Send + Sync {
     }
 }
 
+/// References to a block solver are block solvers, so convenience layers
+/// (e.g. `ScreenSession::solve`) can build a `Coordinator<&B>` without
+/// taking ownership of the caller's backend.
+impl<B: BlockSolver + ?Sized> BlockSolver for &B {
+    fn name(&self) -> String {
+        (**self).name()
+    }
+
+    fn solve_block(&self, s: &Mat, lambda: f64, warm: Option<&WarmStart>) -> Result<Solution> {
+        (**self).solve_block(s, lambda, warm)
+    }
+
+    fn max_block(&self) -> Option<usize> {
+        (**self).max_block()
+    }
+
+    fn penalize_diagonal(&self) -> bool {
+        (**self).penalize_diagonal()
+    }
+}
+
 /// In-process Rust solvers (GLASSO / SMACS / ADMM).
 #[derive(Clone, Debug)]
 pub struct NativeBackend {

@@ -1,0 +1,231 @@
+//! Typed errors for the crate's public serving boundary.
+//!
+//! Everything a caller can hit through `coordinator::{solve_screened,
+//! solve_screened_indexed, solve_path*}`, [`crate::coordinator::ScreenSession`],
+//! [`crate::screen::artifact`], and [`crate::config::RunConfig`] surfaces as a
+//! [`CovthreshError`] variant, so serving code can branch on *what* failed
+//! (a malformed request vs. a corrupted artifact vs. a solver fault)
+//! instead of substring-matching strings. `anyhow` remains in use *inside*
+//! the crate (backend SPI, schedulers, internal plumbing) and is carried
+//! here as a `source()` chain, never as the public type.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Which region of a screen-index artifact failed validation.
+///
+/// Every artifact load failure names the section that was malformed, so
+/// operators can tell a truncated download from a corrupted checkpoint
+/// block from a version skew at a glance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactSection {
+    /// File-level problems: unreadable, truncated before the fixed
+    /// header, or trailing garbage after the last section.
+    File,
+    /// The fixed header: magic, format version, endianness marker,
+    /// header checksum, or nonsensical shape fields.
+    Header,
+    /// The weight-sorted edge list section.
+    EdgeList,
+    /// The tie-group summaries section (boundaries + per-group component
+    /// count / max component size).
+    TieGroups,
+    /// The union-find checkpoint snapshots section.
+    Checkpoints,
+    /// The per-component edge counts section.
+    ComponentCounts,
+    /// The post-parse sampled-λ partition self-check.
+    SelfCheck,
+}
+
+impl ArtifactSection {
+    /// Stable human-readable name (used in `Display` and logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            ArtifactSection::File => "file",
+            ArtifactSection::Header => "header",
+            ArtifactSection::EdgeList => "edge-list section",
+            ArtifactSection::TieGroups => "tie-groups section",
+            ArtifactSection::Checkpoints => "checkpoints section",
+            ArtifactSection::ComponentCounts => "component-counts section",
+            ArtifactSection::SelfCheck => "self-check",
+        }
+    }
+}
+
+impl fmt::Display for ArtifactSection {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A screen-index artifact failed to save, load, or validate.
+///
+/// Carries the [`ArtifactSection`] that failed; loads never serve a
+/// partially validated artifact — any malformed section rejects the
+/// whole file.
+#[derive(Debug)]
+pub struct ArtifactError {
+    /// The artifact region that failed.
+    pub section: ArtifactSection,
+    /// What was wrong with it.
+    pub message: String,
+    source: Option<std::io::Error>,
+}
+
+impl ArtifactError {
+    pub fn new(section: ArtifactSection, message: impl Into<String>) -> ArtifactError {
+        ArtifactError { section, message: message.into(), source: None }
+    }
+
+    pub fn io(
+        section: ArtifactSection,
+        message: impl Into<String>,
+        source: std::io::Error,
+    ) -> ArtifactError {
+        ArtifactError { section, message: message.into(), source: Some(source) }
+    }
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "screen-index artifact {}: {}", self.section, self.message)?;
+        if let Some(src) = &self.source {
+            write!(f, ": {src}")?;
+        }
+        Ok(())
+    }
+}
+
+impl StdError for ArtifactError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_ref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+/// The crate's public error type.
+///
+/// `Display` prints the boundary message followed by the immediate cause
+/// (when one exists); the full chain stays reachable through
+/// [`StdError::source`]. Converts into `anyhow::Error` with `?` at call
+/// sites that still aggregate errors loosely (CLI, examples, benches).
+#[derive(Debug)]
+pub enum CovthreshError {
+    /// A screening request the index/session cannot serve (dimension
+    /// mismatch, λ below the build floor, Theorem-2 violation, missing
+    /// builder inputs).
+    Screen { message: String },
+    /// A persisted screen-index artifact was rejected (see
+    /// [`ArtifactError::section`] for the failing region).
+    Artifact(ArtifactError),
+    /// The solve phase failed (scheduling or a block solver fault).
+    Solver { message: String, source: Option<anyhow::Error> },
+    /// A run configuration could not be loaded or validated.
+    Config { message: String, source: Option<anyhow::Error> },
+    /// A λ grid that is empty, repeats a value, or is not strictly
+    /// descending.
+    Grid { message: String },
+}
+
+impl CovthreshError {
+    pub fn screen(message: impl Into<String>) -> CovthreshError {
+        CovthreshError::Screen { message: message.into() }
+    }
+
+    pub fn grid(message: impl Into<String>) -> CovthreshError {
+        CovthreshError::Grid { message: message.into() }
+    }
+
+    pub fn solver(message: impl Into<String>, source: anyhow::Error) -> CovthreshError {
+        CovthreshError::Solver { message: message.into(), source: Some(source) }
+    }
+
+    pub fn config(message: impl Into<String>, source: anyhow::Error) -> CovthreshError {
+        CovthreshError::Config { message: message.into(), source: Some(source) }
+    }
+}
+
+impl fmt::Display for CovthreshError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CovthreshError::Screen { message } | CovthreshError::Grid { message } => {
+                f.write_str(message)
+            }
+            CovthreshError::Artifact(e) => write!(f, "{e}"),
+            CovthreshError::Solver { message, source }
+            | CovthreshError::Config { message, source } => {
+                f.write_str(message)?;
+                if let Some(src) = source {
+                    // `{:#}` keeps the anyhow context chain visible in one
+                    // line — the information the stringly boundary used to
+                    // carry, now in addition to the typed variant.
+                    write!(f, ": {src:#}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl StdError for CovthreshError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        match self {
+            CovthreshError::Screen { .. } | CovthreshError::Grid { .. } => None,
+            CovthreshError::Artifact(e) => Some(e),
+            CovthreshError::Solver { source, .. } | CovthreshError::Config { source, .. } => {
+                source.as_ref().map(|e| {
+                    let dyn_err: &(dyn StdError + Send + Sync + 'static) = e.as_ref();
+                    dyn_err as &(dyn StdError + 'static)
+                })
+            }
+        }
+    }
+}
+
+impl From<ArtifactError> for CovthreshError {
+    fn from(e: ArtifactError) -> CovthreshError {
+        CovthreshError::Artifact(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_appends_one_source_level() {
+        let e = CovthreshError::solver("scheduling failed", anyhow::anyhow!("no machines"));
+        assert_eq!(e.to_string(), "scheduling failed: no machines");
+        let plain = CovthreshError::screen("bad request");
+        assert_eq!(plain.to_string(), "bad request");
+    }
+
+    #[test]
+    fn source_chain_is_reachable() {
+        let io = std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "short read");
+        let art = ArtifactError::io(ArtifactSection::EdgeList, "truncated", io);
+        let e = CovthreshError::from(art);
+        let msg = e.to_string();
+        assert!(msg.contains("edge-list section"), "{msg}");
+        assert!(msg.contains("short read"), "{msg}");
+        let src = e.source().expect("artifact source");
+        assert!(src.to_string().contains("edge-list"), "{src}");
+        assert!(src.source().expect("io source").to_string().contains("short read"));
+    }
+
+    #[test]
+    fn solver_source_survives_anyhow_context() {
+        let inner = anyhow::anyhow!("component 0 of size 10 exceeds machine capacity 5");
+        let e = CovthreshError::solver("scheduling failed", inner);
+        assert!(e.to_string().contains("capacity"), "{e}");
+        assert!(e.source().unwrap().to_string().contains("capacity"));
+    }
+
+    #[test]
+    fn sections_name_themselves() {
+        assert_eq!(ArtifactSection::Header.to_string(), "header");
+        assert_eq!(ArtifactSection::Checkpoints.to_string(), "checkpoints section");
+        let e = ArtifactError::new(ArtifactSection::Header, "bad magic");
+        assert_eq!(e.to_string(), "screen-index artifact header: bad magic");
+    }
+}

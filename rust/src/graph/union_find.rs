@@ -41,6 +41,41 @@ impl UfSnapshot {
     pub fn n_components(&self) -> usize {
         self.n_components
     }
+
+    /// Size of the largest component at snapshot time.
+    pub fn max_component_size(&self) -> usize {
+        self.max_size as usize
+    }
+
+    /// Raw parent array (union-by-size forest; `parent[v] == v` marks a root).
+    ///
+    /// Exposed for the artifact serializer — snapshot bytes round-trip
+    /// exactly, including the stale `size` entries of non-root vertices.
+    pub fn parents(&self) -> &[u32] {
+        &self.parent
+    }
+
+    /// Raw size array. Only entries at root positions are meaningful; the
+    /// rest are whatever they were when that vertex last stopped being a
+    /// root (preserved as-is so snapshots serialize bit-identically).
+    pub fn sizes(&self) -> &[u32] {
+        &self.size
+    }
+
+    /// Reassemble a snapshot from its raw parts (the artifact loader's
+    /// inverse of [`UfSnapshot::parents`]/[`UfSnapshot::sizes`]). The
+    /// caller is responsible for having validated the forest (bounds,
+    /// acyclicity, aggregate consistency) — this constructor only checks
+    /// the array lengths agree.
+    pub fn from_parts(
+        parent: Vec<u32>,
+        size: Vec<u32>,
+        n_components: usize,
+        max_size: u32,
+    ) -> UfSnapshot {
+        assert_eq!(parent.len(), size.len(), "parent/size length mismatch");
+        UfSnapshot { parent, size, n_components, max_size }
+    }
 }
 
 impl UnionFind {
@@ -270,6 +305,28 @@ mod tests {
         let snap = uf.snapshot();
         assert!(snap.is_empty());
         assert_eq!(UnionFind::from_snapshot(&snap).n_components(), 0);
+    }
+
+    #[test]
+    fn snapshot_parts_roundtrip() {
+        let mut uf = UnionFind::new(6);
+        uf.union(0, 1);
+        uf.union(1, 2);
+        uf.union(4, 5);
+        let snap = uf.snapshot();
+        let rebuilt = UfSnapshot::from_parts(
+            snap.parents().to_vec(),
+            snap.sizes().to_vec(),
+            snap.n_components(),
+            snap.max_component_size() as u32,
+        );
+        assert_eq!(rebuilt.parents(), snap.parents());
+        assert_eq!(rebuilt.sizes(), snap.sizes());
+        assert_eq!(rebuilt.n_components(), snap.n_components());
+        assert_eq!(rebuilt.max_component_size(), snap.max_component_size());
+        let mut a = UnionFind::from_snapshot(&snap);
+        let mut b = UnionFind::from_snapshot(&rebuilt);
+        assert_eq!(a.labels(), b.labels());
     }
 
     #[test]

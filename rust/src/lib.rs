@@ -22,13 +22,24 @@
 //! edges sharing one magnitude (a tie group) activate together as λ drops
 //! below it.
 //!
+//! A built index persists as a versioned, checksummed **artifact**
+//! (`screen::artifact`): `ScreenIndex::save_to` writes it once,
+//! `screen::ArtifactIndex` boots from the file zero-copy and serves the
+//! same `IndexOps` queries bit-identically — the fleet-boot path where N
+//! serving replicas share one screen instead of rescreening per process.
+//! Corrupted, truncated, or version-skewed files fail the load with a
+//! typed [`error::CovthreshError::Artifact`] naming the bad section,
+//! never a wrong partition.
+//!
 //! `coordinator` turns the screen into a scheduling wrapper that splits
 //! one intractable glasso problem into many small independent ones; its
 //! `ScreenSession` (index + tie-group-keyed partition LRU) serves repeated
-//! multi-λ traffic on one S. `solvers` provides the GLASSO/SMACS/ADMM
-//! sub-problem solvers; `runtime` executes AOT-compiled JAX/Pallas
-//! artifacts via PJRT on the hot path (stubbed when the PJRT binding is
-//! not vendored).
+//! multi-λ traffic on one S — `ScreenSession::builder()` is the typed
+//! front door over every covariance source, and [`prelude`] re-exports
+//! the serving surface in one import. `solvers` provides the
+//! GLASSO/SMACS/ADMM sub-problem solvers; `runtime` executes AOT-compiled
+//! JAX/Pallas artifacts via PJRT on the hot path (stubbed when the PJRT
+//! binding is not vendored).
 //!
 //! Execution: all parallel work — tiled L3 kernels (`linalg::blas`),
 //! blocked Cholesky, screen scans, the coordinator's machine fabric —
@@ -54,9 +65,11 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod datasets;
+pub mod error;
 pub mod graph;
 pub mod linalg;
 pub mod obs;
+pub mod prelude;
 pub mod proptest_lite;
 pub mod report;
 pub mod runtime;

@@ -5,6 +5,7 @@
 //!   path     λ-path solve with Theorem-2 nesting + warm starts
 //!   profile  component-size profile across λ (Figure-1 style)
 //!   capacity λ_{p_max} search (§2 consequence 5)
+//!   index    build / inspect / verify persisted screen-index artifacts
 //!   info     artifact registry / configuration inspection
 //!
 //! Examples:
@@ -13,16 +14,20 @@
 //!   covthresh path --k 3 --p1 50 --points 8
 //!   covthresh profile --example a --scale 400 --points 30
 //!   covthresh capacity --example a --scale 400 --pmax 50
+//!   covthresh index build --k 3 --p1 100 --out screen_index.cvx
+//!   covthresh solve --k 3 --p1 100 --artifact screen_index.cvx
 
 use anyhow::{bail, Result};
 use covthresh::cli::Args;
 use covthresh::config::RunConfig;
-use covthresh::coordinator::{path::solve_path, Coordinator, NativeBackend};
+use covthresh::coordinator::{path::solve_path, Coordinator, NativeBackend, ScreenSession};
 use covthresh::datasets::{microarray, synthetic};
+use covthresh::linalg::Mat;
 use covthresh::report::{render_figure1, Table};
 use covthresh::runtime::XlaBackend;
 use covthresh::screen::grid::{figure1_grid, table1_lambdas, uniform_grid_desc};
 use covthresh::screen::profile::{profile_grid, weighted_edges};
+use covthresh::screen::{ArtifactIndex, IndexOps, ScreenIndex};
 use covthresh::solvers::{SolverKind, SolverOptions};
 use covthresh::util::timer::fmt_secs;
 
@@ -67,6 +72,13 @@ fn finish_obs(cfg: &covthresh::obs::ObsConfig) {
 }
 
 fn run(argv: Vec<String>) -> Result<()> {
+    // `index` takes its own action verb (`covthresh index build …`), which
+    // the flag grammar would reject as a stray positional — peel it off
+    // before the general parse.
+    if argv.first().map(String::as_str) == Some("index") {
+        let args = Args::parse(argv.into_iter().skip(1))?;
+        return cmd_index(&args);
+    }
     let args = Args::parse(argv)?;
     match args.subcommand.as_str() {
         "solve" => cmd_solve(&args),
@@ -84,13 +96,18 @@ fn run(argv: Vec<String>) -> Result<()> {
 
 const HELP: &str = "covthresh — exact covariance thresholding for large-scale graphical lasso\n\
 \n\
-USAGE: covthresh <solve|path|profile|capacity|info> [flags]\n\
+USAGE: covthresh <solve|path|profile|capacity|index|info> [flags]\n\
 \n\
 solve:    --k N --p1 N --lambda X [--solver glasso|smacs|admm] [--backend native|xla]\n\
           [--machines N] [--pmax N] [--parallel] [--config FILE] [--seed N] [--no-screen]\n\
-path:     --k N --p1 N [--points N] [--cold]\n\
+          [--artifact FILE]\n\
+path:     --k N --p1 N [--points N] [--cold] [--artifact FILE]\n\
 profile:  --example a|b|c [--scale P] [--points N] [--cap N] [--csv PATH]\n\
 capacity: --example a|b|c [--scale P] --pmax N\n\
+index:    build   (--k N --p1 N | --example a|b|c [--scale P]) --out FILE\n\
+                  [--floor X] [--checkpoint-every N]\n\
+          inspect --file FILE\n\
+          verify  --file FILE (--k N --p1 N | --example a|b|c [--scale P])\n\
 info:     [--artifacts DIR]\n";
 
 fn load_config(args: &Args) -> Result<RunConfig> {
@@ -138,10 +155,24 @@ fn cmd_solve(args: &Args) -> Result<()> {
         cfg.backend
     );
 
+    // With --artifact, the screen phase boots from the persisted index
+    // (validated at load) instead of rescanning S.
+    let session = match args.get("artifact") {
+        Some(file) => {
+            let s = ScreenSession::builder().artifact_path(file).build()?;
+            println!("booted screen index from {file} (p={})", s.index().p());
+            Some(s)
+        }
+        None => None,
+    };
+
     macro_rules! run_with {
         ($backend:expr) => {{
             let coord = Coordinator::new($backend, cfg.coordinator.clone());
-            let report = coord.solve_screened(&inst.s, lambda)?;
+            let report = match &session {
+                Some(sess) => coord.solve_screened_indexed(&inst.s, sess, lambda)?,
+                None => coord.solve_screened(&inst.s, lambda)?,
+            };
             print_report(&report);
             if args.has("no-screen") {
                 let (sol, secs) = coord.solve_unscreened(&inst.s, lambda)?;
@@ -206,11 +237,22 @@ fn cmd_path(args: &Args) -> Result<()> {
     let k = inst.planted.n_components();
     let (lo, hi) = table1_lambdas(p, edges, k).unwrap_or((0.8, 1.0));
     let grid = uniform_grid_desc(hi * 0.999, lo, points);
-    let coord = Coordinator::new(
-        NativeBackend::new(cfg.solver, cfg.solver_opts.clone()),
-        cfg.coordinator.clone(),
-    );
-    let path = solve_path(&coord, &inst.s, &grid, !args.has("cold"))?;
+    let backend = NativeBackend::new(cfg.solver, cfg.solver_opts.clone());
+    let warm = !args.has("cold");
+    let path = match args.get("artifact") {
+        Some(file) => {
+            let session = ScreenSession::builder()
+                .artifact_path(file)
+                .coordinator(cfg.coordinator.clone())
+                .build()?;
+            println!("booted screen index from {file} (p={})", session.index().p());
+            session.solve_path(&backend, &inst.s, &grid, warm)?
+        }
+        None => {
+            let coord = Coordinator::new(backend, cfg.coordinator.clone());
+            solve_path(&coord, &inst.s, &grid, warm)?
+        }
+    };
     let mut table = Table::new(
         "λ-path (Theorem-2 nesting verified at every step)",
         &["lambda", "components", "max_size", "solve(s)", "sweep(s)", "objective"],
@@ -296,6 +338,123 @@ fn cmd_capacity(args: &Args) -> Result<()> {
         part.max_component_size(),
         part.n_isolated()
     );
+    Ok(())
+}
+
+/// The deterministic covariance source shared by `index build` and
+/// `index verify`: the microarray examples behind `--example`, otherwise
+/// the synthetic block instance behind `--k/--p1`. Same flags + same seed
+/// ⇒ the same S, which is what makes `verify`'s byte-compare meaningful.
+fn index_source(args: &Args, cfg: &RunConfig) -> Result<Mat> {
+    if args.get("example").is_some() {
+        let mcfg = example_config(args, cfg)?;
+        println!("generating microarray study p={} n={} …", mcfg.p, mcfg.n);
+        Ok(microarray::generate(&mcfg).s)
+    } else {
+        Ok(make_instance(args, cfg)?.s)
+    }
+}
+
+fn cmd_index(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "build" => cmd_index_build(args),
+        "inspect" => cmd_index_inspect(args),
+        "verify" => cmd_index_verify(args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown index action '{other}' (try `covthresh help`)"),
+    }
+}
+
+fn cmd_index_build(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let s = index_source(args, &cfg)?;
+    let floor = args.get_f64("floor", 0.0)?;
+    let every = match args.get_usize("checkpoint-every", 0)? {
+        0 => cfg.artifact.checkpoint_every,
+        k => Some(k),
+    };
+    let out = match args.get("out").map(str::to_string).or_else(|| cfg.artifact.path.clone()) {
+        Some(path) => path,
+        None => bail!("no output path: pass --out FILE or set [artifact] path in the config"),
+    };
+    let index = ScreenIndex::from_dense_with_options(&s, floor, every);
+    let n_bytes = index.save_to(&out)?;
+    println!(
+        "wrote {out}: p={} edges={} tie-groups={} checkpoints={} floor={} ({n_bytes} bytes)",
+        index.p(),
+        index.n_edges(),
+        index.n_groups(),
+        index.n_checkpoints(),
+        index.floor()
+    );
+    Ok(())
+}
+
+fn cmd_index_inspect(args: &Args) -> Result<()> {
+    let file = match args.get("file") {
+        Some(f) => f,
+        None => bail!("pass --file FILE (the artifact to inspect)"),
+    };
+    let art = ArtifactIndex::load(file)?;
+    println!("{file}: screen-index artifact ({} bytes, validated)", art.n_bytes());
+    println!(
+        "  p={} edges={} tie-groups={} checkpoints={} (every {} activations)",
+        art.p(),
+        art.n_edges(),
+        art.n_groups(),
+        art.n_checkpoints(),
+        art.checkpoint_every()
+    );
+    println!("  floor={} max|S_ij|={:.6}", art.floor(), art.max_magnitude());
+    println!(
+        "  at floor: components={} max-component={}",
+        art.n_components_at(art.floor()),
+        art.max_component_size_at(art.floor())
+    );
+    Ok(())
+}
+
+fn cmd_index_verify(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let file = match args.get("file") {
+        Some(f) => f,
+        None => bail!("pass --file FILE (the artifact to verify)"),
+    };
+    let art = ArtifactIndex::load(file)?;
+    let s = index_source(args, &cfg)?;
+    if s.rows() != art.p() {
+        bail!(
+            "artifact has p={}, regenerated source has p={} — \
+             rerun with the flags/seed used at build time",
+            art.p(),
+            s.rows()
+        );
+    }
+    let every = Some(art.checkpoint_every());
+    let rebuilt = ScreenIndex::from_dense_with_options(&s, art.floor(), every);
+    let fresh = rebuilt.to_artifact_bytes()?;
+    if fresh != art.bytes() {
+        let at = fresh.iter().zip(art.bytes()).position(|(a, b)| a != b);
+        bail!(
+            "artifact diverges from a fresh rebuild: {} vs {} bytes, first mismatch at {:?}",
+            art.bytes().len(),
+            fresh.len(),
+            at
+        );
+    }
+    // Independent of the byte-compare: the loaded index must answer
+    // partition queries identically to the rebuild. Probes are clamped to
+    // the floor — below it both indexes refuse to answer.
+    let (floor, top) = (art.floor(), art.max_magnitude());
+    for lambda in [floor, ((floor + top) / 2.0).max(floor), (top * 1.01).max(floor)] {
+        if !art.partition_at(lambda).equals(&rebuilt.partition_at(lambda)) {
+            bail!("partition mismatch at λ={lambda}");
+        }
+    }
+    println!("{file}: verified — byte-identical to a fresh rebuild, partitions agree");
     Ok(())
 }
 

@@ -35,6 +35,8 @@ pub const SPANS: &[&str] = &[
     "pool.task",
     "schedule",
     "screen",
+    "screen.artifact.load",
+    "screen.artifact.save",
     "screen.index.build",
     "screen.partition_at",
     "solve",
@@ -50,6 +52,8 @@ pub const COUNTERS: &[&str] = &[
     "dispatch.singleton",
     "dispatch.tree",
     "pool.tasks",
+    "screen.artifact.loads",
+    "screen.artifact.saves",
     "screen.index.builds",
     "serve.certified",
     "serve.requests",
@@ -64,6 +68,9 @@ pub const COUNTERS: &[&str] = &[
 pub const GAUGES: &[&str] = &[
     "schedule.modeled_makespan",
     "schedule.modeled_serial",
+    "screen.artifact.bytes",
+    "screen.artifact.load_secs",
+    "screen.artifact.save_secs",
     "serve.ingest_secs",
     "serve.latency_mean_secs",
     "serve.latency_p50_secs",

@@ -1,0 +1,39 @@
+//! Curated one-import serving surface: `use covthresh::prelude::*;`.
+//!
+//! Everything a serving process needs — build or boot an index, open a
+//! [`ScreenSession`], solve at one λ or along a grid, and branch on typed
+//! [`CovthreshError`]s — without spelling out module paths. Internals
+//! (solvers, linalg, graph plumbing) stay behind their modules; the
+//! oracle-only O(p²) rescans in `screen::threshold` are deliberately NOT
+//! re-exported here.
+
+pub use crate::config::{ArtifactConfig, RunConfig};
+pub use crate::coordinator::path::{
+    solve_path, solve_path_with_index, validate_grid, PathPoint, PathResult,
+};
+pub use crate::coordinator::{
+    partition_indexed, BlockSolver, Coordinator, CoordinatorConfig, NativeBackend, ScreenReport,
+    ScreenSession, SessionBuilder, SessionStats,
+};
+pub use crate::error::{ArtifactError, ArtifactSection, CovthreshError};
+pub use crate::graph::Partition;
+pub use crate::linalg::Mat;
+pub use crate::screen::{ArtifactIndex, IndexOps, LambdaSweep, ScreenIndex};
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn prelude_surface_is_usable() {
+        use super::*;
+        let mut s = Mat::eye(4);
+        s.set(0, 1, 0.8);
+        s.set(1, 0, 0.8);
+        let session = ScreenSession::builder().dense(&s).build().unwrap();
+        let backend = NativeBackend::glasso();
+        let report = session.solve(&backend, &s, 0.5).unwrap();
+        assert_eq!(report.global.partition.n_components(), 3);
+        assert!(validate_grid(&[0.9, 0.5]).is_ok());
+        let err: CovthreshError = validate_grid(&[]).unwrap_err();
+        assert!(matches!(err, CovthreshError::Grid { .. }));
+    }
+}

@@ -1,0 +1,1362 @@
+//! Persisted `ScreenIndex` artifacts — build once, boot a fleet from disk.
+//!
+//! The screen is exact at every λ (paper §2), which makes a built index a
+//! *reusable artifact*: one process pays the O(p² log p) build, persists
+//! it, and every serving replica boots by validating the bytes instead of
+//! rescreening. This module defines the format (v1), the writer
+//! ([`ScreenIndex::save_to`] / [`to_bytes`]), a materializing loader
+//! ([`ScreenIndex::load`]), and a zero-copy loader ([`ArtifactIndex`])
+//! that serves every [`IndexOps`] query straight out of the byte buffer.
+//!
+//! # Format v1 (all integers little-endian)
+//!
+//! ```text
+//! fixed header (68 bytes)
+//!   0..8    magic  b"COVTHIDX"
+//!   8..12   u32    format version (= 1)
+//!   12..16  u32    endianness marker 0x1A2B3C4D
+//!   16..64  header payload: u64 p, u64 n_edges, u64 n_groups,
+//!           u64 n_checkpoints, u64 checkpoint_every, f64-bits floor
+//!   64..68  u32    CRC-32 (IEEE) of bytes 16..64
+//! then 4 sections, each:  u32 tag | u64 payload_len | payload | u32 CRC-32
+//!   tag 1  edge list:     n_edges × (u32 i, u32 j, f64-bits w),
+//!          sorted (w desc, i asc, j asc), ties contiguous
+//!   tag 2  tie groups:    (n_groups+1) × u32 group_start,
+//!          n_groups × u32 n_components, n_groups × u32 max_size
+//!          (group weights are not stored — they are the w of the first
+//!          edge of each group, read zero-copy from the edge list)
+//!   tag 3  checkpoints:   n_checkpoints × (u32 groups_applied,
+//!          u32 n_components, u32 max_size, u32 reserved = 0,
+//!          p × u32 parent, p × u32 size)
+//!   tag 4  counts:        u32 n, then n × u32 per-component active-edge
+//!          counts at full activation (component order = canonical labels)
+//! ```
+//!
+//! v1 limits: p and n_edges must fit in u32 (a dense source that large
+//! could not be materialized anyway). Versioning policy: any layout change
+//! bumps the u32 version; loaders reject unknown versions outright.
+//!
+//! # Robustness contract
+//!
+//! A load NEVER serves a wrong partition: every section is CRC-guarded,
+//! every structural invariant (sorted edges, group boundaries, acyclic
+//! checkpoint forests with consistent aggregates) is re-proved from the
+//! bytes, and a sampled-λ self-check replays partitions and compares them
+//! against the stored summaries before the index is handed out. Any
+//! failure is a typed [`CovthreshError::Artifact`] naming the bad section.
+
+use std::path::Path;
+
+use super::index::{IndexOps, ScreenIndex};
+use super::profile::{LambdaSweep, WEdge};
+use crate::error::{ArtifactError, ArtifactSection, CovthreshError};
+use crate::graph::{Partition, UfSnapshot, UnionFind};
+use crate::obs::metrics::{counter_add, gauge_set, hist_record};
+use crate::obs::SpanGuard;
+use crate::util::timer::Stopwatch;
+
+const MAGIC: &[u8; 8] = b"COVTHIDX";
+const FORMAT_VERSION: u32 = 1;
+const ENDIAN_TAG: u32 = 0x1A2B_3C4D;
+/// magic + version + endian marker + 48-byte payload + payload CRC.
+const FIXED_HEADER_LEN: usize = 68;
+/// Per-section framing: u32 tag + u64 payload length.
+const SECTION_OVERHEAD: usize = 12;
+const TAG_EDGES: u32 = 1;
+const TAG_GROUPS: u32 = 2;
+const TAG_CHECKPOINTS: u32 = 3;
+const TAG_COUNTS: u32 = 4;
+const EDGE_STRIDE: usize = 16;
+
+// ---- CRC-32 (IEEE 802.3, poly 0xEDB88320), slice-by-8 -------------------
+
+const CRC_TABLES: [[u32; 256]; 8] = crc_tables();
+
+const fn crc_tables() -> [[u32; 256]; 8] {
+    let mut t = [[0u32; 256]; 8];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[0][i] = c;
+        i += 1;
+    }
+    let mut i = 0;
+    while i < 256 {
+        let mut c = t[0][i];
+        let mut j = 1;
+        while j < 8 {
+            c = t[0][(c & 0xFF) as usize] ^ (c >> 8);
+            t[j][i] = c;
+            j += 1;
+        }
+        i += 1;
+    }
+    t
+}
+
+/// CRC-32 of `data` (slice-by-8: artifact loads are checksum-bound, so
+/// the inner loop folds 8 bytes per step instead of 1).
+pub(crate) fn crc32(data: &[u8]) -> u32 {
+    let mut c = !0u32;
+    let mut chunks = data.chunks_exact(8);
+    for ch in &mut chunks {
+        let lo = u32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]) ^ c;
+        let hi = u32::from_le_bytes([ch[4], ch[5], ch[6], ch[7]]);
+        c = CRC_TABLES[7][(lo & 0xFF) as usize]
+            ^ CRC_TABLES[6][((lo >> 8) & 0xFF) as usize]
+            ^ CRC_TABLES[5][((lo >> 16) & 0xFF) as usize]
+            ^ CRC_TABLES[4][(lo >> 24) as usize]
+            ^ CRC_TABLES[3][(hi & 0xFF) as usize]
+            ^ CRC_TABLES[2][((hi >> 8) & 0xFF) as usize]
+            ^ CRC_TABLES[1][((hi >> 16) & 0xFF) as usize]
+            ^ CRC_TABLES[0][(hi >> 24) as usize];
+    }
+    for &b in chunks.remainder() {
+        c = CRC_TABLES[0][((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---- byte decode helpers -------------------------------------------------
+
+#[inline]
+fn rd_u32(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+}
+
+#[inline]
+fn rd_u64(buf: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(buf[off..off + 8].try_into().unwrap())
+}
+
+#[inline]
+fn rd_f64(buf: &[u8], off: usize) -> f64 {
+    f64::from_bits(rd_u64(buf, off))
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// First index in `0..n` where `pred` flips to false (pred must be a
+/// prefix predicate) — `<[T]>::partition_point` over a decoded view.
+fn partition_point(n: usize, pred: impl Fn(usize) -> bool) -> usize {
+    let (mut lo, mut hi) = (0usize, n);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if pred(mid) {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+fn err(section: ArtifactSection, message: String) -> ArtifactError {
+    ArtifactError::new(section, message)
+}
+
+// ---- writer --------------------------------------------------------------
+
+fn begin_section(buf: &mut Vec<u8>, tag: u32) -> usize {
+    push_u32(buf, tag);
+    push_u64(buf, 0); // length, patched by end_section
+    buf.len()
+}
+
+fn end_section(buf: &mut Vec<u8>, payload_start: usize) {
+    let len = (buf.len() - payload_start) as u64;
+    buf[payload_start - 8..payload_start].copy_from_slice(&len.to_le_bytes());
+    let crc = crc32(&buf[payload_start..]);
+    push_u32(buf, crc);
+}
+
+/// Serialize a built index into the v1 artifact byte layout.
+pub fn to_bytes(index: &ScreenIndex) -> Result<Vec<u8>, CovthreshError> {
+    let p = index.p();
+    let n_edges = index.n_edges();
+    if p > u32::MAX as usize || n_edges >= u32::MAX as usize {
+        return Err(err(
+            ArtifactSection::Header,
+            format!("index too large for format v1 (p={p}, edges={n_edges} must fit in u32)"),
+        )
+        .into());
+    }
+    let starts = index.group_starts();
+    let n_groups = starts.len() - 1;
+    let checkpoints = index.checkpoint_parts();
+    // Per-component counts at full activation, in canonical label order.
+    let full = index.partition_at(index.floor());
+    let counts = index.component_edge_counts(index.floor(), &full);
+
+    let estimate = FIXED_HEADER_LEN
+        + 4 * (SECTION_OVERHEAD + 4)
+        + n_edges * EDGE_STRIDE
+        + 12 * n_groups
+        + 4
+        + checkpoints.len() * (16 + 8 * p)
+        + 4
+        + 4 * counts.len();
+    let mut buf = Vec::with_capacity(estimate);
+
+    buf.extend_from_slice(MAGIC);
+    push_u32(&mut buf, FORMAT_VERSION);
+    push_u32(&mut buf, ENDIAN_TAG);
+    let hdr_start = buf.len();
+    push_u64(&mut buf, p as u64);
+    push_u64(&mut buf, n_edges as u64);
+    push_u64(&mut buf, n_groups as u64);
+    push_u64(&mut buf, checkpoints.len() as u64);
+    push_u64(&mut buf, index.checkpoint_every() as u64);
+    push_u64(&mut buf, index.floor().to_bits());
+    let hdr_crc = crc32(&buf[hdr_start..]);
+    push_u32(&mut buf, hdr_crc);
+
+    let s = begin_section(&mut buf, TAG_EDGES);
+    for e in index.edges() {
+        push_u32(&mut buf, e.i);
+        push_u32(&mut buf, e.j);
+        push_u64(&mut buf, e.w.to_bits());
+    }
+    end_section(&mut buf, s);
+
+    let s = begin_section(&mut buf, TAG_GROUPS);
+    for &g in starts {
+        push_u32(&mut buf, g as u32);
+    }
+    for &n in index.group_component_counts() {
+        push_u32(&mut buf, n as u32);
+    }
+    for &m in index.group_max_sizes() {
+        push_u32(&mut buf, m as u32);
+    }
+    end_section(&mut buf, s);
+
+    let s = begin_section(&mut buf, TAG_CHECKPOINTS);
+    for (groups_applied, snap) in &checkpoints {
+        push_u32(&mut buf, *groups_applied as u32);
+        push_u32(&mut buf, snap.n_components() as u32);
+        push_u32(&mut buf, snap.max_component_size() as u32);
+        push_u32(&mut buf, 0); // reserved
+        for &v in snap.parents() {
+            push_u32(&mut buf, v);
+        }
+        for &v in snap.sizes() {
+            push_u32(&mut buf, v);
+        }
+    }
+    end_section(&mut buf, s);
+
+    let s = begin_section(&mut buf, TAG_COUNTS);
+    push_u32(&mut buf, counts.len() as u32);
+    for &c in &counts {
+        push_u32(&mut buf, c as u32);
+    }
+    end_section(&mut buf, s);
+
+    Ok(buf)
+}
+
+impl ScreenIndex {
+    /// Persist this index as a v1 artifact at `path`. Returns the number
+    /// of bytes written.
+    pub fn save_to(&self, path: impl AsRef<Path>) -> Result<u64, CovthreshError> {
+        let path = path.as_ref();
+        let mut span = SpanGuard::enter("screen.artifact.save");
+        let sw = Stopwatch::start();
+        let bytes = to_bytes(self)?;
+        std::fs::write(path, &bytes).map_err(|e| {
+            ArtifactError::io(ArtifactSection::File, format!("writing {}", path.display()), e)
+        })?;
+        let n_bytes = bytes.len() as u64;
+        counter_add("screen.artifact.saves", 1);
+        gauge_set("screen.artifact.bytes", n_bytes as f64);
+        gauge_set("screen.artifact.save_secs", sw.elapsed_secs());
+        if span.active() {
+            span.arg("p", self.p() as f64).arg("n_bytes", n_bytes as f64);
+        }
+        Ok(n_bytes)
+    }
+
+    /// Load and fully materialize an index from a v1 artifact. Validation
+    /// is identical to [`ArtifactIndex::load`]; the result is an ordinary
+    /// in-memory [`ScreenIndex`], bit-identical to the one that was saved.
+    pub fn load(path: impl AsRef<Path>) -> Result<ScreenIndex, CovthreshError> {
+        let art = ArtifactIndex::load(path)?;
+        Ok(materialize(&art))
+    }
+
+    /// [`ScreenIndex::load`] from an in-memory byte buffer.
+    pub fn from_artifact_bytes(bytes: &[u8]) -> Result<ScreenIndex, CovthreshError> {
+        let art = ArtifactIndex::from_bytes(bytes.to_vec())?;
+        Ok(materialize(&art))
+    }
+
+    /// Serialize into the v1 artifact byte layout (see [`to_bytes`]).
+    pub fn to_artifact_bytes(&self) -> Result<Vec<u8>, CovthreshError> {
+        to_bytes(self)
+    }
+}
+
+/// Rebuild a full [`ScreenIndex`] from a validated artifact.
+fn materialize(art: &ArtifactIndex) -> ScreenIndex {
+    let edges: Vec<WEdge> = (0..art.n_edges).map(|i| art.edge_at(i)).collect();
+    let group_start: Vec<usize> = (0..=art.n_groups).map(|g| art.gs(g)).collect();
+    let group_w: Vec<f64> = (0..art.n_groups).map(|g| art.group_weight(g)).collect();
+    let group_n_components: Vec<usize> = (0..art.n_groups).map(|g| art.ncomp(g)).collect();
+    let group_max_size: Vec<usize> = (0..art.n_groups).map(|g| art.maxsz(g)).collect();
+    let checkpoints: Vec<(usize, UfSnapshot)> = (0..art.n_checkpoints)
+        .map(|c| (art.ck_groups_applied(c), art.ck_snapshot(c)))
+        .collect();
+    ScreenIndex::from_raw_parts(
+        art.p,
+        art.floor,
+        edges,
+        group_start,
+        group_w,
+        group_n_components,
+        group_max_size,
+        checkpoints,
+        art.checkpoint_every,
+    )
+}
+
+// ---- zero-copy loaded index ----------------------------------------------
+
+/// A validated v1 artifact served straight out of its byte buffer.
+///
+/// Construction ([`ArtifactIndex::load`] / [`ArtifactIndex::from_bytes`])
+/// proves the buffer well-formed; afterwards every [`IndexOps`] query
+/// decodes on the fly with the exact [`ScreenIndex`] semantics (same
+/// binary searches, same checkpoint-restore + replay, same panics below
+/// the floor), so partitions are bit-identical to the saved index.
+#[derive(Clone, Debug)]
+pub struct ArtifactIndex {
+    buf: Vec<u8>,
+    p: usize,
+    n_edges: usize,
+    n_groups: usize,
+    n_checkpoints: usize,
+    checkpoint_every: usize,
+    floor: f64,
+    edges_off: usize,
+    starts_off: usize,
+    ncomp_off: usize,
+    maxsz_off: usize,
+    checkpoints_off: usize,
+    counts_off: usize,
+}
+
+impl ArtifactIndex {
+    /// Read and validate an artifact file.
+    pub fn load(path: impl AsRef<Path>) -> Result<ArtifactIndex, CovthreshError> {
+        let path = path.as_ref();
+        let mut span = SpanGuard::enter("screen.artifact.load");
+        let sw = Stopwatch::start();
+        let buf = std::fs::read(path).map_err(|e| {
+            ArtifactError::io(ArtifactSection::File, format!("reading {}", path.display()), e)
+        })?;
+        let art = ArtifactIndex::from_bytes(buf)?;
+        counter_add("screen.artifact.loads", 1);
+        let n_bytes = art.n_bytes();
+        gauge_set("screen.artifact.bytes", n_bytes as f64);
+        gauge_set("screen.artifact.load_secs", sw.elapsed_secs());
+        if span.active() {
+            span.arg("p", art.p as f64).arg("n_edges", art.n_edges as f64);
+        }
+        Ok(art)
+    }
+
+    /// Validate an in-memory artifact buffer and take ownership of it.
+    pub fn from_bytes(buf: Vec<u8>) -> Result<ArtifactIndex, CovthreshError> {
+        let art = parse_layout(buf).map_err(CovthreshError::from)?;
+        art.validate_semantics().map_err(CovthreshError::from)?;
+        art.self_check().map_err(CovthreshError::from)?;
+        Ok(art)
+    }
+
+    /// The raw artifact bytes (exactly what `save_to` wrote).
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Total artifact size in bytes.
+    pub fn n_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    // ---- raw field decode (offsets proven in-bounds at parse time) ------
+
+    #[inline]
+    fn edge_w(&self, idx: usize) -> f64 {
+        rd_f64(&self.buf, self.edges_off + idx * EDGE_STRIDE + 8)
+    }
+
+    #[inline]
+    fn edge_ij(&self, idx: usize) -> (u32, u32) {
+        let off = self.edges_off + idx * EDGE_STRIDE;
+        (rd_u32(&self.buf, off), rd_u32(&self.buf, off + 4))
+    }
+
+    /// The idx-th edge of the weight-descending list.
+    pub fn edge_at(&self, idx: usize) -> WEdge {
+        assert!(idx < self.n_edges, "edge index {idx} out of range ({})", self.n_edges);
+        let (i, j) = self.edge_ij(idx);
+        WEdge { i, j, w: self.edge_w(idx) }
+    }
+
+    #[inline]
+    fn gs(&self, g: usize) -> usize {
+        rd_u32(&self.buf, self.starts_off + g * 4) as usize
+    }
+
+    /// Weight of tie group g = weight of its first edge (not stored
+    /// separately; groups are non-empty by validation).
+    #[inline]
+    fn group_weight(&self, g: usize) -> f64 {
+        self.edge_w(self.gs(g))
+    }
+
+    #[inline]
+    fn ncomp(&self, g: usize) -> usize {
+        rd_u32(&self.buf, self.ncomp_off + g * 4) as usize
+    }
+
+    #[inline]
+    fn maxsz(&self, g: usize) -> usize {
+        rd_u32(&self.buf, self.maxsz_off + g * 4) as usize
+    }
+
+    #[inline]
+    fn ck_stride(&self) -> usize {
+        16 + 8 * self.p
+    }
+
+    #[inline]
+    fn ck_base(&self, c: usize) -> usize {
+        self.checkpoints_off + c * self.ck_stride()
+    }
+
+    fn ck_groups_applied(&self, c: usize) -> usize {
+        rd_u32(&self.buf, self.ck_base(c)) as usize
+    }
+
+    fn ck_snapshot(&self, c: usize) -> UfSnapshot {
+        let base = self.ck_base(c);
+        let parent: Vec<u32> =
+            (0..self.p).map(|v| rd_u32(&self.buf, base + 16 + 4 * v)).collect();
+        let size: Vec<u32> =
+            (0..self.p).map(|v| rd_u32(&self.buf, base + 16 + 4 * self.p + 4 * v)).collect();
+        let n_components = rd_u32(&self.buf, base + 4) as usize;
+        let max_size = rd_u32(&self.buf, base + 8);
+        UfSnapshot::from_parts(parent, size, n_components, max_size)
+    }
+
+    fn stored_count(&self, c: usize) -> usize {
+        rd_u32(&self.buf, self.counts_off + 4 + c * 4) as usize
+    }
+
+    fn stored_count_len(&self) -> usize {
+        rd_u32(&self.buf, self.counts_off) as usize
+    }
+
+    // ---- queries (ScreenIndex semantics verbatim) -----------------------
+
+    fn assert_query(&self, lambda: f64) {
+        assert!(
+            lambda >= self.floor,
+            "query λ={lambda} below the index floor {} — rebuild with a lower floor",
+            self.floor
+        );
+    }
+
+    fn assert_complete_to_zero(&self) {
+        assert!(
+            self.floor <= 0.0,
+            "answer depends on edges below the index floor {} — rebuild with floor ≤ 0",
+            self.floor
+        );
+    }
+
+    /// Number of vertices.
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Build-time floor of the saved index.
+    pub fn floor(&self) -> f64 {
+        self.floor
+    }
+
+    /// Total edges retained.
+    pub fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+
+    /// Number of tie groups.
+    pub fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+
+    /// Largest off-diagonal magnitude (0.0 when no edges survive).
+    pub fn max_magnitude(&self) -> f64 {
+        if self.n_groups == 0 {
+            0.0
+        } else {
+            self.group_weight(0)
+        }
+    }
+
+    /// Number of union-find snapshots held.
+    pub fn n_checkpoints(&self) -> usize {
+        self.n_checkpoints
+    }
+
+    /// Edge-activation spacing between checkpoints of the saved index.
+    pub fn checkpoint_every(&self) -> usize {
+        self.checkpoint_every
+    }
+
+    /// The tie group λ falls into (the per-λ cache key).
+    pub fn tie_group_of(&self, lambda: f64) -> usize {
+        self.assert_query(lambda);
+        partition_point(self.n_groups, |g| self.group_weight(g) > lambda)
+    }
+
+    /// |E(λ)| via binary search over the stored prefix.
+    pub fn edge_count(&self, lambda: f64) -> usize {
+        self.assert_query(lambda);
+        partition_point(self.n_edges, |e| self.edge_w(e) > lambda)
+    }
+
+    /// Component count at λ, from the stored per-group summary.
+    pub fn n_components_at(&self, lambda: f64) -> usize {
+        let m = self.tie_group_of(lambda);
+        if m == 0 {
+            self.p
+        } else {
+            self.ncomp(m - 1)
+        }
+    }
+
+    /// Max component size at λ, from the stored per-group summary.
+    pub fn max_component_size_at(&self, lambda: f64) -> usize {
+        let m = self.tie_group_of(lambda);
+        if m == 0 {
+            usize::from(self.p > 0)
+        } else {
+            self.maxsz(m - 1)
+        }
+    }
+
+    /// Union-find with the first `m` tie groups applied + replay depth.
+    fn replay_to(&self, m: usize) -> (UnionFind, usize) {
+        let ci = partition_point(self.n_checkpoints, |c| self.ck_groups_applied(c) <= m) - 1;
+        let applied = self.ck_groups_applied(ci);
+        let mut uf = UnionFind::from_snapshot(&self.ck_snapshot(ci));
+        let (from, to) = (self.gs(applied), self.gs(m));
+        for idx in from..to {
+            let (i, j) = self.edge_ij(idx);
+            uf.union(i as usize, j as usize);
+        }
+        hist_record("screen.replay_depth", (to - from) as f64);
+        (uf, to - from)
+    }
+
+    /// Vertex partition at an arbitrary λ — checkpoint restore + ≤K-union
+    /// replay, decoded from the buffer. Canonical first-appearance labels,
+    /// bit-identical to the saved [`ScreenIndex::partition_at`].
+    pub fn partition_at(&self, lambda: f64) -> Partition {
+        let mut span = SpanGuard::enter("screen.partition_at");
+        let m = self.tie_group_of(lambda);
+        let (mut uf, depth) = self.replay_to(m);
+        if span.active() {
+            span.arg("tie_group", m as f64).arg("replay_depth", depth as f64);
+        }
+        Partition::from_labels(&uf.labels())
+    }
+
+    /// Per-component active-edge counts at λ (see
+    /// [`ScreenIndex::component_edge_counts`]).
+    pub fn component_edge_counts(&self, lambda: f64, partition: &Partition) -> Vec<usize> {
+        let mut counts = vec![0usize; partition.n_components()];
+        for idx in 0..self.edge_count(lambda) {
+            let (i, _) = self.edge_ij(idx);
+            counts[partition.label_of(i as usize)] += 1;
+        }
+        counts
+    }
+
+    /// Smallest λ with no component above `p_max` (ScreenIndex semantics,
+    /// including the floored-index panic).
+    pub fn lambda_for_capacity(&self, p_max: usize) -> f64 {
+        assert!(p_max >= 1);
+        for g in 0..self.n_groups {
+            if self.maxsz(g) > p_max {
+                return self.group_weight(g);
+            }
+        }
+        self.assert_complete_to_zero();
+        0.0
+    }
+
+    /// Interval [λ_min, λ_max) with exactly k components, if it exists.
+    pub fn lambda_interval_for_k(&self, k: usize) -> Option<(f64, f64)> {
+        let mut upper: Option<f64> = if self.p == k { Some(f64::INFINITY) } else { None };
+        for g in 0..self.n_groups {
+            let n = self.ncomp(g);
+            if n == k && upper.is_none() {
+                upper = Some(self.group_weight(g));
+            }
+            if n < k {
+                return upper.map(|u| (self.group_weight(g), u));
+            }
+        }
+        self.assert_complete_to_zero();
+        upper.map(|u| (0.0, u))
+    }
+
+    /// A fresh descending-λ sweep (materializes the edge list once).
+    pub fn sweep(&self) -> LambdaSweep {
+        let edges: Vec<WEdge> = (0..self.n_edges).map(|i| self.edge_at(i)).collect();
+        LambdaSweep::from_sorted(self.p, edges)
+    }
+}
+
+impl IndexOps for ArtifactIndex {
+    fn p(&self) -> usize {
+        self.p
+    }
+    fn floor(&self) -> f64 {
+        self.floor
+    }
+    fn n_edges(&self) -> usize {
+        self.n_edges
+    }
+    fn n_groups(&self) -> usize {
+        self.n_groups
+    }
+    fn max_magnitude(&self) -> f64 {
+        ArtifactIndex::max_magnitude(self)
+    }
+    fn n_checkpoints(&self) -> usize {
+        self.n_checkpoints
+    }
+    fn checkpoint_every(&self) -> usize {
+        self.checkpoint_every
+    }
+    fn edge_at(&self, idx: usize) -> WEdge {
+        ArtifactIndex::edge_at(self, idx)
+    }
+    fn tie_group_of(&self, lambda: f64) -> usize {
+        ArtifactIndex::tie_group_of(self, lambda)
+    }
+    fn edge_count(&self, lambda: f64) -> usize {
+        ArtifactIndex::edge_count(self, lambda)
+    }
+    fn n_components_at(&self, lambda: f64) -> usize {
+        ArtifactIndex::n_components_at(self, lambda)
+    }
+    fn max_component_size_at(&self, lambda: f64) -> usize {
+        ArtifactIndex::max_component_size_at(self, lambda)
+    }
+    fn partition_at(&self, lambda: f64) -> Partition {
+        ArtifactIndex::partition_at(self, lambda)
+    }
+    fn component_edge_counts(&self, lambda: f64, partition: &Partition) -> Vec<usize> {
+        ArtifactIndex::component_edge_counts(self, lambda, partition)
+    }
+    fn lambda_for_capacity(&self, p_max: usize) -> f64 {
+        ArtifactIndex::lambda_for_capacity(self, p_max)
+    }
+    fn lambda_interval_for_k(&self, k: usize) -> Option<(f64, f64)> {
+        ArtifactIndex::lambda_interval_for_k(self, k)
+    }
+    fn sweep(&self) -> LambdaSweep {
+        ArtifactIndex::sweep(self)
+    }
+}
+
+// ---- structural parse ----------------------------------------------------
+
+/// Walk one section frame: check the tag, the declared length against the
+/// remaining bytes, the expected length (when known up front), and the
+/// payload CRC. Returns the payload offset and advances `off` past the
+/// trailing CRC.
+fn walk_section(
+    buf: &[u8],
+    off: &mut usize,
+    tag: u32,
+    section: ArtifactSection,
+    expected_len: Option<u128>,
+) -> Result<(usize, usize), ArtifactError> {
+    let name = section.name();
+    if buf.len() < *off + SECTION_OVERHEAD {
+        return Err(err(
+            ArtifactSection::File,
+            format!("truncated before the {name} frame ({} bytes left)", buf.len() - *off),
+        ));
+    }
+    let got_tag = rd_u32(buf, *off);
+    if got_tag != tag {
+        return Err(err(
+            section,
+            format!("unexpected section tag {got_tag} (expected {tag} for the {name})"),
+        ));
+    }
+    let len64 = rd_u64(buf, *off + 4);
+    if let Some(expected) = expected_len {
+        if len64 as u128 != expected {
+            return Err(err(
+                section,
+                format!("payload declares {len64} bytes, layout requires {expected}"),
+            ));
+        }
+    }
+    let len = usize::try_from(len64)
+        .map_err(|_| err(section, format!("payload length {len64} does not fit in memory")))?;
+    let payload = *off + SECTION_OVERHEAD;
+    let end = payload
+        .checked_add(len)
+        .and_then(|e| e.checked_add(4))
+        .ok_or_else(|| err(section, format!("payload length {len64} overflows the file")))?;
+    if buf.len() < end {
+        return Err(err(
+            section,
+            format!(
+                "truncated: payload declares {len} bytes but only {} remain",
+                buf.len().saturating_sub(payload)
+            ),
+        ));
+    }
+    let stored = rd_u32(buf, payload + len);
+    let actual = crc32(&buf[payload..payload + len]);
+    if stored != actual {
+        return Err(err(
+            section,
+            format!("checksum mismatch (stored {stored:#010x}, computed {actual:#010x})"),
+        ));
+    }
+    *off = end;
+    Ok((payload, len))
+}
+
+/// Parse the fixed header and the four section frames, producing an
+/// `ArtifactIndex` with every offset proven in-bounds. No semantic
+/// validation yet — `validate_semantics` and `self_check` run next.
+fn parse_layout(buf: Vec<u8>) -> Result<ArtifactIndex, ArtifactError> {
+    if buf.len() < FIXED_HEADER_LEN {
+        return Err(err(
+            ArtifactSection::File,
+            format!(
+                "truncated: {} bytes, the fixed header alone needs {FIXED_HEADER_LEN}",
+                buf.len()
+            ),
+        ));
+    }
+    if &buf[0..8] != MAGIC {
+        return Err(err(
+            ArtifactSection::Header,
+            "bad magic — not a covthresh screen-index artifact".to_string(),
+        ));
+    }
+    let version = rd_u32(&buf, 8);
+    if version != FORMAT_VERSION {
+        return Err(err(
+            ArtifactSection::Header,
+            format!("unsupported format version {version} (this build reads {FORMAT_VERSION})"),
+        ));
+    }
+    let endian = rd_u32(&buf, 12);
+    if endian != ENDIAN_TAG {
+        return Err(err(
+            ArtifactSection::Header,
+            format!(
+                "endianness marker mismatch ({endian:#010x}, expected {ENDIAN_TAG:#010x}) — \
+                 bytes are not the little-endian v1 layout"
+            ),
+        ));
+    }
+    let stored = rd_u32(&buf, 64);
+    let actual = crc32(&buf[16..64]);
+    if stored != actual {
+        return Err(err(
+            ArtifactSection::Header,
+            format!("header checksum mismatch (stored {stored:#010x}, computed {actual:#010x})"),
+        ));
+    }
+
+    let hdr = ArtifactSection::Header;
+    let as_usize = |v: u64, what: &str| -> Result<usize, ArtifactError> {
+        usize::try_from(v).map_err(|_| err(hdr, format!("{what} = {v} does not fit in memory")))
+    };
+    let p = as_usize(rd_u64(&buf, 16), "p")?;
+    let n_edges = as_usize(rd_u64(&buf, 24), "edge count")?;
+    let n_groups = as_usize(rd_u64(&buf, 32), "tie-group count")?;
+    let n_checkpoints = as_usize(rd_u64(&buf, 40), "checkpoint count")?;
+    let checkpoint_every = as_usize(rd_u64(&buf, 48), "checkpoint spacing")?;
+    let floor = rd_f64(&buf, 56);
+
+    if p > u32::MAX as usize {
+        return Err(err(hdr, format!("p = {p} exceeds the v1 limit of u32")));
+    }
+    if n_edges >= u32::MAX as usize {
+        return Err(err(hdr, format!("edge count {n_edges} exceeds the v1 limit of u32")));
+    }
+    let max_edges = (p as u128) * (p.saturating_sub(1) as u128) / 2;
+    if n_edges as u128 > max_edges {
+        return Err(err(
+            hdr,
+            format!("edge count {n_edges} exceeds the {max_edges} possible pairs for p = {p}"),
+        ));
+    }
+    if n_groups > n_edges {
+        return Err(err(hdr, format!("{n_groups} tie groups but only {n_edges} edges")));
+    }
+    if (n_groups == 0) != (n_edges == 0) {
+        return Err(err(
+            hdr,
+            format!("tie-group count {n_groups} inconsistent with edge count {n_edges}"),
+        ));
+    }
+    if n_checkpoints == 0 || n_checkpoints > n_groups + 1 {
+        return Err(err(
+            hdr,
+            format!(
+                "checkpoint count {n_checkpoints} outside 1..={} (one per tie-group boundary \
+                 plus the empty-graph state)",
+                n_groups + 1
+            ),
+        ));
+    }
+    if checkpoint_every == 0 {
+        return Err(err(hdr, "checkpoint spacing must be at least 1".to_string()));
+    }
+    if floor.is_nan() {
+        return Err(err(hdr, "floor is NaN".to_string()));
+    }
+
+    let mut off = FIXED_HEADER_LEN;
+    let (edges_off, _) = walk_section(
+        &buf,
+        &mut off,
+        TAG_EDGES,
+        ArtifactSection::EdgeList,
+        Some(n_edges as u128 * EDGE_STRIDE as u128),
+    )?;
+    let (starts_off, _) = walk_section(
+        &buf,
+        &mut off,
+        TAG_GROUPS,
+        ArtifactSection::TieGroups,
+        Some(12 * n_groups as u128 + 4),
+    )?;
+    let (checkpoints_off, _) = walk_section(
+        &buf,
+        &mut off,
+        TAG_CHECKPOINTS,
+        ArtifactSection::Checkpoints,
+        Some(n_checkpoints as u128 * (16 + 8 * p as u128)),
+    )?;
+    let (counts_off, counts_len) =
+        walk_section(&buf, &mut off, TAG_COUNTS, ArtifactSection::ComponentCounts, None)?;
+    if counts_len < 4 {
+        return Err(err(
+            ArtifactSection::ComponentCounts,
+            format!("payload is {counts_len} bytes, too short for its length prefix"),
+        ));
+    }
+    let n_counts = rd_u32(&buf, counts_off) as usize;
+    if counts_len != 4 + 4 * n_counts {
+        return Err(err(
+            ArtifactSection::ComponentCounts,
+            format!(
+                "payload is {counts_len} bytes, expected {} for {n_counts} components",
+                4 + 4 * n_counts
+            ),
+        ));
+    }
+    if off != buf.len() {
+        return Err(err(
+            ArtifactSection::File,
+            format!("{} trailing bytes after the last section", buf.len() - off),
+        ));
+    }
+
+    Ok(ArtifactIndex {
+        p,
+        n_edges,
+        n_groups,
+        n_checkpoints,
+        checkpoint_every,
+        floor,
+        edges_off,
+        starts_off,
+        ncomp_off: starts_off + 4 * (n_groups + 1),
+        maxsz_off: starts_off + 4 * (n_groups + 1) + 4 * n_groups,
+        checkpoints_off,
+        counts_off,
+        buf,
+    })
+}
+
+// ---- semantic validation -------------------------------------------------
+
+impl ArtifactIndex {
+    /// Re-prove every structural invariant the queries rely on: sorted
+    /// edge list, exact tie-group boundaries, monotone summaries, and
+    /// checkpoint forests that are in-bounds, acyclic, and agree with
+    /// both their own aggregates and the group table. After this passes,
+    /// a decoded query can neither panic on bad offsets nor loop in
+    /// `find`.
+    fn validate_semantics(&self) -> Result<(), ArtifactError> {
+        self.validate_edges_and_groups()?;
+        self.validate_checkpoints()?;
+        self.validate_counts_shape()
+    }
+
+    fn validate_edges_and_groups(&self) -> Result<(), ArtifactError> {
+        let tg = ArtifactSection::TieGroups;
+        let el = ArtifactSection::EdgeList;
+        if self.gs(0) != 0 {
+            return Err(err(tg, format!("group_start[0] is {}, must be 0", self.gs(0))));
+        }
+        if self.gs(self.n_groups) != self.n_edges {
+            return Err(err(
+                tg,
+                format!(
+                    "last group boundary {} must equal the edge count {}",
+                    self.gs(self.n_groups),
+                    self.n_edges
+                ),
+            ));
+        }
+        let mut prev_w = f64::INFINITY;
+        let mut prev_ncomp = self.p;
+        let mut prev_max = usize::from(self.p > 0);
+        for g in 0..self.n_groups {
+            let (start, end) = (self.gs(g), self.gs(g + 1));
+            if end <= start || end > self.n_edges {
+                return Err(err(
+                    tg,
+                    format!("tie group {g} boundaries {start}..{end} not strictly increasing"),
+                ));
+            }
+            let w = self.edge_w(start);
+            if !w.is_finite() {
+                return Err(err(el, format!("edge {start} weight {w} is not finite")));
+            }
+            if w >= prev_w {
+                return Err(err(
+                    el,
+                    format!("tie group {g} weight {w} not strictly below its predecessor {prev_w}"),
+                ));
+            }
+            if w <= self.floor {
+                return Err(err(
+                    el,
+                    format!("edge {start} weight {w} not above the build floor {}", self.floor),
+                ));
+            }
+            let mut prev_ij = (0u32, 0u32);
+            for idx in start..end {
+                let (i, j) = self.edge_ij(idx);
+                if self.edge_w(idx) != w {
+                    return Err(err(
+                        el,
+                        format!("edge {idx} weight differs from its tie group's weight {w}"),
+                    ));
+                }
+                if i >= j || j as usize >= self.p {
+                    return Err(err(
+                        el,
+                        format!("edge {idx} endpoints ({i}, {j}) invalid for p = {}", self.p),
+                    ));
+                }
+                if idx > start && prev_ij >= (i, j) {
+                    return Err(err(
+                        el,
+                        format!("edge {idx} breaks the (i, j) order within tie group {g}"),
+                    ));
+                }
+                prev_ij = (i, j);
+            }
+            let (nc, ms) = (self.ncomp(g), self.maxsz(g));
+            if nc == 0 || nc > prev_ncomp || nc < self.p.saturating_sub(end) {
+                return Err(err(
+                    tg,
+                    format!("tie group {g} component count {nc} breaks monotonicity/bounds"),
+                ));
+            }
+            if ms < prev_max || ms > end + 1 || ms > self.p + 1 - nc {
+                return Err(err(
+                    tg,
+                    format!("tie group {g} max component size {ms} breaks monotonicity/bounds"),
+                ));
+            }
+            prev_w = w;
+            prev_ncomp = nc;
+            prev_max = ms;
+        }
+        Ok(())
+    }
+
+    fn validate_checkpoints(&self) -> Result<(), ArtifactError> {
+        let cs = ArtifactSection::Checkpoints;
+        let p = self.p;
+        let mut prev_applied = 0usize;
+        // Reused across checkpoints: 0 = unvisited, 1 = on current path,
+        // 2 = proven to reach a root.
+        let mut state = vec![0u8; p];
+        let mut root_of = vec![0u32; p];
+        let mut members = vec![0u32; p];
+        let mut stack: Vec<usize> = Vec::new();
+        for c in 0..self.n_checkpoints {
+            let base = self.ck_base(c);
+            let applied = rd_u32(&self.buf, base) as usize;
+            let nc = rd_u32(&self.buf, base + 4) as usize;
+            let ms = rd_u32(&self.buf, base + 8) as usize;
+            if rd_u32(&self.buf, base + 12) != 0 {
+                return Err(err(cs, format!("checkpoint {c} reserved field is nonzero")));
+            }
+            if c == 0 && applied != 0 {
+                return Err(err(
+                    cs,
+                    format!("checkpoint 0 covers {applied} tie groups, must be the empty state"),
+                ));
+            }
+            if c > 0 && applied <= prev_applied {
+                return Err(err(
+                    cs,
+                    format!("checkpoint {c} groups_applied {applied} not strictly ascending"),
+                ));
+            }
+            if applied > self.n_groups {
+                return Err(err(
+                    cs,
+                    format!(
+                        "checkpoint {c} covers {applied} tie groups but only {} exist",
+                        self.n_groups
+                    ),
+                ));
+            }
+            prev_applied = applied;
+
+            state.iter_mut().for_each(|s| *s = 0);
+            members.iter_mut().for_each(|m| *m = 0);
+            let parent = |v: usize| rd_u32(&self.buf, base + 16 + 4 * v) as usize;
+            let mut n_roots = 0usize;
+            for v in 0..p {
+                if parent(v) >= p {
+                    return Err(err(
+                        cs,
+                        format!("checkpoint {c} parent[{v}] = {} out of range", parent(v)),
+                    ));
+                }
+                if c == 0 && parent(v) != v {
+                    return Err(err(
+                        cs,
+                        format!("checkpoint 0 vertex {v} is not its own root (empty state)"),
+                    ));
+                }
+                if parent(v) == v {
+                    n_roots += 1;
+                    root_of[v] = v as u32;
+                    state[v] = 2;
+                }
+            }
+            for v in 0..p {
+                if state[v] == 2 {
+                    continue;
+                }
+                let mut x = v;
+                loop {
+                    if state[x] == 1 {
+                        return Err(err(
+                            cs,
+                            format!("checkpoint {c} parent pointers cycle through vertex {x}"),
+                        ));
+                    }
+                    if state[x] == 2 {
+                        break;
+                    }
+                    state[x] = 1;
+                    stack.push(x);
+                    x = parent(x);
+                }
+                let root = root_of[x];
+                for &y in &stack {
+                    state[y] = 2;
+                    root_of[y] = root;
+                }
+                stack.clear();
+            }
+            let mut actual_max = 0u32;
+            for v in 0..p {
+                let r = root_of[v] as usize;
+                members[r] += 1;
+                actual_max = actual_max.max(members[r]);
+            }
+            if n_roots != nc {
+                return Err(err(
+                    cs,
+                    format!("checkpoint {c} stores {nc} components, forest has {n_roots}"),
+                ));
+            }
+            if actual_max as usize != ms {
+                return Err(err(
+                    cs,
+                    format!(
+                        "checkpoint {c} stores max component size {ms}, forest says {actual_max}"
+                    ),
+                ));
+            }
+            for v in 0..p {
+                if parent(v) == v {
+                    let stored = rd_u32(&self.buf, base + 16 + 4 * p + 4 * v);
+                    if stored != members[v] {
+                        return Err(err(
+                            cs,
+                            format!(
+                                "checkpoint {c} root {v} stores size {stored}, forest says {}",
+                                members[v]
+                            ),
+                        ));
+                    }
+                }
+            }
+            // Tie the checkpoint to the group table it claims to snapshot.
+            let (want_nc, want_ms) = if applied == 0 {
+                (p, usize::from(p > 0))
+            } else {
+                (self.ncomp(applied - 1), self.maxsz(applied - 1))
+            };
+            if nc != want_nc || ms != want_ms {
+                return Err(err(
+                    cs,
+                    format!(
+                        "checkpoint {c} aggregates ({nc}, {ms}) disagree with the tie-group \
+                         summaries ({want_nc}, {want_ms}) at boundary {applied}"
+                    ),
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn validate_counts_shape(&self) -> Result<(), ArtifactError> {
+        let cc = ArtifactSection::ComponentCounts;
+        let expected =
+            if self.n_groups == 0 { self.p } else { self.ncomp(self.n_groups - 1) };
+        let n = self.stored_count_len();
+        if n != expected {
+            return Err(err(
+                cc,
+                format!("stores {n} components, full activation has {expected}"),
+            ));
+        }
+        let sum: u64 = (0..n).map(|c| self.stored_count(c) as u64).sum();
+        if sum != self.n_edges as u64 {
+            return Err(err(
+                cc,
+                format!("counts sum to {sum}, edge list holds {}", self.n_edges),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Sampled-λ partition self-check: replay the partition at a handful
+    /// of tie-group boundaries (including full activation) and require it
+    /// to agree with the stored summaries and, at full activation, the
+    /// stored per-component edge counts. A corrupted-but-CRC-consistent
+    /// summary table cannot survive this and reach serving.
+    fn self_check(&self) -> Result<(), ArtifactError> {
+        let sc = ArtifactSection::SelfCheck;
+        let n = self.n_groups;
+        let mut samples = vec![0, n / 4, n / 2, (3 * n) / 4, n];
+        samples.dedup();
+        for &m in &samples {
+            let (uf, _) = self.replay_to(m);
+            let (want_nc, want_ms) = if m == 0 {
+                (self.p, usize::from(self.p > 0))
+            } else {
+                (self.ncomp(m - 1), self.maxsz(m - 1))
+            };
+            if uf.n_components() != want_nc || uf.max_component_size() != want_ms {
+                return Err(err(
+                    sc,
+                    format!(
+                        "replayed partition at tie group {m} has ({}, {}) components/max-size, \
+                         stored summaries say ({want_nc}, {want_ms})",
+                        uf.n_components(),
+                        uf.max_component_size()
+                    ),
+                ));
+            }
+        }
+        // Full activation: recompute per-component edge counts from the
+        // replayed partition and compare against the stored section.
+        let (mut uf, _) = self.replay_to(n);
+        let labels = uf.labels();
+        let mut counts = vec![0u64; uf.n_components()];
+        for idx in 0..self.n_edges {
+            let (i, _) = self.edge_ij(idx);
+            counts[labels[i as usize]] += 1;
+        }
+        for (c, &count) in counts.iter().enumerate() {
+            if count != self.stored_count(c) as u64 {
+                return Err(err(
+                    sc,
+                    format!(
+                        "component {c} has {count} active edges at full activation, stored \
+                         counts say {}",
+                        self.stored_count(c)
+                    ),
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn demo_s() -> Mat {
+        let mut s = Mat::eye(5);
+        for &(i, j, v) in &[(0, 1, 0.9), (1, 2, 0.7), (3, 4, 0.5), (2, 3, 0.2)] {
+            s.set(i, j, v);
+            s.set(j, i, v);
+        }
+        s
+    }
+
+    fn section_of(e: CovthreshError) -> ArtifactSection {
+        match e {
+            CovthreshError::Artifact(a) => a.section,
+            other => panic!("expected an artifact error, got: {other}"),
+        }
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // Slice-by-8 path must agree with the bytewise definition.
+        let data: Vec<u8> = (0..1000u32).map(|i| (i * 31 % 251) as u8).collect();
+        let mut bytewise = !0u32;
+        for &b in &data {
+            bytewise = CRC_TABLES[0][((bytewise ^ b as u32) & 0xFF) as usize] ^ (bytewise >> 8);
+        }
+        assert_eq!(crc32(&data), !bytewise);
+    }
+
+    #[test]
+    fn roundtrip_bitwise() {
+        let index = ScreenIndex::from_dense(&demo_s());
+        let bytes = to_bytes(&index).unwrap();
+        let art = ArtifactIndex::from_bytes(bytes.clone()).unwrap();
+        assert_eq!(art.p(), index.p());
+        assert_eq!(art.n_edges(), index.n_edges());
+        assert_eq!(art.max_magnitude(), index.max_magnitude());
+        for lam in [0.95, 0.7, 0.45, 0.3, 0.1, 0.0] {
+            assert_eq!(art.partition_at(lam).labels(), index.partition_at(lam).labels());
+            assert_eq!(art.edge_count(lam), index.edge_count(lam));
+            assert_eq!(art.n_components_at(lam), index.n_components_at(lam));
+        }
+        // Materialized load re-serializes to the identical bytes.
+        let loaded = ScreenIndex::from_artifact_bytes(&bytes).unwrap();
+        assert_eq!(to_bytes(&loaded).unwrap(), bytes);
+    }
+
+    #[test]
+    fn roundtrip_edgeless_and_empty() {
+        for p in [0usize, 3] {
+            let index = ScreenIndex::from_dense(&Mat::eye(p));
+            let bytes = to_bytes(&index).unwrap();
+            let art = ArtifactIndex::from_bytes(bytes).unwrap();
+            assert_eq!(art.p(), p);
+            assert_eq!(art.n_edges(), 0);
+            assert_eq!(art.partition_at(0.5).n_components(), p);
+        }
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_header_errors() {
+        let bytes = to_bytes(&ScreenIndex::from_dense(&demo_s())).unwrap();
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(
+            section_of(ArtifactIndex::from_bytes(bad).unwrap_err()),
+            ArtifactSection::Header
+        );
+        let mut skew = bytes.clone();
+        skew[8] = 9; // version 9
+        let e = ArtifactIndex::from_bytes(skew).unwrap_err();
+        assert!(e.to_string().contains("version 9"), "{e}");
+        assert_eq!(section_of(e), ArtifactSection::Header);
+        let mut endian = bytes;
+        endian[12..16].copy_from_slice(&ENDIAN_TAG.to_be_bytes());
+        let e = ArtifactIndex::from_bytes(endian).unwrap_err();
+        assert!(e.to_string().contains("endianness"), "{e}");
+    }
+
+    #[test]
+    fn truncation_always_rejected() {
+        let bytes = to_bytes(&ScreenIndex::from_dense(&demo_s())).unwrap();
+        for cut in 0..bytes.len() {
+            let e = ArtifactIndex::from_bytes(bytes[..cut].to_vec()).unwrap_err();
+            let _ = section_of(e); // typed Artifact error at every prefix
+        }
+        assert!(ArtifactIndex::from_bytes(bytes).is_ok());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = to_bytes(&ScreenIndex::from_dense(&demo_s())).unwrap();
+        bytes.push(0);
+        let e = ArtifactIndex::from_bytes(bytes).unwrap_err();
+        assert_eq!(section_of(e), ArtifactSection::File);
+    }
+
+    #[test]
+    fn corrupted_summary_caught_even_with_fixed_crc() {
+        // Forge a *CRC-consistent* artifact whose tie-group component
+        // counts are all one lower than reality; the structural bounds
+        // accept it, the checkpoint cross-check or sampled replay must
+        // not.
+        let index = ScreenIndex::from_dense(&demo_s());
+        let bytes = to_bytes(&index).unwrap();
+        let art = ArtifactIndex::from_bytes(bytes.clone()).unwrap();
+        let n_groups = art.n_groups();
+        let mut forged = bytes;
+        for g in 0..n_groups {
+            let off = art.ncomp_off + 4 * g;
+            let v = rd_u32(&forged, off) - 1;
+            forged[off..off + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        let payload = art.starts_off;
+        let len = 12 * n_groups + 4;
+        let crc = crc32(&forged[payload..payload + len]);
+        forged[payload + len..payload + len + 4].copy_from_slice(&crc.to_le_bytes());
+        let e = ArtifactIndex::from_bytes(forged).unwrap_err();
+        let section = section_of(e);
+        assert!(
+            section == ArtifactSection::SelfCheck || section == ArtifactSection::Checkpoints,
+            "forged summaries escaped the deep checks: {section:?}"
+        );
+    }
+}

@@ -88,11 +88,35 @@ impl ScreenIndex {
         ScreenIndex::build(s.rows(), edges, floor, None)
     }
 
+    /// `from_dense_above` with an explicit checkpoint spacing — the
+    /// artifact/CLI build path, where the spacing is part of the persisted
+    /// format and must be reproducible.
+    pub fn from_dense_with_options(
+        s: &Mat,
+        floor: f64,
+        checkpoint_every: Option<usize>,
+    ) -> ScreenIndex {
+        let threads = crate::util::pool::max_threads();
+        let edges = super::threshold::par_dense_edges_above(s, floor, threads);
+        ScreenIndex::build(s.rows(), edges, floor, checkpoint_every.map(|k| k.max(1)))
+    }
+
     /// Build from a column-standardized data matrix via the streaming Gram
     /// screen (`screen::stream`) — never materializing the p×p covariance.
     pub fn from_standardized(z: &Mat, floor: f64, block: usize) -> ScreenIndex {
         let edges = super::stream::edges_above_from_standardized(z, floor, block);
         ScreenIndex::build(z.cols(), edges, floor, None)
+    }
+
+    /// `from_standardized` with an explicit checkpoint spacing.
+    pub fn from_standardized_with_options(
+        z: &Mat,
+        floor: f64,
+        block: usize,
+        checkpoint_every: Option<usize>,
+    ) -> ScreenIndex {
+        let edges = super::stream::edges_above_from_standardized(z, floor, block);
+        ScreenIndex::build(z.cols(), edges, floor, checkpoint_every.map(|k| k.max(1)))
     }
 
     /// Build from a pre-extracted edge list (any order). The index trusts
@@ -178,6 +202,56 @@ impl ScreenIndex {
             checkpoints,
             checkpoint_every,
         }
+    }
+
+    /// Reassemble an index from fully validated parts — the artifact
+    /// loader's materialization path (`screen::artifact`). Invariants
+    /// (sorted edges, group boundaries, checkpoint consistency) are the
+    /// caller's responsibility; the loader proves them before calling.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_raw_parts(
+        p: usize,
+        floor: f64,
+        edges: Vec<WEdge>,
+        group_start: Vec<usize>,
+        group_w: Vec<f64>,
+        group_n_components: Vec<usize>,
+        group_max_size: Vec<usize>,
+        checkpoints: Vec<(usize, UfSnapshot)>,
+        checkpoint_every: usize,
+    ) -> ScreenIndex {
+        ScreenIndex {
+            p,
+            floor,
+            edges,
+            group_start,
+            group_w,
+            group_n_components,
+            group_max_size,
+            checkpoints: checkpoints
+                .into_iter()
+                .map(|(groups_applied, snap)| Checkpoint { groups_applied, snap })
+                .collect(),
+            checkpoint_every,
+        }
+    }
+
+    // ---- raw views for the artifact serializer ---------------------------
+
+    pub(crate) fn group_starts(&self) -> &[usize] {
+        &self.group_start
+    }
+
+    pub(crate) fn group_component_counts(&self) -> &[usize] {
+        &self.group_n_components
+    }
+
+    pub(crate) fn group_max_sizes(&self) -> &[usize] {
+        &self.group_max_size
+    }
+
+    pub(crate) fn checkpoint_parts(&self) -> Vec<(usize, &UfSnapshot)> {
+        self.checkpoints.iter().map(|c| (c.groups_applied, &c.snap)).collect()
     }
 
     // ---- shape accessors -------------------------------------------------
@@ -377,6 +451,107 @@ impl ScreenIndex {
             self.assert_query(last);
         }
         profile_with_sweep(self.sweep(), lambdas_desc)
+    }
+}
+
+/// The λ-query surface shared by a freshly built [`ScreenIndex`] and a
+/// zero-copy loaded [`crate::screen::artifact::ArtifactIndex`].
+///
+/// Everything downstream of screening (`ScreenSession`,
+/// `solve_screened_indexed`, `solve_path_with_index`, the partitioner)
+/// talks to this trait, so a serving process can boot from a persisted
+/// artifact or an in-memory build interchangeably. Semantics are the
+/// `ScreenIndex` contract verbatim: strict `|S_ij| > λ` edges, tie groups
+/// activate together, queries panic below the build floor.
+pub trait IndexOps: Send + Sync {
+    /// Number of vertices (columns of the source matrix).
+    fn p(&self) -> usize;
+    /// Build-time floor: queries must use λ ≥ floor.
+    fn floor(&self) -> f64;
+    /// Total edges retained at build time.
+    fn n_edges(&self) -> usize;
+    /// Number of tie groups (distinct retained magnitudes).
+    fn n_groups(&self) -> usize;
+    /// Largest off-diagonal magnitude (0.0 when no edges survive).
+    fn max_magnitude(&self) -> f64;
+    /// Number of union-find snapshots held.
+    fn n_checkpoints(&self) -> usize;
+    /// Edge-activation spacing between checkpoints.
+    fn checkpoint_every(&self) -> usize;
+    /// The idx-th edge of the weight-descending list.
+    fn edge_at(&self, idx: usize) -> WEdge;
+    /// The tie group λ falls into (the per-λ cache key).
+    fn tie_group_of(&self, lambda: f64) -> usize;
+    /// |E(λ)| via binary search.
+    fn edge_count(&self, lambda: f64) -> usize;
+    /// Component count at λ.
+    fn n_components_at(&self, lambda: f64) -> usize;
+    /// Max component size at λ.
+    fn max_component_size_at(&self, lambda: f64) -> usize;
+    /// Vertex partition at an arbitrary λ (canonical labels).
+    fn partition_at(&self, lambda: f64) -> Partition;
+    /// Per-component active-edge counts at λ (see
+    /// [`ScreenIndex::component_edge_counts`]).
+    fn component_edge_counts(&self, lambda: f64, partition: &Partition) -> Vec<usize>;
+    /// Smallest λ with no component above `p_max`.
+    fn lambda_for_capacity(&self, p_max: usize) -> f64;
+    /// Interval [λ_min, λ_max) with exactly k components, if any.
+    fn lambda_interval_for_k(&self, k: usize) -> Option<(f64, f64)>;
+    /// A fresh descending-λ sweep over the sorted edge list.
+    fn sweep(&self) -> LambdaSweep;
+}
+
+impl IndexOps for ScreenIndex {
+    fn p(&self) -> usize {
+        self.p
+    }
+    fn floor(&self) -> f64 {
+        self.floor
+    }
+    fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+    fn n_groups(&self) -> usize {
+        self.group_w.len()
+    }
+    fn max_magnitude(&self) -> f64 {
+        ScreenIndex::max_magnitude(self)
+    }
+    fn n_checkpoints(&self) -> usize {
+        self.checkpoints.len()
+    }
+    fn checkpoint_every(&self) -> usize {
+        self.checkpoint_every
+    }
+    fn edge_at(&self, idx: usize) -> WEdge {
+        self.edges[idx]
+    }
+    fn tie_group_of(&self, lambda: f64) -> usize {
+        ScreenIndex::tie_group_of(self, lambda)
+    }
+    fn edge_count(&self, lambda: f64) -> usize {
+        ScreenIndex::edge_count(self, lambda)
+    }
+    fn n_components_at(&self, lambda: f64) -> usize {
+        ScreenIndex::n_components_at(self, lambda)
+    }
+    fn max_component_size_at(&self, lambda: f64) -> usize {
+        ScreenIndex::max_component_size_at(self, lambda)
+    }
+    fn partition_at(&self, lambda: f64) -> Partition {
+        ScreenIndex::partition_at(self, lambda)
+    }
+    fn component_edge_counts(&self, lambda: f64, partition: &Partition) -> Vec<usize> {
+        ScreenIndex::component_edge_counts(self, lambda, partition)
+    }
+    fn lambda_for_capacity(&self, p_max: usize) -> f64 {
+        ScreenIndex::lambda_for_capacity(self, p_max)
+    }
+    fn lambda_interval_for_k(&self, k: usize) -> Option<(f64, f64)> {
+        ScreenIndex::lambda_interval_for_k(self, k)
+    }
+    fn sweep(&self) -> LambdaSweep {
+        ScreenIndex::sweep(self)
     }
 }
 

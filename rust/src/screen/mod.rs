@@ -3,25 +3,37 @@
 //! `index` — the build-once/query-many `ScreenIndex` every serving path
 //! routes through: sorted edge list + per-tie-group summaries +
 //! checkpointed union-find snapshots, answering edge/partition/capacity
-//! queries at any λ without touching S again; `threshold` — the shared
-//! dense edge scan plus the exact per-λ oracle functions (eq. 4) that the
-//! index is property-tested against; `profile` — the incremental
-//! downward-λ sweep (Figure 1, λ_{p_max}, exact-K intervals), now thin
-//! views over the index; `grid` — the λ-grid policies of Tables 1–3;
-//! `stream` — the O(p·b)-memory parallel Gram screen straight from a
-//! standardized data matrix (example (C) scale), also an index source.
+//! queries at any λ without touching S again; `artifact` — the persisted,
+//! checksummed on-disk form of a built index ([`artifact::ArtifactIndex`]
+//! serves the same [`IndexOps`] queries zero-copy from the validated
+//! bytes, so a fleet boots from one shared file instead of rescreening
+//! per process); `threshold` — the shared dense edge scan plus the exact
+//! per-λ oracle functions (eq. 4) that the index is property-tested
+//! against; `profile` — the incremental downward-λ sweep (Figure 1,
+//! λ_{p_max}, exact-K intervals), now thin views over the index; `grid` —
+//! the λ-grid policies of Tables 1–3; `stream` — the O(p·b)-memory
+//! parallel Gram screen straight from a standardized data matrix
+//! (example (C) scale), also an index source.
 //!
 //! Boundary semantics: edges are strict `|S_ij| > λ`; all edges sharing a
 //! magnitude (a tie group) activate together as λ drops below it.
 
+pub mod artifact;
 pub mod grid;
 pub mod index;
 pub mod profile;
 pub mod stream;
 pub mod threshold;
 
-pub use index::ScreenIndex;
+pub use artifact::ArtifactIndex;
+pub use index::{IndexOps, ScreenIndex};
 pub use profile::{lambda_for_capacity, profile_grid, LambdaSweep, WEdge};
+
+/// Oracle-only re-exports: exact per-λ O(p²) rescans of S, kept as the
+/// reference the index is property-tested against. Serving code should
+/// build a [`ScreenIndex`] once (or boot an [`ArtifactIndex`]) and go
+/// through [`crate::coordinator::ScreenSession::builder`] instead.
+#[doc(hidden)]
 pub use threshold::{
     concentration_partition, threshold_edges, threshold_graph, threshold_partition,
 };

@@ -93,19 +93,29 @@ fn balanced_row_bands(p: usize, k: usize) -> Vec<Range<usize>> {
 
 /// Edge list of the thresholded graph: {(i,j) : |S_ij| > λ, i < j}.
 ///
-/// Oracle path — O(p²) per call. Serving code should use
-/// `ScreenIndex::edges_above` instead.
+/// **Oracle only** — O(p²) rescan of S per call, kept as the reference
+/// the index is property-tested against. Serving code should use
+/// [`super::ScreenIndex::edges_above`] (build once via
+/// [`crate::coordinator::ScreenSession::builder`] or boot a persisted
+/// [`super::ArtifactIndex`]).
 pub fn threshold_edges(s: &Mat, lambda: f64) -> Vec<(u32, u32)> {
     dense_edges_above(s, lambda).into_iter().map(|e| (e.i, e.j)).collect()
 }
 
 /// The thresholded sample covariance graph G(λ).
+///
+/// **Oracle only** — O(p²) per call; serving paths query a built
+/// [`super::ScreenIndex`] / [`super::ArtifactIndex`] instead.
 pub fn threshold_graph(s: &Mat, lambda: f64) -> CsrGraph {
     let edges = threshold_edges(s, lambda);
     CsrGraph::from_edges(s.rows(), &edges)
 }
 
 /// Vertex partition of G(λ) — the left-hand side of Theorem 1.
+///
+/// **Oracle only** — O(p²) per call; the serving equivalent is
+/// [`super::ScreenIndex::partition_at`] behind
+/// [`crate::coordinator::ScreenSession`].
 pub fn threshold_partition(s: &Mat, lambda: f64) -> Partition {
     components_bfs(&threshold_graph(s, lambda))
 }
@@ -121,8 +131,8 @@ pub fn concentration_partition(theta: &Mat, zero_tol: f64) -> Partition {
     components_bfs(&g)
 }
 
-/// Number of edges |E(λ)| — oracle path; `ScreenIndex::edge_count` answers
-/// this with one binary search.
+/// Number of edges |E(λ)| — **oracle only**;
+/// [`super::ScreenIndex::edge_count`] answers this with one binary search.
 pub fn count_edges(s: &Mat, lambda: f64) -> usize {
     dense_edges_above(s, lambda).len()
 }

@@ -1,0 +1,270 @@
+//! Artifact round-trip properties + adversarial corruption corpus.
+//!
+//! Two contracts from the artifact design:
+//!
+//! 1. **Round-trip fidelity** — save → load reproduces the index
+//!    bit-identically: the loaded copy re-serializes to the same bytes and
+//!    serves every query (`partition_at`, counts, capacity search, sweep)
+//!    with the exact answers of the index that was saved. Property-tested
+//!    over random tied covariances, both the zero-copy and the
+//!    materializing loader.
+//! 2. **No wrong partitions, ever** — a corrupted, truncated, or
+//!    version-skewed artifact fails the load with a typed
+//!    `CovthreshError::Artifact` naming the bad section. The corpus here
+//!    is exhaustive at the byte level: every possible truncation length
+//!    and every single-byte flip of a real artifact must be rejected.
+
+use covthresh::datasets::covariance::{sample_correlation, standardize_columns};
+use covthresh::prelude::*;
+use covthresh::proptest_lite::{check_property, CaseResult, PropConfig};
+use covthresh::util::rng::Xoshiro256;
+
+/// A sample correlation with deliberate magnitude ties: half the
+/// off-diagonals are quantized to eighths so tie groups span many edges.
+fn tied_cov(rng: &mut Xoshiro256, p: usize) -> Mat {
+    let x = Mat::from_fn(2 * p + 3, p, |_, _| rng.gaussian());
+    let mut s = sample_correlation(&x);
+    for i in 0..p {
+        for j in (i + 1)..p {
+            if rng.uniform_usize(2) == 0 {
+                let q = (s.get(i, j) * 8.0).round() / 8.0;
+                s.set(i, j, q);
+                s.set(j, i, q);
+            }
+        }
+    }
+    s
+}
+
+fn uniform_f64(rng: &mut Xoshiro256) -> f64 {
+    rng.uniform_usize(1_000_001) as f64 / 1e6
+}
+
+#[test]
+fn artifact_roundtrip_is_bit_identical() {
+    let cfg = PropConfig { cases: 20, base_seed: 0xA27, min_size: 3, max_size: 18 };
+    check_property("artifact-roundtrip", &cfg, |_, size, rng| {
+        let s = tied_cov(rng, size);
+        // Tight checkpoint spacing exercises the snapshot section hard.
+        let index = ScreenIndex::from_dense_with_options(&s, 0.0, Some(2));
+        let bytes = index.to_artifact_bytes().expect("serialize");
+
+        let art = ArtifactIndex::from_bytes(bytes.clone()).expect("zero-copy load");
+        let mat = ScreenIndex::from_artifact_bytes(&bytes).expect("materializing load");
+        if mat.to_artifact_bytes().expect("re-serialize") != bytes {
+            return CaseResult::Fail("materialized copy re-serializes differently".into());
+        }
+
+        let top = index.max_magnitude();
+        for probe in 0..8 {
+            // λ spans [0, 1.1·max]: below, between, and above every group.
+            let lambda = uniform_f64(rng) * 1.1 * top.max(1e-3);
+            let want = index.partition_at(lambda);
+            if !art.partition_at(lambda).equals(&want) {
+                return CaseResult::Fail(format!("zero-copy partition diverged (probe {probe})"));
+            }
+            if !mat.partition_at(lambda).equals(&want) {
+                return CaseResult::Fail(format!("materialized partition diverged (probe {probe})"));
+            }
+            let same_counts = art.edge_count(lambda) == index.edge_count(lambda)
+                && art.n_components_at(lambda) == index.n_components_at(lambda)
+                && art.max_component_size_at(lambda) == index.max_component_size_at(lambda)
+                && art.component_edge_counts(lambda, &want)
+                    == index.component_edge_counts(lambda, &want)
+                && art.tie_group_of(lambda) == index.tie_group_of(lambda);
+            if !same_counts {
+                return CaseResult::Fail(format!("summary query diverged at λ={lambda}"));
+            }
+        }
+        for cap in 1..=size {
+            if art.lambda_for_capacity(cap) != index.lambda_for_capacity(cap) {
+                return CaseResult::Fail(format!("lambda_for_capacity({cap}) diverged"));
+            }
+        }
+        let mut art_sweep = art.sweep();
+        let mut idx_sweep = index.sweep();
+        let mut lams: Vec<f64> = (0..6).map(|_| uniform_f64(rng) * 1.1 * top.max(1e-3)).collect();
+        lams.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        for lambda in lams {
+            art_sweep.advance_to(lambda);
+            idx_sweep.advance_to(lambda);
+            let same = art_sweep.n_components() == idx_sweep.n_components()
+                && art_sweep.histogram() == idx_sweep.histogram();
+            if !same {
+                return CaseResult::Fail(format!("sweep diverged at λ={lambda}"));
+            }
+        }
+        CaseResult::Pass
+    });
+}
+
+#[test]
+fn stream_and_dense_artifacts_agree_on_partitions() {
+    let mut rng = Xoshiro256::seed_from_u64(0x57E4);
+    let x = Mat::from_fn(41, 23, |_, _| rng.gaussian());
+    let s = sample_correlation(&x);
+    let mut z = x.clone();
+    standardize_columns(&mut z);
+
+    let floor = 0.15;
+    let dense = ScreenIndex::from_dense_above(&s, floor);
+    let stream = ScreenIndex::from_standardized(&z, floor, 7);
+
+    let d_bytes = dense.to_artifact_bytes().unwrap();
+    let s_bytes = stream.to_artifact_bytes().unwrap();
+    let d_art = ArtifactIndex::from_bytes(d_bytes).unwrap();
+    let s_art = ArtifactIndex::from_bytes(s_bytes).unwrap();
+
+    // Stream weights match dense to ~1e-10 but not bitwise, so probe at
+    // tie-group midpoints separated from any magnitude by a wide margin.
+    let mags = dense.distinct_magnitudes();
+    let mut probes = vec![floor];
+    for w in mags.windows(2) {
+        if (w[0] - w[1]).abs() > 1e-6 {
+            probes.push((w[0] + w[1]) / 2.0);
+        }
+    }
+    assert!(probes.len() > 2, "degenerate instance: no separated tie groups");
+    for &lambda in &probes {
+        assert!(
+            s_art.partition_at(lambda).equals(&d_art.partition_at(lambda)),
+            "stream- and dense-built artifacts disagree at λ={lambda}"
+        );
+        assert_eq!(s_art.edge_count(lambda), d_art.edge_count(lambda), "λ={lambda}");
+    }
+}
+
+#[test]
+fn save_load_roundtrip_via_file() {
+    let mut rng = Xoshiro256::seed_from_u64(0xF11E);
+    let s = tied_cov(&mut rng, 14);
+    let index = ScreenIndex::from_dense(&s);
+
+    let dir = std::env::temp_dir().join(format!("covthresh_artifact_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.cvx");
+
+    let n_bytes = index.save_to(&path).unwrap();
+    assert_eq!(n_bytes as usize, std::fs::read(&path).unwrap().len());
+
+    let art = ArtifactIndex::load(&path).unwrap();
+    assert_eq!(art.n_bytes() as u64, n_bytes);
+    let mat = ScreenIndex::load(&path).unwrap();
+    let lambda = 0.5 * index.max_magnitude();
+    assert!(art.partition_at(lambda).equals(&index.partition_at(lambda)));
+    assert!(mat.partition_at(lambda).equals(&index.partition_at(lambda)));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn missing_file_is_a_typed_file_error() {
+    let path = std::env::temp_dir().join("covthresh_no_such_artifact.cvx");
+    match ArtifactIndex::load(&path) {
+        Err(CovthreshError::Artifact(ae)) => assert_eq!(ae.section, ArtifactSection::File),
+        other => panic!("expected a typed file error, got {other:?}"),
+    }
+}
+
+// ---- adversarial corpus --------------------------------------------------
+
+/// A small real artifact for the corruption corpus.
+fn corpus_bytes() -> Vec<u8> {
+    let mut rng = Xoshiro256::seed_from_u64(0xC0B);
+    let s = tied_cov(&mut rng, 9);
+    // Spacing 2 keeps several checkpoints in the file.
+    ScreenIndex::from_dense_with_options(&s, 0.0, Some(2)).to_artifact_bytes().unwrap()
+}
+
+fn load_err(bytes: &[u8]) -> Option<ArtifactError> {
+    match ArtifactIndex::from_bytes(bytes.to_vec()) {
+        Ok(_) => None,
+        Err(CovthreshError::Artifact(ae)) => Some(ae),
+        Err(other) => panic!("artifact load failed with a non-artifact error: {other:?}"),
+    }
+}
+
+#[test]
+fn every_truncation_is_rejected() {
+    let bytes = corpus_bytes();
+    assert!(load_err(&bytes).is_none(), "pristine corpus must load");
+    for len in 0..bytes.len() {
+        let ae = load_err(&bytes[..len])
+            .unwrap_or_else(|| panic!("truncation to {len} bytes loaded successfully"));
+        assert!(!ae.message.is_empty(), "len={len}");
+    }
+    // One extra byte is also structural corruption, attributed to the file.
+    let mut long = bytes.clone();
+    long.push(0);
+    let ae = load_err(&long).expect("trailing byte must not load");
+    assert_eq!(ae.section, ArtifactSection::File);
+}
+
+#[test]
+fn every_single_byte_flip_is_rejected_with_its_section() {
+    let bytes = corpus_bytes();
+
+    // Recompute the frame layout from the documented format: fixed header,
+    // then four `tag | u64 len | payload | crc` frames. Flips inside a
+    // payload or its CRC must name that section; frame overhead (tag and
+    // length words) may surface as several structural errors, so those
+    // bytes only require *some* typed artifact error.
+    let sections = [
+        ArtifactSection::EdgeList,
+        ArtifactSection::TieGroups,
+        ArtifactSection::Checkpoints,
+        ArtifactSection::ComponentCounts,
+    ];
+    let mut expected: Vec<Option<ArtifactSection>> = vec![None; bytes.len()];
+    for slot in expected.iter_mut().take(68) {
+        *slot = Some(ArtifactSection::Header);
+    }
+    let mut off = 68usize;
+    for &section in &sections {
+        let len = u64::from_le_bytes(bytes[off + 4..off + 12].try_into().unwrap()) as usize;
+        let payload = off + 12;
+        for slot in expected.iter_mut().take(payload + len + 4).skip(payload) {
+            *slot = Some(section);
+        }
+        off = payload + len + 4;
+    }
+    assert_eq!(off, bytes.len(), "frame walk must cover the whole artifact");
+
+    for pos in 0..bytes.len() {
+        let mut corrupt = bytes.clone();
+        corrupt[pos] ^= 0xA5;
+        let ae = load_err(&corrupt)
+            .unwrap_or_else(|| panic!("flipping byte {pos} loaded successfully"));
+        if let Some(section) = expected[pos] {
+            assert_eq!(
+                ae.section, section,
+                "byte {pos}: expected the {} to be blamed, got '{ae}'",
+                section.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn magic_version_and_endianness_skew_name_the_header() {
+    let bytes = corpus_bytes();
+
+    let mut wrong_magic = bytes.clone();
+    wrong_magic[0..8].copy_from_slice(b"NOTCOVTH");
+    let ae = load_err(&wrong_magic).expect("wrong magic must not load");
+    assert_eq!(ae.section, ArtifactSection::Header);
+    assert!(ae.message.contains("magic"), "{ae}");
+
+    // A future format version must be rejected outright, not half-parsed.
+    let mut v2 = bytes.clone();
+    v2[8..12].copy_from_slice(&2u32.to_le_bytes());
+    let ae = load_err(&v2).expect("version skew must not load");
+    assert_eq!(ae.section, ArtifactSection::Header);
+    assert!(ae.message.contains("version"), "{ae}");
+
+    let mut be = bytes;
+    be[12..16].copy_from_slice(&0x4D3C_2B1Au32.to_le_bytes());
+    let ae = load_err(&be).expect("endianness skew must not load");
+    assert_eq!(ae.section, ArtifactSection::Header);
+    assert!(ae.message.contains("endian"), "{ae}");
+}

@@ -124,6 +124,25 @@ fn prints_are_confined_to_the_cli_and_tools() {
 }
 
 #[test]
+fn inventory_registers_the_artifact_metric_family() {
+    // The artifact subsystem records under `screen.artifact.*`; a rename
+    // there must be mirrored in obs/names.rs or the metric-names rule
+    // would reject the recording sites.
+    let inv = inventory();
+    for name in [
+        "screen.artifact.save",
+        "screen.artifact.load",
+        "screen.artifact.saves",
+        "screen.artifact.loads",
+        "screen.artifact.bytes",
+        "screen.artifact.save_secs",
+        "screen.artifact.load_secs",
+    ] {
+        assert!(inv.contains(name), "{name} missing from the obs/names.rs registry");
+    }
+}
+
+#[test]
 fn lint_allow_with_reason_suppresses() {
     let fs = lint("rust/src/screen/fixture.rs", include_str!("fixtures/allowed.rs"));
     assert!(fs.is_empty(), "justified allow must suppress: {fs:?}");
